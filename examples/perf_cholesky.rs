@@ -1,0 +1,19 @@
+//! §Perf microbench: the master-solve Cholesky factorization.
+use pemsvm::linalg::{cholesky_in_place, Mat};
+use pemsvm::rng::Pcg64;
+fn main() {
+    for k in [256usize, 512, 800, 1024] {
+        let mut g = Pcg64::new(1);
+        let mut b = Mat::zeros(k, 2 * k);
+        for v in b.data.iter_mut() { *v = g.next_f32() - 0.5; }
+        let mut a = Mat::zeros(k, k);
+        for i in 0..k { for j in 0..=i { a[(i,j)] = pemsvm::linalg::dot(b.row(i), b.row(j)); a[(j,i)] = a[(i,j)]; } }
+        a.add_scaled_eye(1.0);
+        let reps = 3;
+        let mut copies: Vec<Mat> = (0..reps).map(|_| a.clone()).collect();
+        let t0 = std::time::Instant::now();
+        for c in copies.iter_mut() { cholesky_in_place(c).unwrap(); }
+        let t = t0.elapsed().as_secs_f64() / reps as f64;
+        println!("K={k:<5} {:.4}s  {:.2} GFLOP/s", t, (k as f64).powi(3)/3.0 / t / 1e9);
+    }
+}

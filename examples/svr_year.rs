@@ -1,0 +1,42 @@
+//! SVR on a YearPredictionMSD-like regression problem — the paper's
+//! §5.10 experiment: LIN-EM-SVR vs the liblinear-style SVR baseline.
+//!
+//!   cargo run --release --example svr_year
+
+use pemsvm::baselines::svr_dcd;
+use pemsvm::config::TrainConfig;
+use pemsvm::data::synth;
+use pemsvm::model::rmse;
+
+fn main() -> anyhow::Result<()> {
+    // year: N=250k higher for bench; example keeps it laptop-fast
+    let ds = synth::year_like(50_000, 90, 0);
+    let (tr, te) = synth::split(&ds, 5);
+    println!("year-like: N={} K={} (paper: 250k x 90)", tr.n, tr.k);
+    let eps = 0.3; // paper §5.10 sets epsilon = 0.3
+
+    // LIN-EM-SVR, parallel
+    let mut cfg = TrainConfig::default().with_options("LIN-EM-SVR")?;
+    cfg.lambda = 0.01;
+    cfg.eps_insensitive = eps;
+    cfg.workers = 8;
+    cfg.max_iters = 60;
+    let t0 = std::time::Instant::now();
+    let out = pemsvm::coordinator::train(&tr, &cfg)?;
+    let t_pem = t0.elapsed().as_secs_f64();
+    let rmse_pem = rmse(&te, out.weights.single());
+
+    // LL-Dual-style SVR baseline (single thread)
+    let t0 = std::time::Instant::now();
+    let w_dcd = svr_dcd::train(
+        &tr,
+        &svr_dcd::SvrDcdCfg { lambda: 0.01, eps_insensitive: eps, ..Default::default() },
+    );
+    let t_dcd = t0.elapsed().as_secs_f64();
+    let rmse_dcd = rmse(&te, &w_dcd);
+
+    println!("solver         cores  train     test-RMSE");
+    println!("LIN-EM-SVR     {:>5}  {:>7.2}s  {rmse_pem:.3}", cfg.workers, t_pem);
+    println!("SVR-DCD (LL)   {:>5}  {:>7.2}s  {rmse_dcd:.3}", 1, t_dcd);
+    Ok(())
+}

@@ -1,0 +1,166 @@
+"""AOT-lower every L2 graph to an HLO-text artifact + manifest.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (what the `xla` 0.1.6 rust crate links) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Shape families (DESIGN.md §3): features padded to K in {16, 64, 256,
+1024}, CHUNK = 512 rows per worker-step call, M = 10 classes for the
+Crammer-Singer steps.  KRN reuses the lin_step artifacts with K := N.
+
+Usage:  python -m compile.aot [--out-dir ../artifacts] [--only lin_em]
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+K_FAMILY = (16, 64, 256, 1024)
+CHUNK = 512
+M_CLASSES = 10
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def to_hlo_text(fn, specs):
+    lowered = jax.jit(fn).lower(*specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def artifact_specs():
+    """Yield (name, fn, arg_specs, meta) for every artifact."""
+    for k in K_FAMILY:
+        x, y, mask, w, eps = f32(CHUNK, k), f32(CHUNK), f32(CHUNK), f32(k), f32(1)
+        u, z = f32(CHUNK), f32(CHUNK)
+        meta = {"k": k, "chunk": CHUNK, "m": 0}
+
+        yield (
+            f"lin_em_step_k{k}",
+            model.lin_step_em,
+            (x, y, mask, w, eps),
+            {**meta, "kind": "lin_step", "variant": "em", "num_outputs": 4},
+        )
+        yield (
+            f"lin_mc_step_k{k}",
+            model.lin_step_mc,
+            (x, y, mask, w, eps, u, z),
+            {**meta, "kind": "lin_step", "variant": "mc", "num_outputs": 4},
+        )
+        # ablation twin of lin_em_step: XLA-native dot instead of the
+        # Pallas kernel (DESIGN.md ablations; Table 9 bench)
+        yield (
+            f"lin_em_step_jnp_k{k}",
+            model.lin_step_em_jnp,
+            (x, y, mask, w, eps),
+            {**meta, "kind": "lin_step_jnp", "variant": "em", "num_outputs": 4},
+        )
+        yield (
+            f"svr_em_step_k{k}",
+            model.svr_step_em,
+            (x, y, mask, w, eps, f32(1)),
+            {**meta, "kind": "svr_step", "variant": "em", "num_outputs": 4},
+        )
+        yield (
+            f"svr_mc_step_k{k}",
+            model.svr_step_mc,
+            (x, y, mask, w, eps, f32(1), u, z, u, z),
+            {**meta, "kind": "svr_step", "variant": "mc", "num_outputs": 4},
+        )
+
+        m = M_CLASSES
+        yhot, w_all, yidx = f32(CHUNK, m), f32(m, k), i32(1)
+        mmeta = {**meta, "m": m}
+        yield (
+            f"mlt_em_step_k{k}_m{m}",
+            model.mlt_step_em,
+            (x, yhot, mask, w_all, yidx, eps),
+            {**mmeta, "kind": "mlt_step", "variant": "em", "num_outputs": 4},
+        )
+        yield (
+            f"mlt_mc_step_k{k}_m{m}",
+            model.mlt_step_mc,
+            (x, yhot, mask, w_all, yidx, eps, u, z),
+            {**mmeta, "kind": "mlt_step", "variant": "mc", "num_outputs": 4},
+        )
+
+        s_sum, m_sum, reg, lam, zk = f32(k, k), f32(k), f32(k, k), f32(1), f32(k)
+        yield (
+            f"solve_em_k{k}",
+            model.master_solve_em,
+            (s_sum, m_sum, reg, lam),
+            {**meta, "kind": "solve", "variant": "em", "num_outputs": 1},
+        )
+        yield (
+            f"solve_mc_k{k}",
+            model.master_solve_mc,
+            (s_sum, m_sum, reg, lam, zk),
+            {**meta, "kind": "solve", "variant": "mc", "num_outputs": 1},
+        )
+
+        yield (
+            f"predict_k{k}",
+            model.predict,
+            (x, w),
+            {**meta, "kind": "predict", "variant": "em", "num_outputs": 1},
+        )
+        yield (
+            f"predict_mlt_k{k}_m{m}",
+            model.predict_mlt,
+            (x, w_all),
+            {**mmeta, "kind": "predict_mlt", "variant": "em", "num_outputs": 1},
+        )
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--only", default=None, help="substring filter on artifact names")
+    args = ap.parse_args()
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = {"chunk": CHUNK, "k_family": list(K_FAMILY), "m_classes": M_CLASSES, "artifacts": []}
+    for name, fn, specs, meta in artifact_specs():
+        if args.only and args.only not in name:
+            continue
+        text = to_hlo_text(fn, specs)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        entry = {
+            "name": name,
+            "file": fname,
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+            "inputs": [
+                {"shape": list(s.shape), "dtype": str(s.dtype)} for s in specs
+            ],
+            **meta,
+        }
+        manifest["artifacts"].append(entry)
+        print(f"  {name:28s} {len(text):>9d} chars")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(manifest['artifacts'])} artifacts to {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

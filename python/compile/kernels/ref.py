@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel in this
+package has a reference here, and pytest asserts allclose between the
+two over a hypothesis-driven sweep of shapes.
+"""
+
+import jax.numpy as jnp
+
+
+def weighted_gram_ref(x, a):
+    """S = X^T diag(a) X.
+
+    x: [N, K] float, a: [N] float (per-row weights, 0 for masked rows).
+    Returns [K, K].
+    """
+    return (x * a[:, None]).T @ x
+
+
+def weighted_stats_ref(x, a, b):
+    """Fused local statistics of the paper's Eq. (40).
+
+    S = X^T diag(a) X     (the Sigma^p partial)
+    m = X^T b             (the mu^p partial)
+    """
+    return (x * a[:, None]).T @ x, x.T @ b
+
+
+def inv_gauss_ref(mu, u, z):
+    """Michael-Schucany-Haas inverse-Gaussian sampler, IG(mu, lam=1).
+
+    mu: [N] mean, u: [N] uniforms in (0,1), z: [N] standard normals.
+    Returns [N] samples. Vectorized transformation method; the Rust
+    `rng::invgauss` implements the same math so the native and XLA
+    backends agree per seed (to f32 tolerance).
+    """
+    y = z * z
+    x = mu + 0.5 * mu * mu * y - 0.5 * mu * jnp.sqrt(4.0 * mu * y + (mu * y) ** 2)
+    x = jnp.maximum(x, 1e-30)  # guard fp cancellation for tiny mu*y
+    return jnp.where(u <= mu / (mu + x), x, mu * mu / x)

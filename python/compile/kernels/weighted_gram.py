@@ -1,0 +1,105 @@
+"""L1 Pallas kernel: fused weighted-Gram local statistics.
+
+The paper's rate-limiting step (§5.14) is
+
+    Sigma^p = sum_d (1/gamma_d) x_d x_d^T  =  X^T diag(a) X
+    mu^p    = sum_d b_d x_d                =  X^T b
+
+Its GPU implementation partitions rows over OpenCL compute units with
+per-unit local-memory accumulators and a second reduce kernel.  On TPU
+the outer-product sum *is* a matmul, so we tile it for the MXU instead
+(DESIGN.md §Hardware-Adaptation):
+
+  grid = (K/bk, K/bk, N/bn); step (i, j, n) contracts the row-block n of
+  (diag(a) X) restricted to feature-block i against the row-block n of X
+  restricted to feature-block j, accumulating into the (i, j) output
+  tile resident in VMEM.  The n-axis is the innermost grid dimension, so
+  each output tile is initialized once (@pl.when n == 0) and revisited —
+  Pallas's analogue of the paper's two-stage GPU reduction, minus the
+  second kernel.
+
+`mu^p` is fused: the j == 0 column of the grid additionally contracts
+x-block-i against b, amortizing the X reload the paper's separate
+matvec pass would pay.
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; real-TPU numbers are estimated analytically in DESIGN.md.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_N = 256
+DEFAULT_BLOCK_K = 128
+
+
+def _stats_kernel(x_i_ref, x_j_ref, a_ref, b_ref, s_ref, m_ref):
+    """One (i, j, n) grid step. See module docstring for the schedule."""
+    n = pl.program_id(2)
+    j = pl.program_id(1)
+
+    x_i = x_i_ref[...]  # [bn, bk] rows of X, feature block i
+    x_j = x_j_ref[...]  # [bn, bk] rows of X, feature block j
+    a = a_ref[...]  # [bn]    per-row weights (0 => masked row)
+
+    @pl.when(n == 0)
+    def _init_s():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    # (a * x_i)^T @ x_j : contraction over the bn row axis feeds the MXU
+    # with a [bk, bn] x [bn, bk] tile product (f32 accumulate).
+    s_ref[...] += jnp.dot(
+        (x_i * a[:, None]).T, x_j, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(jnp.logical_and(n == 0, j == 0))
+    def _init_m():
+        m_ref[...] = jnp.zeros_like(m_ref)
+
+    @pl.when(j == 0)
+    def _acc_m():
+        m_ref[...] += x_i.T @ b_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_k"))
+def weighted_stats(x, a, b, *, block_n=DEFAULT_BLOCK_N, block_k=DEFAULT_BLOCK_K):
+    """Fused (Sigma^p, mu^p) = (X^T diag(a) X, X^T b).
+
+    x: [N, K] f32, a: [N] f32, b: [N] f32 with N % bn == 0, K % bk == 0
+    (the AOT artifact family guarantees this; callers pad).
+    Returns ([K, K], [K]).
+    """
+    n_rows, k = x.shape
+    bn = min(block_n, n_rows)
+    bk = min(block_k, k)
+    if n_rows % bn or k % bk:
+        raise ValueError(f"shape ({n_rows},{k}) not divisible by blocks ({bn},{bk})")
+    grid = (k // bk, k // bk, n_rows // bn)
+    return pl.pallas_call(
+        _stats_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bk), lambda i, j, n: (n, i)),  # x_i
+            pl.BlockSpec((bn, bk), lambda i, j, n: (n, j)),  # x_j
+            pl.BlockSpec((bn,), lambda i, j, n: (n,)),  # a
+            pl.BlockSpec((bn,), lambda i, j, n: (n,)),  # b
+        ],
+        out_specs=[
+            pl.BlockSpec((bk, bk), lambda i, j, n: (i, j)),  # S
+            pl.BlockSpec((bk,), lambda i, j, n: (i,)),  # m
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, k), jnp.float32),
+            jax.ShapeDtypeStruct((k,), jnp.float32),
+        ],
+        interpret=True,
+    )(x, x, a, b)  # x passed twice: once per feature-block view (i and j)
+
+
+def weighted_gram(x, a, **kw):
+    """S = X^T diag(a) X via the fused kernel (b = 0)."""
+    s, _ = weighted_stats(x, a, jnp.zeros(x.shape[0], x.dtype), **kw)
+    return s

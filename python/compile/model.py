@@ -1,0 +1,255 @@
+"""L2: the per-iteration compute graphs of the data-augmentation SVM.
+
+Every function here is a pure jax function over fixed-shape f32 arrays,
+AOT-lowered by `aot.py` to one HLO-text artifact per shape family and
+executed from Rust through PJRT. Together they implement the paper's
+Eqs. (4)-(10) (linear binary), (24)-(28) (SVR), (36)-(39)
+(Crammer-Singer), and the map-reduce split of §4.1:
+
+  worker step  : gamma update (EM argmax / MC inverse-Gaussian draw)
+                 + local statistics (Sigma^p, mu^p)  + local objective
+  master solve : Sigma^-1 = lam*R + sum_p Sigma^p ;  EM w = Sigma b,
+                 MC w ~ N(Sigma b, Sigma)
+
+Conventions shared with the Rust side (runtime/ and backend/xla.rs):
+  * CHUNK rows per call; `mask` is 1.0 for real rows, 0.0 for padding.
+  * scalars travel as shape-[1] f32 (or i32) arrays — the `xla` crate's
+    `Literal::vec1` covers those without a scalar-literal code path.
+  * MC randomness (uniforms/normals) is *injected* by the Rust PCG64
+    streams so runs are deterministic per (seed, worker) for both
+    backends.
+  * all functions return tuples; aot lowers with return_tuple=True.
+
+The kernel SVM (KRN) variant reuses the linear step graphs verbatim
+with x := rows of the Gram matrix and w := the dual vector omega
+(problem (15) has the same hinge structure), and the master solve with
+R := Gram instead of I.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.ref import inv_gauss_ref
+from .kernels.weighted_gram import weighted_stats
+
+
+def _margin_stats(x, y, mask, w):
+    """Shared pieces of the binary hinge steps."""
+    scores = x @ w
+    margin = 1.0 - y * scores  # 1 - y w.x  (paper's 1 - y_d w^T x_d)
+    hinge = jnp.maximum(margin, 0.0)
+    obj = jnp.sum(hinge * mask, keepdims=True)
+    err = jnp.sum(mask * (y * scores <= 0.0), keepdims=True)
+    return margin, obj, err
+
+
+def lin_step_em(x, y, mask, w, eps):
+    """EM E-step + local stats, linear binary SVM (Eqs. 9, 40).
+
+    gamma_d = max(|1 - y_d w.x_d|, eps)   (§5.7.3 clamping)
+    a_d = 1/gamma_d, b_d = y_d (1 + 1/gamma_d)
+    """
+    margin, obj, err = _margin_stats(x, y, mask, w)
+    inv_g = mask / jnp.maximum(jnp.abs(margin), eps[0])
+    a = inv_g
+    b = y * (mask + inv_g)
+    s, m = weighted_stats(x, a, b)
+    return s, m, obj, err
+
+
+def lin_step_em_jnp(x, y, mask, w, eps):
+    """Ablation variant of `lin_step_em`: identical math but the local
+    statistics go through XLA's own fused dot (`weighted_stats_ref`)
+    instead of the Pallas kernel. Used by the Table-9 bench to separate
+    "offload to an accelerator graph" from "the Pallas MXU tiling" —
+    on the CPU PJRT backend the interpret-mode Pallas grid becomes a
+    while-loop, so this is the fair CPU baseline for it.
+    """
+    from .kernels.ref import weighted_stats_ref
+
+    margin, obj, err = _margin_stats(x, y, mask, w)
+    inv_g = mask / jnp.maximum(jnp.abs(margin), eps[0])
+    a = inv_g
+    b = y * (mask + inv_g)
+    s, m = weighted_stats_ref(x, a, b)
+    return s, m, obj, err
+
+
+def lin_step_mc(x, y, mask, w, eps, u, z):
+    """Gibbs draw of gamma^-1 ~ IG(|1 - y w.x|^-1, 1) + local stats (Eq. 5)."""
+    margin, obj, err = _margin_stats(x, y, mask, w)
+    mu_ig = 1.0 / jnp.maximum(jnp.abs(margin), eps[0])
+    inv_g = inv_gauss_ref(mu_ig, u, z)
+    inv_g = jnp.minimum(inv_g, 1.0 / eps[0])  # clamp gamma >= eps
+    a = mask * inv_g
+    b = y * (mask + a)
+    s, m = weighted_stats(x, a, b)
+    return s, m, obj, err
+
+
+def svr_step_em(x, y, mask, w, eps, eps_ins):
+    """EM step for epsilon-insensitive SVR (Eqs. 25-28).
+
+    gamma_d = |y - w.x - eps_ins|, omega_d = |y - w.x + eps_ins|
+    a_d = 1/gamma + 1/omega, b_d = (y - eps_ins)/gamma + (y + eps_ins)/omega
+    """
+    r = y - x @ w
+    loss = jnp.sum(mask * jnp.maximum(jnp.abs(r) - eps_ins[0], 0.0), keepdims=True)
+    sq = jnp.sum(mask * r * r, keepdims=True)  # for RMSE reporting
+    inv_g = mask / jnp.maximum(jnp.abs(r - eps_ins[0]), eps[0])
+    inv_o = mask / jnp.maximum(jnp.abs(r + eps_ins[0]), eps[0])
+    a = inv_g + inv_o
+    b = (y - eps_ins[0]) * inv_g + (y + eps_ins[0]) * inv_o
+    s, m = weighted_stats(x, a, b)
+    return s, m, loss, sq
+
+
+def svr_step_mc(x, y, mask, w, eps, eps_ins, u1, z1, u2, z2):
+    """Gibbs draws for the double scale mixture (Lemma 3, Eqs. 25-26)."""
+    r = y - x @ w
+    loss = jnp.sum(mask * jnp.maximum(jnp.abs(r) - eps_ins[0], 0.0), keepdims=True)
+    sq = jnp.sum(mask * r * r, keepdims=True)
+    cap = 1.0 / eps[0]
+    mu_g = 1.0 / jnp.maximum(jnp.abs(r - eps_ins[0]), eps[0])
+    mu_o = 1.0 / jnp.maximum(jnp.abs(r + eps_ins[0]), eps[0])
+    inv_g = mask * jnp.minimum(inv_gauss_ref(mu_g, u1, z1), cap)
+    inv_o = mask * jnp.minimum(inv_gauss_ref(mu_o, u2, z2), cap)
+    a = inv_g + inv_o
+    b = (y - eps_ins[0]) * inv_g + (y + eps_ins[0]) * inv_o
+    s, m = weighted_stats(x, a, b)
+    return s, m, loss, sq
+
+
+def _mlt_common(x, yhot, mask, w_all, yidx):
+    """Shared pieces of the Crammer-Singer per-class step (§3.3).
+
+    scores[d, y'] = w_y'.x_d ; aug = scores + Delta (0/1 cost);
+    zeta_d(y)  = max_{y' != y} aug[d, y']
+    rho_d^y    = zeta_d(y) - Delta_d(y)
+    beta_d^y   = +1 if y == y_d else -1
+    """
+    m_cls = w_all.shape[0]
+    scores = x @ w_all.T  # [CHUNK, M]
+    delta = 1.0 - yhot  # Delta_d(y') with 0/1 cost
+    aug = scores + delta
+    is_y = (jnp.arange(m_cls) == yidx[0]).astype(x.dtype)  # one-hot of target class
+    neg_inf = jnp.float32(-1e30)
+    zeta = jnp.max(jnp.where(is_y[None, :] > 0, neg_inf, aug), axis=1)
+    delta_y = 1.0 - (yhot @ is_y)  # Delta_d(y) for the target class
+    rho = zeta - delta_y
+    beta = 2.0 * (yhot @ is_y) - 1.0
+    w_y = is_y @ w_all  # row yidx of W without gather
+    margin = rho - x @ w_y
+    # CS loss / errors at the current W (identical for every target class;
+    # the driver reads them from the class-0 call only).
+    loss = jnp.sum(mask * (jnp.max(aug, axis=1) - jnp.sum(yhot * scores, axis=1)), keepdims=True)
+    err = jnp.sum(
+        mask * (jnp.argmax(scores, axis=1) != jnp.argmax(yhot, axis=1)), keepdims=True
+    )
+    return rho, beta, margin, loss, err
+
+
+def mlt_step_em(x, yhot, mask, w_all, yidx, eps):
+    """EM step for class block w_y of the Crammer-Singer model (Eqs. 38-39)."""
+    rho, beta, margin, loss, err = _mlt_common(x, yhot, mask, w_all, yidx)
+    inv_g = mask / jnp.maximum(jnp.abs(margin), eps[0])
+    a = inv_g
+    b = mask * (rho * inv_g + beta)
+    s, m = weighted_stats(x, a, b)
+    return s, m, loss, err
+
+
+def mlt_step_mc(x, yhot, mask, w_all, yidx, eps, u, z):
+    """Gibbs draw of gamma_{yd}^-1 ~ IG(|rho - w_y.x|^-1, 1) (Eq. 36)."""
+    rho, beta, margin, loss, err = _mlt_common(x, yhot, mask, w_all, yidx)
+    mu_ig = 1.0 / jnp.maximum(jnp.abs(margin), eps[0])
+    inv_g = mask * jnp.minimum(inv_gauss_ref(mu_ig, u, z), 1.0 / eps[0])
+    a = inv_g
+    b = mask * (rho * inv_g + beta)
+    s, m = weighted_stats(x, a, b)
+    return s, m, loss, err
+
+
+# --- pure-HLO dense solves -------------------------------------------------
+#
+# jnp.linalg.cholesky / scipy cho_solve lower to LAPACK *custom-calls* with
+# the typed-FFI API, which the xla_extension 0.5.1 the rust `xla` crate
+# links cannot compile ("Unknown custom-call API version ... TYPED_FFI").
+# The master solve therefore carries its own loop-based factorization that
+# lowers to plain HLO (while/dynamic-slice/dot), same O(K^3)/O(K^2) costs.
+
+
+def cholesky_hlo(a):
+    """Lower Cholesky factor of SPD `a` via a fori_loop of rank-1 column
+    updates — emits only core HLO ops."""
+    k = a.shape[0]
+    idx = jnp.arange(k)
+
+    def body(j, l):
+        row_j = jnp.take(l, j, axis=0)  # row j of the partial factor
+        col = jnp.take(a, j, axis=1) - l @ row_j
+        d = jnp.sqrt(jnp.maximum(jnp.take(col, j), 1e-30))
+        newcol = jnp.where(idx == j, d, jnp.where(idx > j, col / d, 0.0))
+        return l.at[:, j].set(newcol)
+
+    return jax.lax.fori_loop(0, k, body, jnp.zeros_like(a))
+
+
+def solve_lower_hlo(l, b):
+    """y with L y = b (forward substitution, masked-dot loop)."""
+    k = l.shape[0]
+    idx = jnp.arange(k)
+
+    def body(i, y):
+        row = jnp.take(l, i, axis=0)
+        s = jnp.sum(jnp.where(idx < i, row * y, 0.0))
+        return y.at[i].set((jnp.take(b, i) - s) / jnp.take(row, i))
+
+    return jax.lax.fori_loop(0, k, body, jnp.zeros_like(b))
+
+
+def solve_upper_hlo(l, b):
+    """x with L^T x = b (back substitution over columns of L)."""
+    k = l.shape[0]
+    idx = jnp.arange(k)
+
+    def body(t, x):
+        i = k - 1 - t
+        col = jnp.take(l, i, axis=1)
+        s = jnp.sum(jnp.where(idx > i, col * x, 0.0))
+        return x.at[i].set((jnp.take(b, i) - s) / jnp.take(col, i))
+
+    return jax.lax.fori_loop(0, k, body, jnp.zeros_like(b))
+
+
+def master_solve_em(s_sum, m_sum, reg, lam):
+    """w = (lam*R + sum_p Sigma^p)^-1 (sum_p mu^p)  — Eq. (6) M-step."""
+    a = lam[0] * reg + s_sum
+    a = 0.5 * (a + a.T)  # symmetrize fp drift from the tree reduce
+    l_fac = cholesky_hlo(a)
+    w = solve_upper_hlo(l_fac, solve_lower_hlo(l_fac, m_sum))
+    return (w,)
+
+
+def master_solve_mc(s_sum, m_sum, reg, lam, z):
+    """Posterior draw w ~ N(mu, Sigma), Sigma^-1 = lam*R + sum Sigma^p = L L^T.
+
+    mu = Sigma b via Cholesky; the sample adds L^-T z with z ~ N(0, I),
+    since Cov[L^-T z] = L^-T L^-1 = (L L^T)^-1 = Sigma.
+    """
+    a = lam[0] * reg + s_sum
+    a = 0.5 * (a + a.T)
+    l_fac = cholesky_hlo(a)
+    mu = solve_upper_hlo(l_fac, solve_lower_hlo(l_fac, m_sum))
+    w = mu + solve_upper_hlo(l_fac, z)
+    return (w,)
+
+
+def predict(x, w):
+    """Binary / SVR scores for a chunk."""
+    return (x @ w,)
+
+
+def predict_mlt(x, w_all):
+    """Crammer-Singer class scores for a chunk."""
+    return (x @ w_all.T,)

@@ -1,0 +1,62 @@
+"""Artifact/manifest integrity: what aot.py wrote is what runtime/ expects."""
+
+import json
+import os
+
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_family_complete(manifest):
+    names = {a["name"] for a in manifest["artifacts"]}
+    for k in manifest["k_family"]:
+        for base in ("lin_em_step", "lin_mc_step", "svr_em_step", "svr_mc_step",
+                     "solve_em", "solve_mc", "predict"):
+            assert f"{base}_k{k}" in names, f"missing {base}_k{k}"
+        m = manifest["m_classes"]
+        for base in ("mlt_em_step", "mlt_mc_step", "predict_mlt"):
+            assert f"{base}_k{k}_m{m}" in names
+
+
+def test_files_exist_and_are_hlo(manifest):
+    for a in manifest["artifacts"]:
+        p = os.path.join(ART, a["file"])
+        assert os.path.exists(p), a["file"]
+        head = open(p).read(200)
+        assert "HloModule" in head, f"{a['file']} is not HLO text"
+
+
+def test_step_shapes_consistent(manifest):
+    for a in manifest["artifacts"]:
+        k, chunk = a["k"], a["chunk"]
+        shapes = [tuple(i["shape"]) for i in a["inputs"]]
+        if a["kind"] in ("lin_step", "svr_step"):
+            assert shapes[0] == (chunk, k)  # x
+            assert shapes[1] == (chunk,)  # y
+            assert shapes[2] == (chunk,)  # mask
+            assert shapes[3] == (k,)  # w
+        if a["kind"] == "mlt_step":
+            assert shapes[0] == (chunk, k)
+            assert shapes[1] == (chunk, a["m"])
+            assert shapes[3] == (a["m"], k)
+        if a["kind"] == "solve":
+            assert shapes[0] == (k, k) and shapes[2] == (k, k)
+
+
+def test_mc_variants_take_randomness(manifest):
+    for a in manifest["artifacts"]:
+        if a["kind"] == "lin_step":
+            n_in = len(a["inputs"])
+            assert n_in == (7 if a["variant"] == "mc" else 5)
+        if a["kind"] == "svr_step":
+            assert len(a["inputs"]) == (10 if a["variant"] == "mc" else 6)

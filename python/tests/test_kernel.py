@@ -1,0 +1,91 @@
+"""L1 correctness: the Pallas weighted-stats kernel vs the jnp oracle.
+
+hypothesis sweeps shapes (and block shapes) under the divisibility
+contract the AOT shape family guarantees; assert_allclose at f32
+tolerances scaled by the contraction length.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import weighted_gram_ref, weighted_stats_ref
+from compile.kernels.weighted_gram import weighted_gram, weighted_stats
+
+# shapes satisfying N % min(block_n, N) == 0, K % min(block_k, K) == 0
+NS = [32, 64, 128, 256, 512, 768]
+KS = [1, 3, 8, 16, 33, 64, 100, 128, 256, 384]
+
+
+def _rand(rng, n, k):
+    x = rng.standard_normal((n, k)).astype(np.float32)
+    a = rng.uniform(0.0, 5.0, n).astype(np.float32)
+    b = rng.standard_normal(n).astype(np.float32)
+    return jnp.asarray(x), jnp.asarray(a), jnp.asarray(b)
+
+
+def _tol(n):
+    # f32 accumulation error grows ~sqrt(N) * eps * |summand|
+    return dict(rtol=3e-4, atol=3e-3 * np.sqrt(n / 256.0))
+
+
+@settings(max_examples=40, deadline=None)
+@given(n=st.sampled_from(NS), k=st.sampled_from(KS), seed=st.integers(0, 2**31 - 1))
+def test_weighted_stats_matches_ref(n, k, seed):
+    x, a, b = _rand(np.random.default_rng(seed), n, k)
+    s, m = weighted_stats(x, a, b)
+    sr, mr = weighted_stats_ref(x, a, b)
+    np.testing.assert_allclose(s, sr, **_tol(n))
+    np.testing.assert_allclose(m, mr, **_tol(n))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.sampled_from([256, 512]),
+    k=st.sampled_from([64, 128, 256]),
+    bn=st.sampled_from([64, 128, 256]),
+    bk=st.sampled_from([32, 64, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_block_shape_invariance(n, k, bn, bk, seed):
+    """Any legal (bn, bk) tiling computes the same statistics."""
+    x, a, b = _rand(np.random.default_rng(seed), n, k)
+    s, m = weighted_stats(x, a, b, block_n=bn, block_k=bk)
+    sr, mr = weighted_stats_ref(x, a, b)
+    np.testing.assert_allclose(s, sr, **_tol(n))
+    np.testing.assert_allclose(m, mr, **_tol(n))
+
+
+def test_masked_rows_contribute_nothing():
+    rng = np.random.default_rng(7)
+    x, a, b = _rand(rng, 512, 64)
+    mask = np.ones(512, np.float32)
+    mask[300:] = 0.0
+    s, m = weighted_stats(x, jnp.asarray(a * mask), jnp.asarray(b * np.asarray(mask)))
+    sr, mr = weighted_stats_ref(x[:300], a[:300], b[:300])
+    np.testing.assert_allclose(s, sr, **_tol(512))
+    np.testing.assert_allclose(m, mr, **_tol(512))
+
+
+def test_gram_is_symmetric_psd():
+    rng = np.random.default_rng(11)
+    x, a, _ = _rand(rng, 256, 32)
+    s = np.asarray(weighted_gram(x, a))
+    np.testing.assert_allclose(s, s.T, rtol=1e-5, atol=1e-5)
+    w = np.linalg.eigvalsh(s.astype(np.float64))
+    assert w.min() > -1e-3
+
+
+def test_indivisible_shape_rejected():
+    with pytest.raises(ValueError):
+        weighted_stats(
+            jnp.zeros((300, 64)), jnp.zeros(300), jnp.zeros(300), block_n=256
+        )
+
+
+def test_zero_weights_give_zero():
+    x = jnp.asarray(np.random.default_rng(3).standard_normal((256, 16)), jnp.float32)
+    s, m = weighted_stats(x, jnp.zeros(256), jnp.zeros(256))
+    assert float(jnp.abs(s).max()) == 0.0
+    assert float(jnp.abs(m).max()) == 0.0

@@ -1,0 +1,85 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!   A. reduce topology: flat vs tree (Table 1's log P term)
+//!   B. gamma clamp epsilon (§5.7.3 "treatment of singular gamma")
+//!   C. MC burn-in (§5.13)
+//!   D. low-rank KRN rank sweep (the paper's §4.3 open question,
+//!      implemented in solver::lowrank)
+
+use pemsvm::benchutil::{header, pair_merge_secs, scaled, time};
+use pemsvm::config::{KernelCfg, TrainConfig};
+use pemsvm::data::{synth, Dataset, Task};
+
+fn main() {
+    header("Ablations", "reduce topology / gamma clamp / burn-in / low-rank KRN");
+
+    // A. reduce topology -------------------------------------------------
+    println!("\nA. reduce: measured pair-merge and modeled round counts, K=512");
+    let pm = pair_merge_secs(512);
+    println!("   pair-merge(512) = {:.3} ms", pm * 1e3);
+    for p in [8usize, 48, 480] {
+        let flat = (p - 1) as f64 * pm;
+        let tree = (p as f64).log2().ceil() * pm;
+        println!("   P={p:>4}: flat {:.2} ms  tree {:.2} ms  ({:.1}x)", flat * 1e3, tree * 1e3, flat / tree);
+    }
+
+    // B. gamma clamp ------------------------------------------------------
+    println!("\nB. gamma clamp eps (LIN-EM-CLS, alpha N=20k K=64): accuracy & iters");
+    let ds = synth::alpha_like(scaled(20_000, 4_000), 64, 0);
+    let (tr, te) = synth::split(&ds, 5);
+    for eps in [1e-2f32, 1e-3, 1e-5, 1e-8] {
+        let mut cfg = TrainConfig::default().with_options("LIN-EM-CLS").unwrap();
+        cfg.eps_clamp = eps;
+        cfg.workers = 4;
+        cfg.max_iters = 80;
+        let (t, out) = time(|| pemsvm::coordinator::train(&tr, &cfg).unwrap());
+        let acc = pemsvm::model::evaluate(&te, &out.weights);
+        println!(
+            "   eps={eps:<8.0e} iters={:<3} J={:<12.1} test-acc={acc:.4}  ({t:.2}s)",
+            out.iterations, out.objective
+        );
+    }
+
+    // C. MC burn-in --------------------------------------------------------
+    println!("\nC. MC burn-in (LIN-MC-CLS, 60 iters): final test accuracy");
+    for burn in [0usize, 5, 10, 20] {
+        let mut cfg = TrainConfig::default().with_options("LIN-MC-CLS").unwrap();
+        cfg.burn_in = burn;
+        cfg.workers = 4;
+        cfg.max_iters = 60;
+        cfg.tol = 0.0;
+        let out = pemsvm::coordinator::train(&tr, &cfg).unwrap();
+        let acc = pemsvm::model::evaluate(&te, &out.weights);
+        println!("   burn-in={burn:<3} test-acc={acc:.4}");
+    }
+
+    // D. low-rank KRN -------------------------------------------------------
+    println!("\nD. low-rank sampling KRN (paper §4.3 open question): rank sweep, rings N=600");
+    let mut g = pemsvm::rng::Pcg64::new(7);
+    let n = 600;
+    let mut data = Vec::new();
+    let mut labels = Vec::new();
+    for _ in 0..n {
+        let y: f32 = if g.next_f64() < 0.5 { 1.0 } else { -1.0 };
+        let r = if y > 0.0 { 0.5 } else { 1.6 };
+        let th = g.next_f64() * std::f64::consts::TAU;
+        data.push(r * th.cos() as f32 + 0.05 * (g.next_f32() - 0.5));
+        data.push(r * th.sin() as f32 + 0.05 * (g.next_f32() - 0.5));
+        labels.push(y);
+    }
+    let rings = Dataset::dense(data, labels, 2, Task::Binary);
+    let mut cfg = TrainConfig::default().with_options("KRN-EM-CLS").unwrap();
+    cfg.lambda = 1e-2;
+    cfg.kernel = KernelCfg::Gaussian { sigma: 0.5 };
+    cfg.workers = 4;
+    cfg.max_iters = 30;
+
+    let (t_exact, out) = time(|| pemsvm::coordinator::train(&rings, &cfg).unwrap());
+    let acc_exact = out.kernel_model.as_ref().unwrap().accuracy(&rings);
+    println!("   exact KRN (N x N): acc={acc_exact:.4}  ({t_exact:.2}s)");
+    for rank in [10usize, 25, 50, 100] {
+        let (t, (model, _)) =
+            time(|| pemsvm::solver::lowrank::train_lowrank_krn(&rings, &cfg, Some(rank)).unwrap());
+        println!("   rank={rank:<4} acc={:.4}  ({t:.2}s)", model.accuracy(&rings));
+    }
+    println!("   (sqrt(N) = {:.0}; PSVM's budget)", (n as f64).sqrt());
+}

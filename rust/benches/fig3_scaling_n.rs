@@ -1,0 +1,50 @@
+//! Figure 3: effect of N on training time (alpha dataset), all solvers
+//! single-threaded. Paper: LIN-CLS linear in N and much better than
+//! PSVM (whose sqrt(N)-rank factorization makes it ~N^2); liblinear and
+//! Pegasos also linear.
+
+use pemsvm::baselines::{dcd, pegasos, psvm_lite};
+use pemsvm::benchutil::{header, loglog_slope, scaled, time};
+use pemsvm::config::TrainConfig;
+use pemsvm::data::synth;
+
+fn main() {
+    header("Figure 3", "training time vs N, alpha dataset (single-threaded)");
+    let k = 100usize;
+    let ns: Vec<usize> = [5_000, 10_000, 20_000, 40_000, 80_000]
+        .iter()
+        .map(|&n| scaled(n, 1_000))
+        .collect();
+    println!("K={k}; fixed 10 EM iterations / solver-native stopping");
+    println!("   {:>8} {:>11} {:>11} {:>11} {:>11}", "N", "LIN-EM-CLS", "PSVM", "LL-Dual", "Pegasos");
+
+    let mut t_lin = Vec::new();
+    let mut t_psvm = Vec::new();
+    let mut t_dcd = Vec::new();
+    let mut t_peg = Vec::new();
+    for &n in &ns {
+        let ds = synth::alpha_like(n, k, 0);
+        let mut cfg = TrainConfig::default().with_options("LIN-EM-CLS").unwrap();
+        cfg.workers = 1;
+        cfg.max_iters = 10;
+        cfg.tol = 0.0;
+        let (a, _) = time(|| pemsvm::coordinator::train(&ds, &cfg).unwrap());
+        let (b, _) = time(|| psvm_lite::train(&ds, &psvm_lite::PsvmLiteCfg { pg_iters: 50, ..Default::default() }));
+        let (c, _) = time(|| dcd::train(&ds, &dcd::DcdCfg { max_epochs: 20, ..Default::default() }));
+        let (d, _) = time(|| pegasos::train(&ds, &pegasos::PegasosCfg { epochs: 10, ..Default::default() }));
+        println!("   {:>8} {:>10.2}s {:>10.2}s {:>10.2}s {:>10.2}s", n, a, b, c, d);
+        t_lin.push(a);
+        t_psvm.push(b);
+        t_dcd.push(c);
+        t_peg.push(d);
+    }
+    let nsf: Vec<f64> = ns.iter().map(|&n| n as f64).collect();
+    println!("\n   scaling exponents (log-log slope vs N; paper: LIN/LL/Pegasos ~1, PSVM >1):");
+    println!(
+        "   LIN-EM-CLS {:.2}   PSVM {:.2}   LL-Dual {:.2}   Pegasos {:.2}",
+        loglog_slope(&nsf, &t_lin),
+        loglog_slope(&nsf, &t_psvm),
+        loglog_slope(&nsf, &t_dcd),
+        loglog_slope(&nsf, &t_peg)
+    );
+}

@@ -1,0 +1,46 @@
+//! Figure 4: effect of K on training time (alpha dataset), all solvers
+//! single-threaded. Paper: LIN-CLS quadratic in K (dense K x K stats),
+//! liblinear/Pegasos linear in K; PSVM hit hard by the high N.
+
+use pemsvm::baselines::{dcd, pegasos, psvm_lite};
+use pemsvm::benchutil::{header, loglog_slope, scaled, time};
+use pemsvm::config::TrainConfig;
+use pemsvm::data::synth;
+
+fn main() {
+    header("Figure 4", "training time vs K, alpha dataset (single-threaded)");
+    let n = scaled(20_000, 4_000);
+    let ks = [25usize, 50, 100, 200, 400];
+    println!("N={n}; fixed 10 EM iterations / capped baseline epochs");
+    println!("   {:>6} {:>11} {:>11} {:>11} {:>11}", "K", "LIN-EM-CLS", "PSVM", "LL-Dual", "Pegasos");
+
+    let mut t_lin = Vec::new();
+    let mut t_psvm = Vec::new();
+    let mut t_dcd = Vec::new();
+    let mut t_peg = Vec::new();
+    for &k in &ks {
+        let ds = synth::alpha_like(n, k, 0);
+        let mut cfg = TrainConfig::default().with_options("LIN-EM-CLS").unwrap();
+        cfg.workers = 1;
+        cfg.max_iters = 10;
+        cfg.tol = 0.0;
+        let (a, _) = time(|| pemsvm::coordinator::train(&ds, &cfg).unwrap());
+        let (b, _) = time(|| psvm_lite::train(&ds, &psvm_lite::PsvmLiteCfg { pg_iters: 50, ..Default::default() }));
+        let (c, _) = time(|| dcd::train(&ds, &dcd::DcdCfg { max_epochs: 20, ..Default::default() }));
+        let (d, _) = time(|| pegasos::train(&ds, &pegasos::PegasosCfg { epochs: 10, ..Default::default() }));
+        println!("   {:>6} {:>10.2}s {:>10.2}s {:>10.2}s {:>10.2}s", k, a, b, c, d);
+        t_lin.push(a);
+        t_psvm.push(b);
+        t_dcd.push(c);
+        t_peg.push(d);
+    }
+    let ksf: Vec<f64> = ks.iter().map(|&k| k as f64).collect();
+    println!("\n   scaling exponents (log-log slope vs K; paper: LIN ~2, LL/Pegasos ~1):");
+    println!(
+        "   LIN-EM-CLS {:.2}   PSVM {:.2}   LL-Dual {:.2}   Pegasos {:.2}",
+        loglog_slope(&ksf, &t_lin),
+        loglog_slope(&ksf, &t_psvm),
+        loglog_slope(&ksf, &t_dcd),
+        loglog_slope(&ksf, &t_peg)
+    );
+}

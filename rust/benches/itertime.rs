@@ -1,0 +1,101 @@
+//! Tables 1 & 2: empirical per-phase iteration times vs the paper's
+//! asymptotic analysis.
+//!
+//! LIN (Table 1): local stats O(N K^2 / P), reduce O(K^2 log P),
+//! draw mu O(K^3) [the paper writes K^2 log K for its solver; ours is a
+//! Cholesky], broadcast O(K^2 log P).
+//! KRN (Table 2): same with K := N.
+//!
+//! We sweep one variable at a time and report the measured log-log
+//! exponent of each phase next to the asymptotic prediction.
+
+use pemsvm::benchutil::{header, loglog_slope, scaled};
+use pemsvm::config::TrainConfig;
+use pemsvm::data::synth;
+use pemsvm::metrics::Phase;
+
+fn phases_for(ds: &pemsvm::data::Dataset, p: usize, iters: usize) -> (f64, f64, f64) {
+    let mut cfg = TrainConfig::default().with_options("LIN-EM-CLS").unwrap();
+    cfg.workers = p;
+    cfg.simulate_cluster = true;
+    cfg.max_iters = iters;
+    cfg.tol = 0.0;
+    let out = pemsvm::coordinator::train(ds, &cfg).unwrap();
+    let m = &out.metrics;
+    (
+        m.total(Phase::LocalStats).as_secs_f64() / iters as f64,
+        m.total(Phase::Reduce).as_secs_f64() / iters as f64,
+        m.total(Phase::DrawMu).as_secs_f64() / iters as f64,
+    )
+}
+
+fn main() {
+    header("Tables 1+2", "empirical per-phase iteration time vs asymptotics");
+    let iters = 5;
+
+    // --- sweep N (LIN: stats ~ N, others flat) -------------------------
+    println!("\n-- sweep N (K=100, P=4)");
+    println!("   {:>8} {:>12} {:>12} {:>12}", "N", "stats/iter", "reduce/iter", "solve/iter");
+    let ns: Vec<usize> = [10_000, 20_000, 40_000, 80_000].iter().map(|&n| scaled(n, 2_000)).collect();
+    let mut stats_t = Vec::new();
+    for &n in &ns {
+        let ds = synth::alpha_like(n, 100, 0);
+        let (s, r, m) = phases_for(&ds, 4, iters);
+        println!("   {:>8} {:>11.4}s {:>11.4}s {:>11.4}s", n, s, r, m);
+        stats_t.push(s);
+    }
+    let nsf: Vec<f64> = ns.iter().map(|&x| x as f64).collect();
+    println!("   stats exponent vs N: {:.2} (paper: 1.0)", loglog_slope(&nsf, &stats_t));
+
+    // --- sweep K (stats ~ K^2, solve ~ K^3) ----------------------------
+    println!("\n-- sweep K (N={}, P=4)", scaled(20_000, 4_000));
+    println!("   {:>8} {:>12} {:>12} {:>12}", "K", "stats/iter", "reduce/iter", "solve/iter");
+    let ks = [50usize, 100, 200, 400];
+    let n = scaled(20_000, 4_000);
+    let (mut st, mut rt, mut mt) = (Vec::new(), Vec::new(), Vec::new());
+    for &k in &ks {
+        let ds = synth::alpha_like(n, k, 0);
+        let (s, r, m) = phases_for(&ds, 4, iters);
+        println!("   {:>8} {:>11.4}s {:>11.4}s {:>11.4}s", k, s, r, m);
+        st.push(s);
+        rt.push(r);
+        mt.push(m);
+    }
+    let ksf: Vec<f64> = ks.iter().map(|&x| x as f64).collect();
+    println!(
+        "   exponents vs K: stats {:.2} (paper 2.0), reduce {:.2} (paper 2.0), solve {:.2} (Cholesky 3.0)",
+        loglog_slope(&ksf, &st),
+        loglog_slope(&ksf, &rt),
+        loglog_slope(&ksf, &mt)
+    );
+
+    // --- sweep P (stats ~ 1/P) -----------------------------------------
+    println!("\n-- sweep P (N={}, K=100)", scaled(40_000, 8_000));
+    println!("   {:>8} {:>12} {:>12}", "P", "stats/iter", "reduce/iter");
+    let ps = [1usize, 2, 4, 8, 16, 32];
+    let n = scaled(40_000, 8_000);
+    let ds = synth::alpha_like(n, 100, 0);
+    let mut pst = Vec::new();
+    for &p in &ps {
+        let (s, r, _) = phases_for(&ds, p, iters);
+        println!("   {:>8} {:>11.4}s {:>11.4}s", p, s, r);
+        pst.push(s);
+    }
+    let psf: Vec<f64> = ps.iter().map(|&x| x as f64).collect();
+    println!("   stats exponent vs P: {:.2} (paper: -1.0)", loglog_slope(&psf, &pst));
+
+    // --- KRN: iteration time independent of K, cubic-ish in N ----------
+    println!("\n-- KRN sweep N (Table 2; gram features, solve dominates)");
+    println!("   {:>8} {:>12} {:>12}", "N", "stats/iter", "solve/iter");
+    let kns = [200usize, 400, 800];
+    let mut k_solve = Vec::new();
+    for &kn in &kns {
+        let ds = synth::news20_like(kn, 300, 0);
+        let (kds, _gram) = pemsvm::solver::gram_dataset(&ds, &pemsvm::config::KernelCfg::Gaussian { sigma: 1.0 });
+        let (s, _, m) = phases_for(&kds, 4, iters);
+        println!("   {:>8} {:>11.4}s {:>11.4}s", kn, s, m);
+        k_solve.push(m);
+    }
+    let knf: Vec<f64> = kns.iter().map(|&x| x as f64).collect();
+    println!("   KRN solve exponent vs N: {:.2} (paper: ~3)", loglog_slope(&knf, &k_solve));
+}

@@ -1,0 +1,29 @@
+//! §Perf microbench: the native Sigma^p accumulation
+//! (rank_update_dense), the single hottest loop of the native backend.
+//! Prints GFLOP/s at several K so the EXPERIMENTS.md §Perf log has a
+//! stable number to track across optimization iterations.
+
+use pemsvm::benchutil::time;
+use pemsvm::linalg::{rank_update_dense, Mat};
+use pemsvm::rng::Pcg64;
+
+fn main() {
+    println!("rank_update_dense GFLOP/s (lower-triangle FLOPs = N*K*(K+1)/2 mul-adds x2)");
+    for k in [64usize, 128, 256, 512, 800] {
+        let n = (40_000_000 / (k * k)).max(64); // ~40 MFLOP-ish per rep
+        let mut g = Pcg64::new(1);
+        let x: Vec<f32> = (0..n * k).map(|_| g.next_f32() - 0.5).collect();
+        let a: Vec<f32> = (0..n).map(|_| g.next_f32() + 0.1).collect();
+        let mut s = Mat::zeros(k, k);
+        // warm
+        rank_update_dense(&mut s, &x, n, k, &a);
+        let reps = 5;
+        let (t, _) = time(|| {
+            for _ in 0..reps {
+                rank_update_dense(&mut s, &x, n, k, &a);
+            }
+        });
+        let flops = reps as f64 * n as f64 * (k * (k + 1)) as f64; // x2 mul-add /2 triangle
+        println!("  K={k:<4} N={n:<7} {:>7.2} GFLOP/s   ({:.3}s)", flops / t / 1e9, t);
+    }
+}

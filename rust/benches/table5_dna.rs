@@ -1,0 +1,82 @@
+//! Table 5: LIN-EM-CLS vs the solver roster on the dna dataset.
+//!
+//! Paper: dna N = 2.5M / 25M rows, K = 800, sparse. Scaled for one box:
+//! N = 100k ("subset") and 400k ("full") by default (SCALE multiplies).
+//! PEMSVM rows use the cluster cost model for P = 48 / 480 (§DESIGN 6).
+
+use pemsvm::baselines::{cutting_plane, dcd, pegasos, primal_newton, stream_dcd};
+use pemsvm::benchutil::{header, modeled_sim_secs, scaled, time};
+use pemsvm::config::TrainConfig;
+use pemsvm::data::synth;
+use pemsvm::model::accuracy_cls;
+
+fn pem_row(tr: &pemsvm::data::Dataset, te: &pemsvm::data::Dataset, p: usize) -> (f64, f64) {
+    let mut cfg = TrainConfig::default().with_options("LIN-EM-CLS").unwrap();
+    cfg.workers = p;
+    cfg.simulate_cluster = true;
+    cfg.max_iters = 60;
+    let out = pemsvm::coordinator::train(tr, &cfg).unwrap();
+    (modeled_sim_secs(&out, p, tr.k), accuracy_cls(te, out.weights.single()) * 100.0)
+}
+
+fn run_subset(n: usize, k: usize, full: bool) {
+    let ds = synth::dna_like(n + n / 5, k, 0);
+    let (tr, te) = synth::split(&ds, 6);
+    println!(
+        "\n-- {} training subset: N={} K={} density={:.4}",
+        if full { "full" } else { "N-subset" },
+        tr.n,
+        tr.k,
+        tr.density()
+    );
+    println!("   {:<16} {:>5} {:>10} {:>8}", "Solver", "P", "Train", "Acc.%");
+
+    let lam = 1.0;
+    if !full {
+        // single-thread roster only on the subset (paper: they crash or
+        // take hours on the full set)
+        let (t, w) = time(|| {
+            pegasos::train(&tr, &pegasos::PegasosCfg { lambda: lam, epochs: 15, ..Default::default() })
+        });
+        println!("   {:<16} {:>5} {:>9.2}s {:>8.2}", "Pegasos", 1, t, accuracy_cls(&te, &w) * 100.0);
+
+        let (t, w) = time(|| {
+            stream_dcd::train(&tr, &stream_dcd::StreamDcdCfg { lambda: lam, selective: true, ..Default::default() })
+                .unwrap()
+        });
+        println!("   {:<16} {:>5} {:>9.2}s {:>8.2}", "SDB", 1, t, accuracy_cls(&te, &w) * 100.0);
+
+        let (t, w) = time(|| {
+            stream_dcd::train(&tr, &stream_dcd::StreamDcdCfg { lambda: lam, ..Default::default() }).unwrap()
+        });
+        println!("   {:<16} {:>5} {:>9.2}s {:>8.2}", "StreamSVM", 2, t, accuracy_cls(&te, &w) * 100.0);
+
+        let (t, w) = time(|| cutting_plane::train(&tr, &cutting_plane::CuttingPlaneCfg { lambda: lam, ..Default::default() }));
+        println!("   {:<16} {:>5} {:>9.2}s {:>8.2}", "SVMPerf", 1, t, accuracy_cls(&te, &w) * 100.0);
+
+        let (t, w) = time(|| primal_newton::train(&tr, &primal_newton::PrimalNewtonCfg { lambda: lam, ..Default::default() }));
+        println!("   {:<16} {:>5} {:>9.2}s {:>8.2}", "LL-Primal", 1, t, accuracy_cls(&te, &w) * 100.0);
+
+        let (t, out) = time(|| dcd::train(&tr, &dcd::DcdCfg { lambda: lam, ..Default::default() }));
+        println!("   {:<16} {:>5} {:>9.2}s {:>8.2}", "LL-Dual", 1, t, accuracy_cls(&te, &out.w) * 100.0);
+    } else {
+        let (t, out) = time(|| dcd::train(&tr, &dcd::DcdCfg { lambda: lam, ..Default::default() }));
+        println!("   {:<16} {:>5} {:>9.2}s {:>8.2}", "LL-Dual", 1, t, accuracy_cls(&te, &out.w) * 100.0);
+        let (t, w) = time(|| {
+            stream_dcd::train(&tr, &stream_dcd::StreamDcdCfg { lambda: lam, ..Default::default() }).unwrap()
+        });
+        println!("   {:<16} {:>5} {:>9.2}s {:>8.2}", "StreamSVM", 2, t, accuracy_cls(&te, &w) * 100.0);
+    }
+
+    for p in [48usize, 480] {
+        let (t, acc) = pem_row(&tr, &te, p);
+        println!("   {:<16} {:>5} {:>9.2}s {:>8.2}  (cluster cost model)", "LIN-EM-CLS", p, t, acc);
+    }
+}
+
+fn main() {
+    header("Table 5", "performance on dna dataset (dna-like synthetic)");
+    let k = 800;
+    run_subset(scaled(100_000, 5_000), k, false);
+    run_subset(scaled(400_000, 20_000), k, true);
+}

@@ -1,0 +1,97 @@
+//! Table 9: accelerating the Sigma evaluation
+//! `sum_d (1/gamma_d) x_d x_d^T` — the paper's GPU kernel experiment
+//! (N = 250k, K = 500; 512 GPU cores 23x, 2048 cores 50x vs 1 CPU core).
+//!
+//! Our accelerator is the XLA/PJRT graph (padded to K = 512): one row
+//! with the Pallas MXU-tiled kernel, one with XLA's native fused dot
+//! (the ablation twin). On this CPU-only box the comparison shows the
+//! *offload structure* — real-TPU speedups are estimated analytically
+//! in DESIGN.md §Hardware-Adaptation.
+
+use pemsvm::benchutil::{header, scaled, time};
+use pemsvm::data::synth;
+use pemsvm::linalg::Mat;
+use pemsvm::runtime::{global, literal_f32};
+
+fn main() {
+    header("Table 9", "using accelerator graphs to evaluate Sigma (N=250k, K=500)");
+    let n = scaled(250_000, 20_000);
+    let k = 500usize;
+    let ds = synth::alpha_like(n, k, 0);
+    // simulated gamma weights (paper uses simulated x, gamma too)
+    let mut g = pemsvm::rng::Pcg64::new(1);
+    let a: Vec<f32> = (0..n).map(|_| g.next_f32() * 2.0).collect();
+
+    // 1 CPU core, native rank update (the paper's baseline row)
+    let (t_cpu, _s) = time(|| {
+        let mut s = Mat::zeros(k, k);
+        if let pemsvm::data::Features::Dense { data } = &ds.features {
+            pemsvm::linalg::rank_update_dense(&mut s, data, n, k, &a);
+        }
+        pemsvm::linalg::symmetrize_from_lower(&mut s);
+        s
+    });
+
+    println!("   {:<28} {:>9} {:>15}", "Implementation", "Time", "Relative speed");
+    println!("   {:<28} {:>8.2}s {:>15.2}", "1 CPU core (native)", t_cpu, 1.0);
+
+    // XLA rows need artifacts
+    let Ok(rt) = global(std::path::Path::new("artifacts")) else {
+        println!("   (artifacts missing -- run `make artifacts` for the XLA rows)");
+        return;
+    };
+    let chunk = rt.chunk();
+    let pk = rt.pad_k(k).unwrap();
+    // upload chunks once (like loading GPU global memory), then time the
+    // pure execution pass; weights w=0 makes gamma=1/max(1,eps)=1 --
+    // we reuse the lin_em_step artifact as the Sigma evaluator.
+    let mut chunks = Vec::new();
+    let mut xbuf = vec![0f32; chunk * pk];
+    let mut ybuf = vec![0f32; chunk];
+    let mut mbuf = vec![0f32; chunk];
+    if let pemsvm::data::Features::Dense { data } = &ds.features {
+        let mut start = 0usize;
+        while start < n {
+            let rows = (n - start).min(chunk);
+            xbuf.fill(0.0);
+            ybuf.fill(0.0);
+            mbuf.fill(0.0);
+            for r in 0..rows {
+                xbuf[r * pk..r * pk + k].copy_from_slice(&data[(start + r) * k..(start + r + 1) * k]);
+                ybuf[r] = 1.0;
+                mbuf[r] = 1.0;
+            }
+            chunks.push((
+                literal_f32(&xbuf, &[chunk as i64, pk as i64]).unwrap(),
+                literal_f32(&ybuf, &[chunk as i64]).unwrap(),
+                literal_f32(&mbuf, &[chunk as i64]).unwrap(),
+            ));
+            start += rows;
+        }
+    }
+    let w = literal_f32(&vec![0f32; pk], &[pk as i64]).unwrap();
+    let eps = literal_f32(&[1e-5f32], &[1]).unwrap();
+
+    for (label, name) in [
+        ("XLA graph (Pallas kernel)", format!("lin_em_step_k{pk}")),
+        ("XLA graph (native dot)", format!("lin_em_step_jnp_k{pk}")),
+    ] {
+        // warm up / compile
+        let (x0, y0, m0) = &chunks[0];
+        rt.execute(&name, &[x0, y0, m0, &w, &eps]).unwrap();
+        let (t, _) = time(|| {
+            let mut acc = vec![0f32; pk * pk];
+            for (x, y, m) in &chunks {
+                let outs = rt.execute(&name, &[x, y, m, &w, &eps]).unwrap();
+                let s = pemsvm::runtime::to_vec_f32(&outs[0]).unwrap();
+                for (a, b) in acc.iter_mut().zip(&s) {
+                    *a += b;
+                }
+            }
+            acc
+        });
+        println!("   {:<28} {:>8.2}s {:>15.2}", label, t, t_cpu / t);
+    }
+    println!("\n   paper: 512 GPU cores 23x, 2048 GPU cores 50x (GTX590);");
+    println!("   TPU estimate for the Pallas schedule: DESIGN.md §Hardware-Adaptation");
+}

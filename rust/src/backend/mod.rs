@@ -1,0 +1,101 @@
+//! Compute backends: where the per-iteration flops run.
+//!
+//! * [`native`] — pure Rust, sparse-aware; the stand-in for the paper's
+//!   MPI CPU implementation (§5.7.1).
+//! * [`xla`] — executes the AOT-compiled HLO artifacts (Pallas kernel
+//!   inside) through PJRT; the stand-in for the paper's GPU
+//!   implementation (§5.7.2).
+//!
+//! Both expose the same two traits so the coordinator is backend-blind.
+
+pub mod native;
+pub mod xla;
+
+use std::ops::Range;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::config::{Algo, BackendKind, TrainConfig};
+use crate::data::Dataset;
+use crate::linalg::Mat;
+use crate::solver::PartialStats;
+
+/// What a worker should compute this step.
+#[derive(Clone, Debug)]
+pub enum StepInput {
+    /// binary hinge (also KRN: `w` = omega over gram-row features)
+    Binary { w: Arc<Vec<f32>> },
+    /// epsilon-insensitive SVR
+    Svr { w: Arc<Vec<f32>>, eps_ins: f32 },
+    /// Crammer-Singer block update for class `yidx`
+    Mlt { w_all: Arc<Mat>, yidx: usize },
+}
+
+/// A worker's compute engine over its shard.
+pub trait WorkerBackend: Send {
+    /// Full pass over the shard at the given weights: gamma update +
+    /// local statistics (Eq. 40) + local objective.
+    fn step(&mut self, input: &StepInput) -> Result<PartialStats>;
+
+    /// Feature dimensionality of the returned statistics.
+    fn stat_dim(&self) -> usize;
+}
+
+/// The master solve (Eq. 6): `w = (lam R + Sigma)^-1 b`, or the MC
+/// posterior draw when `mc_noise` is given.
+pub trait MasterBackend: Send {
+    fn solve(
+        &mut self,
+        stats: &mut PartialStats,
+        mc_noise: Option<&[f32]>,
+    ) -> Result<Vec<f32>>;
+}
+
+/// Build one worker backend per shard.
+pub fn make_workers(
+    cfg: &TrainConfig,
+    ds: &Arc<Dataset>,
+    shards: &[Range<usize>],
+) -> Result<Vec<Box<dyn WorkerBackend>>> {
+    let mut out: Vec<Box<dyn WorkerBackend>> = Vec::with_capacity(shards.len());
+    for (wid, r) in shards.iter().enumerate() {
+        match cfg.backend {
+            BackendKind::Native => out.push(Box::new(native::NativeWorker::new(
+                ds.clone(),
+                r.clone(),
+                cfg.algo,
+                cfg.eps_clamp,
+                cfg.seed,
+                wid as u64,
+            ))),
+            BackendKind::Xla => out.push(Box::new(xla::XlaWorker::new(
+                cfg,
+                ds,
+                r.clone(),
+                wid as u64,
+            )?)),
+        }
+    }
+    Ok(out)
+}
+
+/// Build the master backend. `gram` supplies the KRN regularizer.
+pub fn make_master(
+    cfg: &TrainConfig,
+    k: usize,
+    gram: Option<Arc<Mat>>,
+) -> Result<Box<dyn MasterBackend>> {
+    match cfg.backend {
+        BackendKind::Native => Ok(Box::new(native::NativeMaster::new(cfg.lambda, gram))),
+        BackendKind::Xla => Ok(Box::new(xla::XlaMaster::new(cfg, k, gram)?)),
+    }
+}
+
+/// Algo tag for artifact names.
+pub(crate) fn variant_str(algo: Algo) -> &'static str {
+    match algo {
+        Algo::Em => "em",
+        Algo::Mc => "mc",
+    }
+}

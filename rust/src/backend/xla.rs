@@ -1,0 +1,391 @@
+//! XLA backend: worker/master steps run the AOT HLO artifacts through
+//! PJRT — the re-targeted version of the paper's GPU implementation.
+//!
+//! Shapes are static, so shards are cut into CHUNK-row pieces (mask = 0
+//! padding on the tail) and features are zero-padded to the artifact
+//! family's next K. Statistics are kept at the padded width `pk` all the
+//! way through the solve (padding solves to w_pad = 0 exactly); the
+//! coordinator truncates the final weights.
+//!
+//! Each worker uploads its chunk literals once at construction — the
+//! analogue of the paper loading partitions into GPU memory — and per
+//! step only the weight vector (plus MC randomness) moves.
+
+use std::ops::Range;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::config::{Algo, TaskKind, TrainConfig};
+use crate::data::Dataset;
+use crate::linalg::Mat;
+use crate::rng::{worker_stream, NormalSource, Pcg64};
+use crate::runtime::{literal_f32, to_vec_f32, Manifest, Runtime};
+use crate::solver::PartialStats;
+
+use super::{variant_str, MasterBackend, StepInput, WorkerBackend};
+
+/// Per-chunk uploaded data.
+struct ChunkLits {
+    x: xla::Literal,
+    /// y for CLS/SVR; one-hot for MLT
+    y: xla::Literal,
+    mask: xla::Literal,
+}
+
+// SAFETY: literals are only touched from the owning worker's thread;
+// actual device calls go through the runtime mutex.
+unsafe impl Send for ChunkLits {}
+
+pub struct XlaWorker {
+    rt: &'static Runtime,
+    chunks: Vec<ChunkLits>,
+    task: TaskKind,
+    algo: Algo,
+    eps: f32,
+    use_pallas: bool,
+    /// padded feature width
+    pk: usize,
+    chunk: usize,
+    m: usize,
+    rng: Pcg64,
+    normals: NormalSource,
+}
+
+impl XlaWorker {
+    pub fn new(cfg: &TrainConfig, ds: &Arc<Dataset>, range: Range<usize>, wid: u64) -> Result<Self> {
+        let rt = crate::runtime::global(std::path::Path::new(&cfg.artifacts_dir))?;
+        let pk = rt.pad_k(ds.k)?;
+        let chunk = rt.chunk();
+        let m = rt.manifest.m_classes;
+        if cfg.task == TaskKind::Mlt && cfg.num_classes > m {
+            bail!("artifacts built for M={m} classes, need {}", cfg.num_classes);
+        }
+
+        let mut chunks = Vec::new();
+        let mut x = vec![0f32; chunk * pk];
+        let mut y = vec![0f32; chunk];
+        let mut yhot = vec![0f32; chunk * m];
+        let mut mask = vec![0f32; chunk];
+        let mut start = range.start;
+        while start < range.end {
+            let rows = (range.end - start).min(chunk);
+            x.fill(0.0);
+            y.fill(0.0);
+            yhot.fill(0.0);
+            mask.fill(0.0);
+            for r in 0..rows {
+                let d = start + r;
+                ds.for_nonzero(d, |j, v| x[r * pk + j as usize] = v);
+                y[r] = ds.labels[d];
+                if cfg.task == TaskKind::Mlt {
+                    yhot[r * m + ds.labels[d] as usize] = 1.0;
+                }
+                mask[r] = 1.0;
+            }
+            let y_lit = if cfg.task == TaskKind::Mlt {
+                literal_f32(&yhot, &[chunk as i64, m as i64])?
+            } else {
+                literal_f32(&y, &[chunk as i64])?
+            };
+            chunks.push(ChunkLits {
+                x: literal_f32(&x, &[chunk as i64, pk as i64])?,
+                y: y_lit,
+                mask: literal_f32(&mask, &[chunk as i64])?,
+            });
+            start += rows;
+        }
+
+        Ok(XlaWorker {
+            rt,
+            chunks,
+            task: cfg.task,
+            algo: cfg.algo,
+            eps: cfg.eps_clamp,
+            use_pallas: cfg.xla_use_pallas,
+            pk,
+            chunk,
+            m,
+            rng: worker_stream(cfg.seed, wid),
+            normals: NormalSource::new(),
+        })
+    }
+
+    fn rand_pair(&mut self) -> Result<(xla::Literal, xla::Literal)> {
+        let mut u = vec![0f32; self.chunk];
+        let mut z = vec![0f32; self.chunk];
+        for v in u.iter_mut() {
+            *v = self.rng.next_f32();
+        }
+        self.normals.fill_f32(&mut self.rng, &mut z);
+        Ok((literal_f32(&u, &[self.chunk as i64])?, literal_f32(&z, &[self.chunk as i64])?))
+    }
+
+    fn pad_w(&self, w: &[f32]) -> Vec<f32> {
+        let mut wp = vec![0f32; self.pk];
+        let n = w.len().min(self.pk);
+        wp[..n].copy_from_slice(&w[..n]);
+        wp
+    }
+}
+
+impl WorkerBackend for XlaWorker {
+    fn step(&mut self, input: &StepInput) -> Result<PartialStats> {
+        let pk = self.pk;
+        let variant = variant_str(self.algo);
+        let eps_lit = literal_f32(&[self.eps], &[1])?;
+        let is_mc = self.algo == Algo::Mc;
+
+        // step-invariant literals
+        let (name, w_lit, yidx_lit, eps_ins_lit) = match input {
+            StepInput::Binary { w } => (
+                // the jnp ablation twin exists for the EM variant only
+                if !self.use_pallas && self.algo == Algo::Em {
+                    Manifest::step_name("lin_step_jnp", variant, pk, 0)
+                } else {
+                    Manifest::step_name("lin_step", variant, pk, 0)
+                },
+                literal_f32(&self.pad_w(w), &[pk as i64])?,
+                None,
+                None,
+            ),
+            StepInput::Svr { w, eps_ins } => (
+                Manifest::step_name("svr_step", variant, pk, 0),
+                literal_f32(&self.pad_w(w), &[pk as i64])?,
+                None,
+                Some(literal_f32(&[*eps_ins], &[1])?),
+            ),
+            StepInput::Mlt { w_all, yidx } => {
+                let m = self.m;
+                let mut wp = vec![0f32; m * pk];
+                for c in 0..w_all.rows.min(m) {
+                    let row = w_all.row(c);
+                    let n = row.len().min(pk);
+                    wp[c * pk..c * pk + n].copy_from_slice(&row[..n]);
+                }
+                (
+                    Manifest::step_name("mlt_step", variant, pk, m),
+                    literal_f32(&wp, &[m as i64, pk as i64])?,
+                    Some(xla::Literal::vec1(&[*yidx as i32])),
+                    None,
+                )
+            }
+        };
+
+        let mut out = PartialStats::zeros(pk);
+        for ci in 0..self.chunks.len() {
+            // MC randomness is drawn before borrowing the chunk
+            let rand: Vec<xla::Literal> = if is_mc {
+                let n_pairs = if self.task == TaskKind::Svr { 2 } else { 1 };
+                let mut v = Vec::with_capacity(2 * n_pairs);
+                for _ in 0..n_pairs {
+                    let (u, z) = self.rand_pair()?;
+                    v.push(u);
+                    v.push(z);
+                }
+                v
+            } else {
+                Vec::new()
+            };
+
+            let c = &self.chunks[ci];
+            // artifact input order (see python/compile/aot.py)
+            let mut args: Vec<&xla::Literal> = vec![&c.x, &c.y, &c.mask, &w_lit];
+            if let Some(yi) = &yidx_lit {
+                args.push(yi); // mlt: (x, yhot, mask, w_all, yidx, eps)
+            }
+            args.push(&eps_lit);
+            if let Some(ei) = &eps_ins_lit {
+                args.push(ei); // svr: (x, y, mask, w, eps, eps_ins)
+            }
+            for r in &rand {
+                args.push(r);
+            }
+
+            let outs = self.rt.execute(&name, &args)?;
+            let sigma = to_vec_f32(&outs[0])?;
+            let mu = to_vec_f32(&outs[1])?;
+            let obj = to_vec_f32(&outs[2])?;
+            let aux = to_vec_f32(&outs[3])?;
+            for (acc, v) in out.sigma.data.iter_mut().zip(&sigma) {
+                *acc += v;
+            }
+            for (acc, v) in out.mu.iter_mut().zip(&mu) {
+                *acc += v;
+            }
+            out.obj += obj[0] as f64;
+            out.aux += aux[0] as f64;
+        }
+        Ok(out)
+    }
+
+    fn stat_dim(&self) -> usize {
+        self.pk
+    }
+}
+
+/// XLA master: the `solve_{em,mc}_k{pk}` artifact (Cholesky inside HLO).
+pub struct XlaMaster {
+    rt: &'static Runtime,
+    pk: usize,
+    lam: xla::Literal,
+    reg: xla::Literal,
+    algo: Algo,
+}
+
+// SAFETY: leader-thread-owned; device calls behind the runtime mutex.
+unsafe impl Send for XlaMaster {}
+
+impl XlaMaster {
+    /// `dim` is the (already padded) statistic width the workers report.
+    pub fn new(cfg: &TrainConfig, dim: usize, gram: Option<Arc<Mat>>) -> Result<Self> {
+        let rt = crate::runtime::global(std::path::Path::new(&cfg.artifacts_dir))?;
+        let pk = rt.pad_k(dim)?;
+        // regularizer, padded: Gram block + identity tail (keeps the
+        // padded solve SPD with w_pad = 0)
+        let mut reg = vec![0f32; pk * pk];
+        match &gram {
+            Some(g) => {
+                for i in 0..g.rows {
+                    for j in 0..g.cols {
+                        reg[i * pk + j] = g[(i, j)];
+                    }
+                }
+                for i in g.rows..pk {
+                    reg[i * pk + i] = 1.0;
+                }
+            }
+            None => {
+                for i in 0..pk {
+                    reg[i * pk + i] = 1.0;
+                }
+            }
+        }
+        Ok(XlaMaster {
+            rt,
+            pk,
+            lam: literal_f32(&[cfg.lambda], &[1])?,
+            reg: literal_f32(&reg, &[pk as i64, pk as i64])?,
+            algo: cfg.algo,
+        })
+    }
+}
+
+impl MasterBackend for XlaMaster {
+    fn solve(
+        &mut self,
+        stats: &mut PartialStats,
+        mc_noise: Option<&[f32]>,
+    ) -> Result<Vec<f32>> {
+        let pk = self.pk;
+        if stats.mu.len() != pk {
+            bail!("XlaMaster: stats dim {} != padded {}", stats.mu.len(), pk);
+        }
+        // XLA workers produce full symmetric sigma; native-worker stats
+        // are lower-triangular — mirror so both are valid inputs.
+        crate::linalg::symmetrize_from_lower(&mut stats.sigma);
+        let s_lit = literal_f32(&stats.sigma.data, &[pk as i64, pk as i64])?;
+        let m_lit = literal_f32(&stats.mu, &[pk as i64])?;
+        let outs = match (self.algo, mc_noise) {
+            (Algo::Mc, Some(z)) => {
+                let z_lit = literal_f32(z, &[pk as i64])?;
+                let args: Vec<&xla::Literal> = vec![&s_lit, &m_lit, &self.reg, &self.lam, &z_lit];
+                self.rt.execute(&format!("solve_mc_k{pk}"), &args)?
+            }
+            _ => {
+                let args: Vec<&xla::Literal> = vec![&s_lit, &m_lit, &self.reg, &self.lam];
+                self.rt.execute(&format!("solve_em_k{pk}"), &args)?
+            }
+        };
+        let w = to_vec_f32(&outs[0])?;
+        if w.len() != pk {
+            bail!("solve: expected {pk} weights, got {}", w.len());
+        }
+        Ok(w)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::native::{NativeMaster, NativeWorker};
+    use crate::data::synth;
+
+    fn have_artifacts() -> bool {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts/manifest.json")
+            .exists()
+    }
+
+    fn cfg() -> TrainConfig {
+        let mut c = TrainConfig::default();
+        c.artifacts_dir =
+            format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+        c
+    }
+
+    /// The XLA worker step must agree with the native step on the same
+    /// shard (truncated from the padded width), EM mode.
+    #[test]
+    fn xla_step_matches_native_em() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let ds = Arc::new(synth::alpha_like(700, 12, 3));
+        let w = Arc::new(vec![0.07f32; 12]);
+        let cfg = cfg();
+        let mut xw = XlaWorker::new(&cfg, &ds, 100..650, 0).unwrap();
+        let mut nw = NativeWorker::new(ds.clone(), 100..650, Algo::Em, cfg.eps_clamp, 0, 0);
+        let sx = xw.step(&StepInput::Binary { w: w.clone() }).unwrap();
+        let mut sn = nw.step(&StepInput::Binary { w: w.clone() }).unwrap();
+        crate::linalg::symmetrize_from_lower(&mut sn.sigma);
+        let pk = xw.stat_dim();
+        assert_eq!(pk, 16);
+        let mut max_diff = 0f32;
+        for i in 0..12 {
+            for j in 0..12 {
+                max_diff = max_diff.max((sx.sigma[(i, j)] - sn.sigma[(i, j)]).abs());
+            }
+            // padded region exactly zero
+            for j in 12..pk {
+                assert_eq!(sx.sigma[(i, j)], 0.0);
+            }
+        }
+        let scale = sn.sigma.data.iter().fold(0f32, |a, &b| a.max(b.abs()));
+        assert!(max_diff < 1e-4 * scale.max(1.0), "sigma diff {max_diff} scale {scale}");
+        for j in 0..12 {
+            assert!((sx.mu[j] - sn.mu[j]).abs() < 1e-3 * scale.max(1.0));
+        }
+        assert!((sx.obj - sn.obj).abs() < 1e-3 * sn.obj.abs().max(1.0));
+        assert_eq!(sx.aux, sn.aux);
+    }
+
+    /// XLA master solve == native master solve on the same stats.
+    #[test]
+    fn xla_solve_matches_native() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let ds = Arc::new(synth::alpha_like(600, 16, 4));
+        let w = Arc::new(vec![0f32; 16]);
+        let cfg = cfg();
+        let mut xw = XlaWorker::new(&cfg, &ds, 0..600, 0).unwrap();
+        let mut stats = xw.step(&StepInput::Binary { w }).unwrap();
+        let mut stats2 = stats.clone();
+
+        let mut xm = XlaMaster::new(&cfg, 16, None).unwrap();
+        let wx = xm.solve(&mut stats, None).unwrap();
+        let mut nm = NativeMaster::new(cfg.lambda, None);
+        let wn = nm.solve(&mut stats2, None).unwrap();
+        for j in 0..16 {
+            assert!(
+                (wx[j] - wn[j]).abs() < 1e-3 * (1.0 + wn[j].abs()),
+                "w[{j}] {} vs {}",
+                wx[j],
+                wn[j]
+            );
+        }
+    }
+}

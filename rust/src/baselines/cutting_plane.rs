@@ -1,0 +1,153 @@
+//! SVMPerf-lite (Joachims 2006): cutting-plane / bundle method on the
+//! primal. Each iteration linearizes the (scaled) hinge-loss sum at the
+//! current w into a plane `l(w) >= b_t + a_t . w`, then solves the
+//! master problem `min lam/2 ||w||^2 + max_t (b_t + a_t . w)` in its
+//! dual (a simplex QP over plane weights, Frank-Wolfe inner loop).
+//! Terminates when the primal-dual-ish gap between the true loss and
+//! the bundle lower bound closes.
+
+use crate::data::Dataset;
+
+pub struct CuttingPlaneCfg {
+    pub lambda: f32,
+    pub max_planes: usize,
+    /// relative gap tolerance (SVMPerf's epsilon)
+    pub gap_tol: f64,
+    pub fw_iters: usize,
+}
+
+impl Default for CuttingPlaneCfg {
+    fn default() -> Self {
+        CuttingPlaneCfg { lambda: 1.0, max_planes: 100, gap_tol: 1e-3, fw_iters: 200 }
+    }
+}
+
+/// loss(w) = 2 sum hinge, plus its subgradient plane at w.
+fn plane_at(ds: &Dataset, w: &[f32]) -> (f64, Vec<f32>, f64) {
+    let mut a = vec![0f32; ds.k];
+    let mut cnt = 0f64;
+    let mut loss = 0f64;
+    for d in 0..ds.n {
+        let y = ds.labels[d];
+        let margin = y * ds.dot_row(d, w);
+        if margin < 1.0 {
+            loss += 2.0 * (1.0 - margin) as f64;
+            cnt += 2.0;
+            ds.for_nonzero(d, |j, v| a[j as usize] -= 2.0 * y * v);
+        }
+    }
+    // loss(w') >= cnt + a . w' (exact at w)
+    (loss, a, cnt)
+}
+
+pub fn train(ds: &Dataset, cfg: &CuttingPlaneCfg) -> Vec<f32> {
+    let k = ds.k;
+    let lam = cfg.lambda as f64;
+    let mut w = vec![0f32; k];
+    let mut planes_a: Vec<Vec<f32>> = Vec::new();
+    let mut planes_b: Vec<f64> = Vec::new();
+    // theta: simplex weights over planes; w = -(1/lam) sum theta_t a_t
+    let mut theta: Vec<f64> = Vec::new();
+
+    for _ in 0..cfg.max_planes {
+        let (loss, a, b) = plane_at(ds, &w);
+        let primal = 0.5 * lam * crate::linalg::norm2_sq(&w) as f64 + loss;
+        // bundle value at w
+        let bundle = planes_a
+            .iter()
+            .zip(&planes_b)
+            .map(|(at, bt)| bt + crate::linalg::dot(at, &w) as f64)
+            .fold(0.0f64, f64::max); // max(0, .) since loss >= 0
+        let lower = 0.5 * lam * crate::linalg::norm2_sq(&w) as f64 + bundle;
+        if primal - lower <= cfg.gap_tol * primal.abs().max(1.0) && !planes_a.is_empty() {
+            break;
+        }
+        planes_a.push(a);
+        planes_b.push(b);
+        theta.push(0.0);
+        if theta.len() == 1 {
+            theta[0] = 1.0;
+        }
+
+        // master dual: max_theta sum theta_t b_t - 1/(2 lam) ||sum theta a||^2
+        // over the simplex, by Frank-Wolfe with exact line search.
+        let t = planes_a.len();
+        let mut v = vec![0f32; k]; // sum theta_t a_t
+        for (th, at) in theta.iter().zip(&planes_a) {
+            crate::linalg::axpy(*th as f32, at, &mut v);
+        }
+        for _ in 0..cfg.fw_iters {
+            // gradient over theta: g_t = b_t - (1/lam) a_t . v
+            let mut best_t = 0usize;
+            let mut best_g = f64::NEG_INFINITY;
+            for i in 0..t {
+                let gi = planes_b[i] - crate::linalg::dot(&planes_a[i], &v) as f64 / lam;
+                if gi > best_g {
+                    best_g = gi;
+                    best_t = i;
+                }
+            }
+            // direction: e_{best} - theta ; line search over step in [0,1]
+            let mut d_v = planes_a[best_t].clone(); // a_best - v_theta-combo
+            for (dv, vv) in d_v.iter_mut().zip(&v) {
+                *dv -= vv;
+            }
+            let cur_obj_grad = best_g
+                - theta
+                    .iter()
+                    .enumerate()
+                    .map(|(i, th)| {
+                        th * (planes_b[i] - crate::linalg::dot(&planes_a[i], &v) as f64 / lam)
+                    })
+                    .sum::<f64>();
+            if cur_obj_grad <= 1e-12 {
+                break;
+            }
+            // quadratic in step: f(step) = f0 + step * cur_obj_grad - step^2/(2 lam) ||d_v||^2
+            let dnorm = crate::linalg::norm2_sq(&d_v) as f64;
+            let step = if dnorm > 0.0 {
+                (lam * cur_obj_grad / dnorm).clamp(0.0, 1.0)
+            } else {
+                1.0
+            };
+            for th in theta.iter_mut() {
+                *th *= 1.0 - step;
+            }
+            theta[best_t] += step;
+            for (vv, dv) in v.iter_mut().zip(&d_v) {
+                *vv += step as f32 * dv;
+            }
+        }
+        // primal from dual: w = -(1/lam) v
+        for (wi, vi) in w.iter_mut().zip(&v) {
+            *wi = -vi / lam as f32;
+        }
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn converges_to_dcd_objective() {
+        let ds = synth::alpha_like(800, 10, 1);
+        let w = train(&ds, &CuttingPlaneCfg::default());
+        let out = crate::baselines::dcd::train(&ds, &Default::default());
+        let j_cp = crate::model::objective_cls(&ds, &w, 1.0);
+        let j_dcd = crate::model::objective_cls(&ds, &out.w, 1.0);
+        assert!(
+            (j_cp - j_dcd).abs() / j_dcd < 0.05,
+            "J_cp={j_cp} J_dcd={j_dcd}"
+        );
+    }
+
+    #[test]
+    fn few_planes_for_easy_data() {
+        let ds = synth::gaussian_margin(500, 6, 2, 3.0, 0.0);
+        let w = train(&ds, &CuttingPlaneCfg { max_planes: 50, ..Default::default() });
+        assert!(crate::model::accuracy_cls(&ds, &w) > 0.95);
+    }
+}

@@ -1,0 +1,24 @@
+//! Baseline solvers — from-scratch implementations of every comparator
+//! in the paper's Table 4, sharing this crate's data structures so the
+//! constant factors are comparable (DESIGN.md §6):
+//!
+//! | paper          | here                                   |
+//! |----------------|----------------------------------------|
+//! | LL-Dual [5]    | [`dcd`] dual coordinate descent        |
+//! | LL-Primal [5]  | [`primal_newton`] truncated Newton-CG  |
+//! | LL-CS [5]      | [`cs_dcd`] Crammer-Singer sequential dual |
+//! | Pegasos [14]   | [`pegasos`] primal sub-gradient        |
+//! | SVMPerf [8]    | [`cutting_plane`] primal bundle method |
+//! | SVMMult [9]    | [`cutting_plane`] (CS loss variant via cs_dcd fallback) |
+//! | PSVM [2]       | [`psvm_lite`] low-rank ICF dual        |
+//! | StreamSVM [10] | [`stream_dcd`] blocked out-of-core DCD |
+//! | SDB [3]        | [`stream_dcd`] (selective-block mode)  |
+
+pub mod cs_dcd;
+pub mod cutting_plane;
+pub mod dcd;
+pub mod pegasos;
+pub mod primal_newton;
+pub mod psvm_lite;
+pub mod stream_dcd;
+pub mod svr_dcd;

@@ -1,0 +1,82 @@
+//! Pegasos (Shalev-Shwartz et al. 2007): primal stochastic sub-gradient
+//! with the 1/(lam t) step schedule and optional ball projection.
+//!
+//! Scaling note: Pegasos minimizes `lam_p/2 ||w||^2 + (1/N) sum hinge`;
+//! with `lam_p = lambda / (2N)` this is exactly PEMSVM's Eq. (1)
+//! objective divided by 2N, so the two solvers optimize the same w.
+
+use crate::data::Dataset;
+use crate::rng::Pcg64;
+
+pub struct PegasosCfg {
+    /// PEMSVM-scale lambda (Eq. 1); internally mapped to lam/(2N)
+    pub lambda: f32,
+    pub epochs: usize,
+    pub seed: u64,
+    /// project onto the 1/sqrt(lam_p) ball each step (the paper's
+    /// optional step; helps early iterations)
+    pub project: bool,
+}
+
+impl Default for PegasosCfg {
+    fn default() -> Self {
+        PegasosCfg { lambda: 1.0, epochs: 20, seed: 0, project: true }
+    }
+}
+
+/// Train on a binary dataset; returns w.
+pub fn train(ds: &Dataset, cfg: &PegasosCfg) -> Vec<f32> {
+    let n = ds.n;
+    let lam = (cfg.lambda / (2.0 * n as f32)).max(1e-12);
+    let mut w = vec![0f32; ds.k];
+    let mut g = Pcg64::new_stream(cfg.seed, 0x9e9a);
+    let mut t = 1u64;
+    let radius = 1.0 / lam.sqrt();
+    for _ in 0..cfg.epochs {
+        for _ in 0..n {
+            let d = g.next_below(n as u64) as usize;
+            let y = ds.labels[d];
+            let margin = y * ds.dot_row(d, &w);
+            let eta = 1.0 / (lam * t as f32);
+            // w <- (1 - eta lam) w  [+ eta y x if margin < 1]
+            let shrink = 1.0 - eta * lam;
+            for v in w.iter_mut() {
+                *v *= shrink;
+            }
+            if margin < 1.0 {
+                ds.for_nonzero(d, |j, v| w[j as usize] += eta * y * v);
+            }
+            if cfg.project {
+                let norm = crate::linalg::norm2_sq(&w).sqrt();
+                if norm > radius {
+                    let s = radius / norm;
+                    for v in w.iter_mut() {
+                        *v *= s;
+                    }
+                }
+            }
+            t += 1;
+        }
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn learns_separable_data() {
+        let ds = synth::gaussian_margin(2000, 10, 1, 2.5, 0.02);
+        let w = train(&ds, &PegasosCfg { lambda: 1.0, epochs: 10, seed: 0, project: true });
+        assert!(crate::model::accuracy_cls(&ds, &w) > 0.9);
+    }
+
+    #[test]
+    fn deterministic() {
+        let ds = synth::alpha_like(500, 8, 2);
+        let cfg = PegasosCfg::default();
+        assert_eq!(train(&ds, &cfg), train(&ds, &cfg));
+    }
+}

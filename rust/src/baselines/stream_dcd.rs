@@ -1,0 +1,178 @@
+//! StreamSVM / SDB-lite: out-of-core blocked dual coordinate descent.
+//!
+//! StreamSVM (Matsushima et al. 2012) keeps a small in-memory working
+//! block and streams the rest from disk through a reader thread; SDB
+//! (Chang & Roth 2011) selects blocks by violation. We model both:
+//! the dataset is split into `blocks`; each outer pass loads one block
+//! (optionally *re-reading it from a libsvm file* to pay real I/O like
+//! the original) and runs `inner_epochs` of DCD on it while the dual
+//! state persists across blocks. `selective` biases block order by the
+//! violation observed last pass (the SDB heuristic).
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::data::{libsvm, Dataset, Task};
+use crate::rng::Pcg64;
+
+pub struct StreamDcdCfg {
+    /// PEMSVM-scale lambda; C = 2/lambda
+    pub lambda: f32,
+    pub blocks: usize,
+    pub passes: usize,
+    pub inner_epochs: usize,
+    /// SDB mode: order blocks by last-seen violation
+    pub selective: bool,
+    /// when set, stream blocks from this libsvm file instead of RAM
+    /// (pays parse cost per visit, like the real systems pay disk I/O)
+    pub stream_from: Option<PathBuf>,
+    pub seed: u64,
+}
+
+impl Default for StreamDcdCfg {
+    fn default() -> Self {
+        StreamDcdCfg {
+            lambda: 1.0,
+            blocks: 8,
+            passes: 6,
+            inner_epochs: 3,
+            selective: false,
+            stream_from: None,
+            seed: 0,
+        }
+    }
+}
+
+pub fn train(ds: &Dataset, cfg: &StreamDcdCfg) -> Result<Vec<f32>> {
+    let n = ds.n;
+    let c = 2.0 / cfg.lambda;
+    let nb = cfg.blocks.max(1).min(n.max(1));
+    let bounds: Vec<(usize, usize)> = (0..nb)
+        .map(|b| (n * b / nb, n * (b + 1) / nb))
+        .collect();
+    let mut w = vec![0f32; ds.k];
+    let mut alpha = vec![0f32; n];
+    let mut block_viol = vec![f32::INFINITY; nb];
+    let mut g = Pcg64::new_stream(cfg.seed, 0x57e);
+
+    for _ in 0..cfg.passes {
+        // block visit order
+        let mut order: Vec<usize> = (0..nb).collect();
+        if cfg.selective {
+            order.sort_by(|&a, &b| block_viol[b].total_cmp(&block_viol[a]));
+        } else {
+            g.shuffle(&mut order);
+        }
+        for &b in &order {
+            let (lo, hi) = bounds[b];
+            // "load" the block: either slice RAM or re-parse from disk
+            let owned_block;
+            let block: &Dataset = match &cfg.stream_from {
+                Some(path) => {
+                    let full = libsvm::load(path, Task::Binary, 1)?;
+                    owned_block = full.subset_rows(hi).subset_rows_from(lo);
+                    &owned_block
+                }
+                None => ds,
+            };
+            let (blo, bhi) = if cfg.stream_from.is_some() { (0, hi - lo) } else { (lo, hi) };
+            let mut viol = 0f32;
+            for _ in 0..cfg.inner_epochs {
+                for d_local in blo..bhi {
+                    let d_global = if cfg.stream_from.is_some() { lo + d_local } else { d_local };
+                    let q = block.row_norm_sq(d_local);
+                    if q == 0.0 {
+                        continue;
+                    }
+                    let y = block.labels[d_local];
+                    let grad = y * block.dot_row(d_local, &w) - 1.0;
+                    let a_old = alpha[d_global];
+                    let pg = if a_old <= 0.0 {
+                        grad.min(0.0)
+                    } else if a_old >= c {
+                        grad.max(0.0)
+                    } else {
+                        grad
+                    };
+                    viol = viol.max(pg.abs());
+                    let a_new = (a_old - grad / q).clamp(0.0, c);
+                    let delta = (a_new - a_old) * y;
+                    if delta != 0.0 {
+                        alpha[d_global] = a_new;
+                        block.for_nonzero(d_local, |j, v| w[j as usize] += delta * v);
+                    }
+                }
+            }
+            block_viol[b] = viol;
+        }
+    }
+    Ok(w)
+}
+
+impl Dataset {
+    /// rows [from..] — helper for block streaming.
+    fn subset_rows_from(&self, from: usize) -> Dataset {
+        match &self.features {
+            crate::data::Features::Dense { data } => Dataset::dense(
+                data[from * self.k..].to_vec(),
+                self.labels[from..].to_vec(),
+                self.k,
+                self.task,
+            ),
+            crate::data::Features::Sparse { indptr, indices, values } => {
+                let off = indptr[from];
+                Dataset::sparse(
+                    indptr[from..].iter().map(|p| p - off).collect(),
+                    indices[off..].to_vec(),
+                    values[off..].to_vec(),
+                    self.labels[from..].to_vec(),
+                    self.k,
+                    self.task,
+                )
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn blocked_matches_plain_dcd_quality() {
+        let ds = synth::alpha_like(1200, 10, 1);
+        let w = train(&ds, &StreamDcdCfg { passes: 20, ..Default::default() }).unwrap();
+        let plain = crate::baselines::dcd::train(&ds, &Default::default());
+        let j_blocked = crate::model::objective_cls(&ds, &w, 1.0);
+        let j_plain = crate::model::objective_cls(&ds, &plain.w, 1.0);
+        assert!(j_blocked < 1.15 * j_plain, "{j_blocked} vs {j_plain}");
+    }
+
+    #[test]
+    fn selective_mode_also_converges() {
+        let ds = synth::alpha_like(600, 8, 2);
+        let w = train(&ds, &StreamDcdCfg { selective: true, ..Default::default() }).unwrap();
+        assert!(crate::model::accuracy_cls(&ds, &w) > 0.8);
+    }
+
+    #[test]
+    fn streaming_from_file_matches_ram() {
+        let ds = synth::alpha_like(300, 6, 3);
+        let dir = std::env::temp_dir().join("pemsvm_stream_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("stream.svm");
+        crate::data::libsvm::save(&ds, &path).unwrap();
+        let cfg_ram = StreamDcdCfg { selective: false, seed: 9, ..Default::default() };
+        let cfg_file = StreamDcdCfg { stream_from: Some(path), seed: 9, ..cfg_ram };
+        let w_ram = train(&ds, &StreamDcdCfg { seed: 9, ..Default::default() }).unwrap();
+        let w_file = train(&ds, &cfg_file).unwrap();
+        // same visit order (same seed) => identical trajectories up to
+        // the f32 parse/print roundtrip of the libsvm file
+        for (a, b) in w_ram.iter().zip(&w_file) {
+            assert!((a - b).abs() < 5e-2, "{a} vs {b}");
+        }
+        let _ = cfg_ram;
+    }
+}

@@ -1,0 +1,88 @@
+//! Helpers shared by the `harness = false` bench binaries (`criterion`
+//! is not in the offline registry; each bench prints the corresponding
+//! paper table/figure directly).
+
+use std::time::Instant;
+
+/// Global workload scale from `SCALE` (default 1.0). `SCALE=0.2
+//  cargo bench` shrinks every bench's N by 5x for smoke runs.
+pub fn scale() -> f64 {
+    std::env::var("SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(1.0)
+}
+
+/// `n` scaled by `SCALE`, at least `min`.
+pub fn scaled(n: usize, min: usize) -> usize {
+    ((n as f64 * scale()) as usize).max(min)
+}
+
+/// Wall-clock a closure.
+pub fn time<T>(f: impl FnOnce() -> T) -> (f64, T) {
+    let t0 = Instant::now();
+    let out = f();
+    (t0.elapsed().as_secs_f64(), out)
+}
+
+/// Least-squares slope of log(y) vs log(x) — the scaling exponent the
+/// itertime/fig3/fig4 benches compare against the paper's asymptotics.
+pub fn loglog_slope(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let lx: Vec<f64> = xs.iter().map(|x| x.ln()).collect();
+    let ly: Vec<f64> = ys.iter().map(|y| y.ln()).collect();
+    let n = lx.len() as f64;
+    let mx = lx.iter().sum::<f64>() / n;
+    let my = ly.iter().sum::<f64>() / n;
+    let cov: f64 = lx.iter().zip(&ly).map(|(x, y)| (x - mx) * (y - my)).sum();
+    let var: f64 = lx.iter().map(|x| (x - mx) * (x - mx)).sum();
+    cov / var
+}
+
+/// Measured cost of merging one pair of K x K partial statistics (the
+/// unit of a tree-reduce round).
+pub fn pair_merge_secs(k: usize) -> f64 {
+    use crate::solver::PartialStats;
+    let mut a = PartialStats::zeros(k);
+    let b = PartialStats::zeros(k);
+    let reps = (50_000_000 / (k * k).max(1)).clamp(3, 200);
+    let t0 = std::time::Instant::now();
+    for _ in 0..reps {
+        a.merge(&b);
+    }
+    t0.elapsed().as_secs_f64() / reps as f64
+}
+
+/// Cluster cost model for a `simulate_cluster` run: per-iteration
+/// max-worker stats time + solve + bookkeeping, with the serial
+/// measured reduce replaced by the paper's tree reduce
+/// (ceil(log2 P) pair-merge rounds per collect; §4.1 / Table 1 —
+/// on one box the merges of a round cannot actually overlap, so the
+/// measured serial reduce would charge O(P) instead of O(log P)).
+pub fn modeled_sim_secs(out: &crate::coordinator::TrainOutput, p: usize, k: usize) -> f64 {
+    use crate::metrics::Phase;
+    let m = &out.metrics;
+    let serial = m.total(Phase::LocalStats)
+        + m.total(Phase::DrawMu)
+        + m.total(Phase::Broadcast)
+        + m.total(Phase::Other);
+    let rounds = (p.max(2) as f64).log2().ceil();
+    serial.as_secs_f64() + m.reduces as f64 * rounds * pair_merge_secs(k)
+}
+
+/// Print a bench header in a common format.
+pub fn header(id: &str, title: &str) {
+    println!("\n================================================================");
+    println!("{id}: {title}");
+    println!("  (SCALE={}; see EXPERIMENTS.md for paper-vs-measured)", scale());
+    println!("================================================================");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slope_of_quadratic_is_two() {
+        let xs = [1.0, 2.0, 4.0, 8.0];
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 * x * x).collect();
+        assert!((loglog_slope(&xs, &ys) - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,100 @@
+//! Hand-rolled CLI argument parsing (no `clap` in the offline registry).
+//!
+//! Grammar: `pemsvm <subcommand> [positional ...] [--key value | --key=value | --flag]`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed command line.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        let Some(sub) = it.next() else {
+            bail!("missing subcommand");
+        };
+        out.subcommand = sub;
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    out.flags.insert(name.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.insert(name.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    pub fn get_f32(&self, key: &str, default: f32) -> Result<f32> {
+        match self.get(key) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_positional_flags() {
+        let a = parse("train data.svm --workers 8 --lambda=0.5 --verbose");
+        assert_eq!(a.subcommand, "train");
+        assert_eq!(a.positional, vec!["data.svm"]);
+        assert_eq!(a.get("workers"), Some("8"));
+        assert_eq!(a.get("lambda"), Some("0.5"));
+        assert_eq!(a.get("verbose"), Some("true"));
+        assert_eq!(a.get_usize("workers", 1).unwrap(), 8);
+        assert_eq!(a.get_f32("lambda", 1.0).unwrap(), 0.5);
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn missing_subcommand_rejected() {
+        assert!(Args::parse(std::iter::empty()).is_err());
+    }
+
+    #[test]
+    fn negative_number_as_value() {
+        let a = parse("train --lambda -0.5");
+        // "-0.5" doesn't start with -- so it's consumed as the value
+        assert_eq!(a.get("lambda"), Some("-0.5"));
+    }
+}

@@ -1,0 +1,285 @@
+//! Configuration: a TOML-subset file format + the typed [`TrainConfig`]
+//! every entrypoint (CLI, examples, benches) builds on. `serde`/`toml`
+//! are not in the offline registry, so the parser is ours (sections,
+//! `key = value`, strings / numbers / bools / flat arrays, comments).
+
+pub mod json;
+pub mod toml;
+
+use anyhow::{bail, Result};
+
+pub use json::Json;
+pub use toml::TomlDoc;
+
+/// LIN vs KRN (paper §4.2 options, first axis).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelKind {
+    Linear,
+    Kernel,
+}
+
+/// EM vs MC (second axis).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algo {
+    Em,
+    Mc,
+}
+
+/// CLS vs SVR vs MLT (third axis).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskKind {
+    Cls,
+    Svr,
+    Mlt,
+}
+
+/// Which compute backend executes the worker/master steps.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// pure Rust, sparse-aware — the paper's MPI CPU implementation
+    Native,
+    /// PJRT-compiled HLO artifacts (Pallas kernel inside) — the paper's
+    /// GPU implementation, re-targeted
+    Xla,
+}
+
+/// Reduction topology for the partial statistics.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReduceKind {
+    /// leader sums all P partials (O(P) at the leader)
+    Flat,
+    /// binary tree among workers (the paper's log(P) term)
+    Tree,
+}
+
+/// Kernel function for KRN runs.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum KernelCfg {
+    /// k(x, z) = exp(-||x - z||^2 / (2 sigma^2))
+    Gaussian { sigma: f32 },
+    /// k(x, z) = x . z
+    LinearK,
+}
+
+/// Everything a training run needs. Defaults follow the paper's §5
+/// settings (eps clamp 1e-5, tol 0.001 * N, burn-in 10).
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub model: ModelKind,
+    pub algo: Algo,
+    pub task: TaskKind,
+    /// l2 regularization weight lambda (liblinear's C maps to 1/(2C N)
+    /// up to the paper's factor-2 loss scaling; benches set it directly)
+    pub lambda: f32,
+    /// gamma clamp epsilon (§5.7.3)
+    pub eps_clamp: f32,
+    /// SVR insensitivity epsilon (§3.2)
+    pub eps_insensitive: f32,
+    pub max_iters: usize,
+    /// stop when |J_m - J_{m-1}| <= tol * N (§5.5)
+    pub tol: f32,
+    pub workers: usize,
+    pub seed: u64,
+    /// MC burn-in iterations before averaging (§5.13)
+    pub burn_in: usize,
+    pub backend: BackendKind,
+    pub reduce: ReduceKind,
+    pub num_classes: usize,
+    pub kernel: KernelCfg,
+    pub artifacts_dir: String,
+    /// print per-iteration progress
+    pub verbose: bool,
+    /// run workers sequentially and report max(worker time) per
+    /// iteration in the metrics — the homogeneous-cluster cost model,
+    /// for sweeping P beyond this box's physical cores (DESIGN.md §6)
+    pub simulate_cluster: bool,
+    /// XLA backend: route the Sigma/mu statistics through the Pallas
+    /// kernel artifact (true, default) or the XLA-native-dot ablation
+    /// twin (false; EM/CLS only)
+    pub xla_use_pallas: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            model: ModelKind::Linear,
+            algo: Algo::Em,
+            task: TaskKind::Cls,
+            lambda: 1.0,
+            eps_clamp: 1e-5,
+            eps_insensitive: 1e-3,
+            max_iters: 200,
+            tol: 1e-3,
+            workers: 4,
+            seed: 0,
+            burn_in: 10,
+            backend: BackendKind::Native,
+            reduce: ReduceKind::Flat,
+            num_classes: 2,
+            kernel: KernelCfg::Gaussian { sigma: 1.0 },
+            artifacts_dir: "artifacts".into(),
+            verbose: false,
+            simulate_cluster: false,
+            xla_use_pallas: true,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Parse the paper's option string, e.g. "LIN-EM-CLS" / "KRN-MC-SVR".
+    pub fn with_options(mut self, opts: &str) -> Result<Self> {
+        for part in opts.split('-') {
+            match part.to_ascii_uppercase().as_str() {
+                "LIN" => self.model = ModelKind::Linear,
+                "KRN" => self.model = ModelKind::Kernel,
+                "EM" => self.algo = Algo::Em,
+                "MC" => self.algo = Algo::Mc,
+                "CLS" => self.task = TaskKind::Cls,
+                "SVR" => self.task = TaskKind::Svr,
+                "MLT" => self.task = TaskKind::Mlt,
+                other => bail!("unknown option `{other}` in `{opts}`"),
+            }
+        }
+        Ok(self)
+    }
+
+    /// The paper's option-string for this config ("LIN-EM-CLS").
+    pub fn options_string(&self) -> String {
+        format!(
+            "{}-{}-{}",
+            match self.model {
+                ModelKind::Linear => "LIN",
+                ModelKind::Kernel => "KRN",
+            },
+            match self.algo {
+                Algo::Em => "EM",
+                Algo::Mc => "MC",
+            },
+            match self.task {
+                TaskKind::Cls => "CLS",
+                TaskKind::Svr => "SVR",
+                TaskKind::Mlt => "MLT",
+            }
+        )
+    }
+
+    /// Apply `key = value` overrides from a parsed TOML doc (flat keys or
+    /// under a `[train]` section).
+    pub fn apply_toml(&mut self, doc: &TomlDoc) -> Result<()> {
+        for (key, val) in doc.entries() {
+            let k = key.strip_prefix("train.").unwrap_or(key);
+            self.set(k, &val.to_string())?;
+        }
+        Ok(())
+    }
+
+    /// Set a single field by name (shared by TOML and CLI paths).
+    pub fn set(&mut self, key: &str, val: &str) -> Result<()> {
+        let v = val.trim().trim_matches('"');
+        match key {
+            "options" => *self = self.clone().with_options(v)?,
+            "model" => {
+                self.model = match v.to_ascii_lowercase().as_str() {
+                    "lin" | "linear" => ModelKind::Linear,
+                    "krn" | "kernel" => ModelKind::Kernel,
+                    _ => bail!("bad model `{v}`"),
+                }
+            }
+            "algo" => {
+                self.algo = match v.to_ascii_lowercase().as_str() {
+                    "em" => Algo::Em,
+                    "mc" => Algo::Mc,
+                    _ => bail!("bad algo `{v}`"),
+                }
+            }
+            "task" => {
+                self.task = match v.to_ascii_lowercase().as_str() {
+                    "cls" => TaskKind::Cls,
+                    "svr" => TaskKind::Svr,
+                    "mlt" => TaskKind::Mlt,
+                    _ => bail!("bad task `{v}`"),
+                }
+            }
+            "lambda" => self.lambda = v.parse()?,
+            "eps_clamp" => self.eps_clamp = v.parse()?,
+            "eps_insensitive" => self.eps_insensitive = v.parse()?,
+            "max_iters" => self.max_iters = v.parse()?,
+            "tol" => self.tol = v.parse()?,
+            "workers" => self.workers = v.parse()?,
+            "seed" => self.seed = v.parse()?,
+            "burn_in" => self.burn_in = v.parse()?,
+            "num_classes" => self.num_classes = v.parse()?,
+            "artifacts_dir" => self.artifacts_dir = v.to_string(),
+            "verbose" => self.verbose = v.parse()?,
+            "simulate_cluster" => self.simulate_cluster = v.parse()?,
+            "xla_use_pallas" => self.xla_use_pallas = v.parse()?,
+            "backend" => {
+                self.backend = match v.to_ascii_lowercase().as_str() {
+                    "native" => BackendKind::Native,
+                    "xla" => BackendKind::Xla,
+                    _ => bail!("bad backend `{v}`"),
+                }
+            }
+            "reduce" => {
+                self.reduce = match v.to_ascii_lowercase().as_str() {
+                    "flat" => ReduceKind::Flat,
+                    "tree" => ReduceKind::Tree,
+                    _ => bail!("bad reduce `{v}`"),
+                }
+            }
+            "kernel" => {
+                self.kernel = match v.to_ascii_lowercase().as_str() {
+                    "linear" => KernelCfg::LinearK,
+                    "gaussian" => KernelCfg::Gaussian { sigma: 1.0 },
+                    _ => bail!("bad kernel `{v}`"),
+                }
+            }
+            "kernel_sigma" => {
+                self.kernel = KernelCfg::Gaussian { sigma: v.parse()? };
+            }
+            other => bail!("unknown config key `{other}`"),
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn options_roundtrip() {
+        for s in ["LIN-EM-CLS", "KRN-MC-SVR", "LIN-MC-MLT"] {
+            let c = TrainConfig::default().with_options(s).unwrap();
+            assert_eq!(c.options_string(), s);
+        }
+        assert!(TrainConfig::default().with_options("LIN-XX").is_err());
+    }
+
+    #[test]
+    fn set_fields() {
+        let mut c = TrainConfig::default();
+        c.set("lambda", "0.25").unwrap();
+        c.set("workers", "48").unwrap();
+        c.set("backend", "xla").unwrap();
+        c.set("reduce", "tree").unwrap();
+        assert_eq!(c.lambda, 0.25);
+        assert_eq!(c.workers, 48);
+        assert_eq!(c.backend, BackendKind::Xla);
+        assert_eq!(c.reduce, ReduceKind::Tree);
+        assert!(c.set("nope", "1").is_err());
+    }
+
+    #[test]
+    fn toml_apply() {
+        let doc = TomlDoc::parse(
+            "[train]\nlambda = 0.5\nworkers = 8\noptions = \"KRN-MC-CLS\"\n",
+        )
+        .unwrap();
+        let mut c = TrainConfig::default();
+        c.apply_toml(&doc).unwrap();
+        assert_eq!(c.lambda, 0.5);
+        assert_eq!(c.workers, 8);
+        assert_eq!(c.model, ModelKind::Kernel);
+    }
+}

@@ -1,0 +1,167 @@
+//! TOML-subset parser: `[section]` headers, `key = value` lines,
+//! `#` comments. Values: strings, numbers, bools, flat arrays. Keys are
+//! flattened to `section.key`. This covers every config file the repo
+//! ships; nested tables / multiline strings are deliberately out of
+//! scope.
+
+use anyhow::{bail, Result};
+
+/// A scalar-ish TOML value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl std::fmt::Display for TomlValue {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TomlValue::Str(s) => write!(f, "{s}"),
+            TomlValue::Num(n) => {
+                if n.fract() == 0.0 && n.abs() < 1e15 {
+                    write!(f, "{}", *n as i64)
+                } else {
+                    write!(f, "{n}")
+                }
+            }
+            TomlValue::Bool(b) => write!(f, "{b}"),
+            TomlValue::Arr(a) => {
+                write!(f, "[")?;
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{v}")?;
+                }
+                write!(f, "]")
+            }
+        }
+    }
+}
+
+/// Parsed document: ordered `(flattened_key, value)` pairs.
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    entries: Vec<(String, TomlValue)>,
+}
+
+fn parse_value(raw: &str) -> Result<TomlValue> {
+    let raw = raw.trim();
+    if raw.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(stripped) = raw.strip_prefix('"') {
+        let Some(inner) = stripped.strip_suffix('"') else {
+            bail!("unterminated string `{raw}`");
+        };
+        return Ok(TomlValue::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if raw == "true" || raw == "false" {
+        return Ok(TomlValue::Bool(raw == "true"));
+    }
+    if let Some(inner) = raw.strip_prefix('[') {
+        let Some(inner) = inner.strip_suffix(']') else {
+            bail!("unterminated array `{raw}`");
+        };
+        let mut out = Vec::new();
+        let inner = inner.trim();
+        if !inner.is_empty() {
+            for part in inner.split(',') {
+                out.push(parse_value(part)?);
+            }
+        }
+        return Ok(TomlValue::Arr(out));
+    }
+    match raw.parse::<f64>() {
+        Ok(n) => Ok(TomlValue::Num(n)),
+        Err(_) => bail!("cannot parse value `{raw}`"),
+    }
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc> {
+        let mut section = String::new();
+        let mut entries = Vec::new();
+        for (lineno, raw_line) in text.lines().enumerate() {
+            // strip comments outside strings (good enough: we disallow #
+            // inside string values in our configs)
+            let line = match raw_line.find('#') {
+                Some(i) if !raw_line[..i].contains('"') || raw_line[..i].matches('"').count() % 2 == 0 => &raw_line[..i],
+                _ => raw_line,
+            };
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(inner) = line.strip_prefix('[') {
+                let Some(name) = inner.strip_suffix(']') else {
+                    bail!("line {}: bad section header", lineno + 1);
+                };
+                section = name.trim().to_string();
+                continue;
+            }
+            let Some((key, val)) = line.split_once('=') else {
+                bail!("line {}: expected key = value", lineno + 1);
+            };
+            let key = key.trim();
+            let flat = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            entries.push((
+                flat,
+                parse_value(val).map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?,
+            ));
+        }
+        Ok(TomlDoc { entries })
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<TomlDoc> {
+        TomlDoc::parse(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn entries(&self) -> impl Iterator<Item = (&str, &TomlValue)> {
+        self.entries.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        self.entries.iter().rev().find(|(k, _)| k == key).map(|(_, v)| v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = TomlDoc::parse(
+            "# comment\ntitle = \"exp\"\n[train]\nlambda = 0.5 # inline\nworkers = 8\nverbose = true\nks = [16, 64]\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get("title"), Some(&TomlValue::Str("exp".into())));
+        assert_eq!(doc.get("train.lambda"), Some(&TomlValue::Num(0.5)));
+        assert_eq!(doc.get("train.verbose"), Some(&TomlValue::Bool(true)));
+        assert_eq!(
+            doc.get("train.ks"),
+            Some(&TomlValue::Arr(vec![TomlValue::Num(16.0), TomlValue::Num(64.0)]))
+        );
+    }
+
+    #[test]
+    fn display_roundtrips_for_config_use() {
+        assert_eq!(TomlValue::Num(8.0).to_string(), "8");
+        assert_eq!(TomlValue::Num(0.5).to_string(), "0.5");
+        assert_eq!(TomlValue::Str("xla".into()).to_string(), "xla");
+    }
+
+    #[test]
+    fn errors() {
+        assert!(TomlDoc::parse("[oops\n").is_err());
+        assert!(TomlDoc::parse("justakey\n").is_err());
+        assert!(TomlDoc::parse("a = \"unterminated\n").is_err());
+    }
+}

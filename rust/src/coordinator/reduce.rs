@@ -1,0 +1,83 @@
+//! The reduce step: sum the P workers' partial statistics.
+//!
+//! `flat` folds at the leader (O(P K^2) sequential); `tree` merges pairs
+//! in log2(P) parallel rounds — the topology behind the `K^2 log(P)`
+//! term in the paper's Table 1.
+
+use crate::config::ReduceKind;
+use crate::solver::PartialStats;
+
+/// Reduce in worker-id order (deterministic for a fixed P).
+pub fn reduce(kind: ReduceKind, mut partials: Vec<PartialStats>) -> PartialStats {
+    assert!(!partials.is_empty());
+    match kind {
+        ReduceKind::Flat => {
+            let mut acc = partials.remove(0);
+            for p in &partials {
+                acc.merge(p);
+            }
+            acc
+        }
+        ReduceKind::Tree => tree_reduce(partials),
+    }
+}
+
+fn tree_reduce(mut partials: Vec<PartialStats>) -> PartialStats {
+    let mut stride = 1usize;
+    while stride < partials.len() {
+        // each round's merges run in parallel, like simultaneous
+        // pairwise exchanges on a cluster
+        std::thread::scope(|scope| {
+            for chunk in partials.chunks_mut(2 * stride) {
+                if chunk.len() > stride {
+                    let (a, b) = chunk.split_at_mut(stride);
+                    let dst = &mut a[0];
+                    let src = &b[0];
+                    scope.spawn(move || dst.merge(src));
+                }
+            }
+        });
+        stride *= 2;
+    }
+    partials.swap_remove(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn random_partials(p: usize, k: usize, seed: u64) -> Vec<PartialStats> {
+        let mut g = Pcg64::new(seed);
+        (0..p)
+            .map(|_| {
+                let mut st = PartialStats::zeros(k);
+                for v in st.sigma.data.iter_mut() {
+                    *v = g.next_f32() - 0.5;
+                }
+                for v in st.mu.iter_mut() {
+                    *v = g.next_f32() - 0.5;
+                }
+                st.obj = g.next_f64();
+                st.aux = g.next_f64();
+                st
+            })
+            .collect()
+    }
+
+    /// Property: tree == flat == serial sum for every P (up to f32
+    /// association error, which for these magnitudes is ~1e-5).
+    #[test]
+    fn tree_equals_flat_for_all_p() {
+        for p in [1usize, 2, 3, 4, 5, 7, 8, 16, 33] {
+            let parts = random_partials(p, 6, p as u64);
+            let a = reduce(ReduceKind::Flat, parts.clone());
+            let b = reduce(ReduceKind::Tree, parts);
+            assert!(a.sigma.max_abs_diff(&b.sigma) < 1e-4, "P={p}");
+            for (x, y) in a.mu.iter().zip(&b.mu) {
+                assert!((x - y).abs() < 1e-4, "P={p}");
+            }
+            assert!((a.obj - b.obj).abs() < 1e-9, "P={p}");
+        }
+    }
+}

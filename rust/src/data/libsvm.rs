@@ -1,0 +1,219 @@
+//! libsvm/svmlight-format I/O.
+//!
+//! `label idx:val idx:val ...` with 1-based feature indices. The reader
+//! supports the paper's parallel-I/O point (§5.6): the file is split
+//! into P byte ranges aligned to line boundaries and parsed by P
+//! threads, so load time scales with cores like the MPI implementation.
+
+use std::fs::File;
+use std::io::{BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::{Dataset, Task};
+
+/// Parse one libsvm line into (label, pairs). Returns None for blank /
+/// comment lines.
+fn parse_line(line: &str, lineno: usize) -> Result<Option<(f32, Vec<(u32, f32)>)>> {
+    let line = line.trim();
+    if line.is_empty() || line.starts_with('#') {
+        return Ok(None);
+    }
+    let mut it = line.split_ascii_whitespace();
+    let label: f32 = it
+        .next()
+        .unwrap()
+        .parse()
+        .with_context(|| format!("line {lineno}: bad label"))?;
+    let mut pairs = Vec::new();
+    for tok in it {
+        let (i, v) = tok
+            .split_once(':')
+            .with_context(|| format!("line {lineno}: token `{tok}` is not idx:val"))?;
+        let i: u32 = i.parse().with_context(|| format!("line {lineno}: bad index"))?;
+        if i == 0 {
+            bail!("line {lineno}: libsvm indices are 1-based, got 0");
+        }
+        let v: f32 = v.parse().with_context(|| format!("line {lineno}: bad value"))?;
+        pairs.push((i - 1, v));
+    }
+    pairs.sort_unstable_by_key(|p| p.0);
+    Ok(Some((label, pairs)))
+}
+
+fn parse_block(text: &str, first_lineno: usize) -> Result<Vec<(f32, Vec<(u32, f32)>)>> {
+    let mut rows = Vec::new();
+    for (off, line) in text.lines().enumerate() {
+        if let Some(r) = parse_line(line, first_lineno + off)? {
+            rows.push(r);
+        }
+    }
+    Ok(rows)
+}
+
+/// Load a libsvm file with `threads` parallel parsers.
+///
+/// `task` decides label handling: Binary maps {0,1}/{-1,+1} to ±1,
+/// Multiclass expects 0..m or 1..=m class ids, Regression keeps values.
+pub fn load(path: &Path, task: Task, threads: usize) -> Result<Dataset> {
+    let mut text = String::new();
+    File::open(path)
+        .with_context(|| format!("open {}", path.display()))?
+        .read_to_string(&mut text)?;
+    let threads = threads.max(1);
+
+    // Split into line-aligned byte ranges.
+    let bytes = text.as_bytes();
+    let mut cuts = vec![0usize];
+    for t in 1..threads {
+        let mut pos = bytes.len() * t / threads;
+        while pos < bytes.len() && bytes[pos] != b'\n' {
+            pos += 1;
+        }
+        cuts.push((pos + 1).min(bytes.len()));
+    }
+    cuts.push(bytes.len());
+    cuts.dedup();
+
+    let blocks: Vec<Vec<(f32, Vec<(u32, f32)>)>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = cuts
+            .windows(2)
+            .map(|w| {
+                let chunk = &text[w[0]..w[1]];
+                scope.spawn(move || parse_block(chunk, 0))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect::<Result<Vec<_>>>()
+    })?;
+
+    let mut indptr = vec![0usize];
+    let (mut indices, mut values, mut labels) = (Vec::new(), Vec::new(), Vec::new());
+    let mut kmax = 0u32;
+    for block in blocks {
+        for (label, pairs) in block {
+            labels.push(label);
+            for (i, v) in pairs {
+                kmax = kmax.max(i + 1);
+                indices.push(i);
+                values.push(v);
+            }
+            indptr.push(indices.len());
+        }
+    }
+
+    let labels = match task {
+        Task::Binary => labels.iter().map(|&l| if l > 0.0 { 1.0 } else { -1.0 }).collect(),
+        Task::Regression => labels,
+        Task::Multiclass(m) => {
+            // accept 1-based class ids
+            let min = labels.iter().cloned().fold(f32::INFINITY, f32::min);
+            let off = if min >= 1.0 { 1.0 } else { 0.0 };
+            let out: Vec<f32> = labels.iter().map(|&l| l - off).collect();
+            for &l in &out {
+                if l < 0.0 || l >= m as f32 {
+                    bail!("class id {l} out of range 0..{m}");
+                }
+            }
+            out
+        }
+    };
+    Ok(Dataset::sparse(indptr, indices, values, labels, kmax as usize, task))
+}
+
+/// Write a dataset in libsvm format.
+pub fn save(ds: &Dataset, path: &Path) -> Result<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    for d in 0..ds.n {
+        let label = ds.labels[d];
+        if label == label.trunc() {
+            write!(w, "{}", label as i64)?;
+        } else {
+            write!(w, "{label}")?;
+        }
+        let mut err = None;
+        ds.for_nonzero(d, |j, v| {
+            if let Err(e) = write!(w, " {}:{}", j + 1, v) {
+                err = Some(e);
+            }
+        });
+        if let Some(e) = err {
+            return Err(e.into());
+        }
+        writeln!(w)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("pemsvm_libsvm_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.svm");
+        let ds = Dataset::sparse(
+            vec![0, 2, 3, 3],
+            vec![0, 4, 2],
+            vec![1.5, -2.0, 3.0],
+            vec![1.0, -1.0, 1.0],
+            5,
+            Task::Binary,
+        );
+        save(&ds, &p).unwrap();
+        let back = load(&p, Task::Binary, 2).unwrap();
+        assert_eq!(back.n, 3);
+        assert_eq!(back.k, 5);
+        assert_eq!(back.labels, ds.labels);
+        assert_eq!(back.sparse_row(0).unwrap().0, &[0u32, 4]);
+        assert_eq!(back.sparse_row(1).unwrap().1, &[3.0f32]);
+        assert_eq!(back.sparse_row(2).unwrap().0, &[] as &[u32]);
+    }
+
+    #[test]
+    fn parallel_load_equals_serial() {
+        let dir = std::env::temp_dir().join("pemsvm_libsvm_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("par.svm");
+        let mut g = crate::rng::Pcg64::new(17);
+        let mut text = String::new();
+        for d in 0..500 {
+            text.push_str(if d % 2 == 0 { "1" } else { "-1" });
+            for j in 0..10u32 {
+                if g.next_f32() < 0.3 {
+                    text.push_str(&format!(" {}:{:.3}", j + 1, g.next_f32()));
+                }
+            }
+            text.push('\n');
+        }
+        std::fs::write(&p, &text).unwrap();
+        let a = load(&p, Task::Binary, 1).unwrap();
+        let b = load(&p, Task::Binary, 7).unwrap();
+        assert_eq!(a.n, b.n);
+        assert_eq!(a.labels, b.labels);
+        for d in 0..a.n {
+            assert_eq!(a.sparse_row(d), b.sparse_row(d), "row {d}");
+        }
+    }
+
+    #[test]
+    fn rejects_zero_index() {
+        let dir = std::env::temp_dir().join("pemsvm_libsvm_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.svm");
+        std::fs::write(&p, "1 0:3.0\n").unwrap();
+        assert!(load(&p, Task::Binary, 1).is_err());
+    }
+
+    #[test]
+    fn multiclass_one_based() {
+        let dir = std::env::temp_dir().join("pemsvm_libsvm_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("mc.svm");
+        std::fs::write(&p, "1 1:1\n2 1:1\n3 1:1\n").unwrap();
+        let ds = load(&p, Task::Multiclass(3), 1).unwrap();
+        assert_eq!(ds.labels, vec![0.0, 1.0, 2.0]);
+    }
+}

@@ -1,0 +1,270 @@
+//! Datasets: dense + CSR storage, libsvm-format I/O, sharding, and the
+//! seeded synthetic generators that stand in for the paper's corpora
+//! (DESIGN.md §6 substitutions).
+
+pub mod libsvm;
+pub mod shard;
+pub mod synth;
+
+pub use shard::{shard_ranges, Shard};
+
+/// Feature storage. The paper's MPI implementation is sparse (§5.7.1)
+/// and its GPU implementation dense (§5.7.2); we keep both and the
+/// backends accept either (densifying per chunk where needed).
+#[derive(Clone, Debug)]
+pub enum Features {
+    Dense {
+        /// row-major [n, k]
+        data: Vec<f32>,
+    },
+    Sparse {
+        /// CSR: row d occupies `indices/values[indptr[d]..indptr[d+1]]`
+        indptr: Vec<usize>,
+        indices: Vec<u32>,
+        values: Vec<f32>,
+    },
+}
+
+/// Learning task, mirroring the paper's CLS / SVR / MLT options.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Task {
+    /// binary classification, labels in {-1, +1}
+    Binary,
+    /// regression, real labels
+    Regression,
+    /// multiclass, labels in 0..m
+    Multiclass(usize),
+}
+
+/// An in-memory dataset.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub features: Features,
+    /// Binary: ±1; regression: real; multiclass: class index as f32.
+    pub labels: Vec<f32>,
+    pub n: usize,
+    pub k: usize,
+    pub task: Task,
+}
+
+impl Dataset {
+    pub fn dense(data: Vec<f32>, labels: Vec<f32>, k: usize, task: Task) -> Self {
+        let n = labels.len();
+        assert_eq!(data.len(), n * k);
+        Dataset { features: Features::Dense { data }, labels, n, k, task }
+    }
+
+    pub fn sparse(
+        indptr: Vec<usize>,
+        indices: Vec<u32>,
+        values: Vec<f32>,
+        labels: Vec<f32>,
+        k: usize,
+        task: Task,
+    ) -> Self {
+        let n = labels.len();
+        assert_eq!(indptr.len(), n + 1);
+        assert_eq!(indices.len(), values.len());
+        debug_assert!(indices.iter().all(|&i| (i as usize) < k));
+        Dataset { features: Features::Sparse { indptr, indices, values }, labels, n, k, task }
+    }
+
+    pub fn is_sparse(&self) -> bool {
+        matches!(self.features, Features::Sparse { .. })
+    }
+
+    /// Fraction of stored nonzeros (1.0 for dense).
+    pub fn density(&self) -> f64 {
+        match &self.features {
+            Features::Dense { .. } => 1.0,
+            Features::Sparse { values, .. } => values.len() as f64 / (self.n * self.k) as f64,
+        }
+    }
+
+    /// Copy row `d` into the (zeroed by us) dense buffer `out` (len k).
+    pub fn densify_row(&self, d: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.k);
+        match &self.features {
+            Features::Dense { data } => out.copy_from_slice(&data[d * self.k..(d + 1) * self.k]),
+            Features::Sparse { indptr, indices, values } => {
+                out.fill(0.0);
+                for p in indptr[d]..indptr[d + 1] {
+                    out[indices[p] as usize] = values[p];
+                }
+            }
+        }
+    }
+
+    /// Visit nonzeros of row `d` as (index, value).
+    #[inline]
+    pub fn for_nonzero<F: FnMut(u32, f32)>(&self, d: usize, mut f: F) {
+        match &self.features {
+            Features::Dense { data } => {
+                for (j, &v) in data[d * self.k..(d + 1) * self.k].iter().enumerate() {
+                    if v != 0.0 {
+                        f(j as u32, v);
+                    }
+                }
+            }
+            Features::Sparse { indptr, indices, values } => {
+                for p in indptr[d]..indptr[d + 1] {
+                    f(indices[p], values[p]);
+                }
+            }
+        }
+    }
+
+    /// Sparse row view (indices, values) if sparse.
+    pub fn sparse_row(&self, d: usize) -> Option<(&[u32], &[f32])> {
+        match &self.features {
+            Features::Sparse { indptr, indices, values } => {
+                Some((&indices[indptr[d]..indptr[d + 1]], &values[indptr[d]..indptr[d + 1]]))
+            }
+            _ => None,
+        }
+    }
+
+    /// x_d . w
+    pub fn dot_row(&self, d: usize, w: &[f32]) -> f32 {
+        match &self.features {
+            Features::Dense { data } => crate::linalg::dot(&data[d * self.k..(d + 1) * self.k], w),
+            Features::Sparse { indptr, indices, values } => {
+                let mut s = 0.0;
+                for p in indptr[d]..indptr[d + 1] {
+                    s += values[p] * w[indices[p] as usize];
+                }
+                s
+            }
+        }
+    }
+
+    /// Squared norm of row d.
+    pub fn row_norm_sq(&self, d: usize) -> f32 {
+        let mut s = 0.0;
+        self.for_nonzero(d, |_, v| s += v * v);
+        s
+    }
+
+    /// Restrict to the first `n0` rows (paper §5.3's "N = N0 subset").
+    pub fn subset_rows(&self, n0: usize) -> Dataset {
+        let n0 = n0.min(self.n);
+        let labels = self.labels[..n0].to_vec();
+        match &self.features {
+            Features::Dense { data } => {
+                Dataset::dense(data[..n0 * self.k].to_vec(), labels, self.k, self.task)
+            }
+            Features::Sparse { indptr, indices, values } => {
+                let end = indptr[n0];
+                Dataset::sparse(
+                    indptr[..=n0].to_vec(),
+                    indices[..end].to_vec(),
+                    values[..end].to_vec(),
+                    labels,
+                    self.k,
+                    self.task,
+                )
+            }
+        }
+    }
+
+    /// Keep only features with index < k0 (paper §5.3's "K = K0 subset").
+    pub fn subset_features(&self, k0: usize) -> Dataset {
+        let k0 = k0.min(self.k);
+        match &self.features {
+            Features::Dense { data } => {
+                let mut out = Vec::with_capacity(self.n * k0);
+                for d in 0..self.n {
+                    out.extend_from_slice(&data[d * self.k..d * self.k + k0]);
+                }
+                Dataset::dense(out, self.labels.clone(), k0, self.task)
+            }
+            Features::Sparse { indptr, indices, values } => {
+                let (mut ip, mut ix, mut vs) = (vec![0usize], Vec::new(), Vec::new());
+                for d in 0..self.n {
+                    for p in indptr[d]..indptr[d + 1] {
+                        if (indices[p] as usize) < k0 {
+                            ix.push(indices[p]);
+                            vs.push(values[p]);
+                        }
+                    }
+                    ip.push(ix.len());
+                }
+                Dataset::sparse(ip, ix, vs, self.labels.clone(), k0, self.task)
+            }
+        }
+    }
+
+    /// Densify the whole dataset (for the XLA backend's chunk uploads).
+    pub fn to_dense(&self) -> Dataset {
+        match &self.features {
+            Features::Dense { .. } => self.clone(),
+            Features::Sparse { .. } => {
+                let mut data = vec![0.0f32; self.n * self.k];
+                for d in 0..self.n {
+                    let row = &mut data[d * self.k..(d + 1) * self.k];
+                    self.for_nonzero(d, |j, v| row[j as usize] = v);
+                }
+                Dataset::dense(data, self.labels.clone(), self.k, self.task)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_sparse() -> Dataset {
+        // rows: [0: (1, 2.0)], [1: (0, 1.0), (2, -1.0)], [2: empty]
+        Dataset::sparse(
+            vec![0, 1, 3, 3],
+            vec![1, 0, 2],
+            vec![2.0, 1.0, -1.0],
+            vec![1.0, -1.0, 1.0],
+            3,
+            Task::Binary,
+        )
+    }
+
+    #[test]
+    fn densify_and_dot_agree() {
+        let ds = tiny_sparse();
+        let w = [0.5f32, 1.5, 2.0];
+        let mut buf = vec![0.0f32; 3];
+        for d in 0..3 {
+            ds.densify_row(d, &mut buf);
+            let dense_dot: f32 = buf.iter().zip(&w).map(|(a, b)| a * b).sum();
+            assert!((ds.dot_row(d, &w) - dense_dot).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn to_dense_roundtrip() {
+        let ds = tiny_sparse();
+        let dd = ds.to_dense();
+        let mut b1 = vec![0.0f32; 3];
+        let mut b2 = vec![0.0f32; 3];
+        for d in 0..3 {
+            ds.densify_row(d, &mut b1);
+            dd.densify_row(d, &mut b2);
+            assert_eq!(b1, b2);
+        }
+    }
+
+    #[test]
+    fn subsets() {
+        let ds = tiny_sparse();
+        let s = ds.subset_rows(2);
+        assert_eq!(s.n, 2);
+        let f = ds.subset_features(2);
+        assert_eq!(f.k, 2);
+        // feature index 2 dropped from row 1
+        assert_eq!(f.sparse_row(1).unwrap().0, &[0u32]);
+    }
+
+    #[test]
+    fn density_math() {
+        let ds = tiny_sparse();
+        assert!((ds.density() - 3.0 / 9.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,68 @@
+//! Data sharding for the worker topology (§4.1: "equally partition the
+//! large data set").
+
+use std::ops::Range;
+
+/// A worker's contiguous slice of the dataset.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Shard {
+    pub worker: usize,
+    pub range: Range<usize>,
+}
+
+impl Shard {
+    pub fn len(&self) -> usize {
+        self.range.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.range.is_empty()
+    }
+}
+
+/// Balanced contiguous partition of `n` rows over `p` workers: the first
+/// `n % p` shards get one extra row. Every row lands in exactly one shard.
+pub fn shard_ranges(n: usize, p: usize) -> Vec<Shard> {
+    assert!(p > 0);
+    let base = n / p;
+    let extra = n % p;
+    let mut out = Vec::with_capacity(p);
+    let mut start = 0;
+    for w in 0..p {
+        let len = base + usize::from(w < extra);
+        out.push(Shard { worker: w, range: start..start + len });
+        start += len;
+    }
+    debug_assert_eq!(start, n);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Property: for any (n, p), shards form a partition — cover all of
+    /// 0..n, are disjoint, contiguous, and balanced within 1.
+    #[test]
+    fn partition_property_sweep() {
+        for n in [0usize, 1, 2, 7, 64, 511, 512, 513, 100_003] {
+            for p in [1usize, 2, 3, 5, 8, 13, 48, 480] {
+                let shards = shard_ranges(n, p);
+                assert_eq!(shards.len(), p);
+                let mut covered = 0usize;
+                let mut prev_end = 0usize;
+                let (mut min_len, mut max_len) = (usize::MAX, 0usize);
+                for s in &shards {
+                    assert_eq!(s.range.start, prev_end, "contiguous");
+                    prev_end = s.range.end;
+                    covered += s.len();
+                    min_len = min_len.min(s.len());
+                    max_len = max_len.max(s.len());
+                }
+                assert_eq!(prev_end, n);
+                assert_eq!(covered, n);
+                assert!(max_len - min_len <= 1, "balanced n={n} p={p}");
+            }
+        }
+    }
+}

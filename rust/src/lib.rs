@@ -1,0 +1,45 @@
+//! PEMSVM — Fast Parallel SVM using Data Augmentation.
+//!
+//! Reproduction of Perkins, Xu, Zhu & Zhang (2015) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the parallel coordinator: leader/worker
+//!   map-reduce over data shards, EM / Gibbs-MC iteration loop, stopping
+//!   rule, baselines, datasets, benchmarks.
+//! * **L2 (`python/compile/model.py`)** — the per-iteration compute graph
+//!   (worker statistics + master solve) written in JAX and AOT-lowered to
+//!   HLO text artifacts.
+//! * **L1 (`python/compile/kernels/`)** — the `Sigma^p = X^T diag(1/gamma) X`
+//!   hot-spot as a Pallas kernel (the paper's GPU kernel, re-thought for
+//!   the MXU).
+//!
+//! Python never runs at training time: the Rust binary loads the
+//! pre-compiled artifacts through PJRT (`xla` crate) and drives
+//! everything. See `DESIGN.md` for the system inventory and the
+//! experiment index, `EXPERIMENTS.md` for paper-vs-measured results.
+//!
+//! Quick start:
+//!
+//! ```no_run
+//! use pemsvm::config::TrainConfig;
+//! use pemsvm::data::synth;
+//!
+//! let ds = synth::alpha_like(10_000, 64, 0);
+//! let cfg = TrainConfig::default().with_options("LIN-EM-CLS").unwrap();
+//! let out = pemsvm::coordinator::train(&ds, &cfg).unwrap();
+//! println!("objective {} after {} iters", out.objective, out.iterations);
+//! ```
+
+pub mod backend;
+pub mod baselines;
+pub mod benchutil;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod linalg;
+pub mod metrics;
+pub mod model;
+pub mod rng;
+pub mod runtime;
+pub mod solver;

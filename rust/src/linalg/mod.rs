@@ -1,0 +1,93 @@
+//! Dense linear-algebra substrate (no external crates offline).
+//!
+//! Everything the master step and the baselines need: a column-dense
+//! row-major matrix, Cholesky factor/solve, triangular solves, and the
+//! symmetric weighted rank-update `S += sum_d a_d x_d x_d^T` that is the
+//! paper's hot spot on the native (CPU/MPI-like) backend.
+
+mod cholesky;
+mod mat;
+mod rank_update;
+
+pub use cholesky::{cholesky_in_place, solve_cholesky, solve_lower, solve_upper, CholeskyError};
+pub use mat::Mat;
+pub use rank_update::{rank_update_dense, rank_update_sparse, symmetrize_from_lower};
+
+/// y = A x for row-major `a` of shape [m, n].
+pub fn matvec(a: &[f32], m: usize, n: usize, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * n);
+    debug_assert_eq!(x.len(), n);
+    debug_assert_eq!(y.len(), m);
+    for (i, yi) in y.iter_mut().enumerate() {
+        let row = &a[i * n..(i + 1) * n];
+        *yi = dot(row, x);
+    }
+}
+
+/// Dot product with 4-way unrolling (the compiler autovectorizes this
+/// shape reliably; see EXPERIMENTS.md §Perf).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
+    let chunks = n / 4;
+    for i in 0..chunks {
+        let j = i * 4;
+        s0 += a[j] * b[j];
+        s1 += a[j + 1] * b[j + 1];
+        s2 += a[j + 2] * b[j + 2];
+        s3 += a[j + 3] * b[j + 3];
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for j in chunks * 4..n {
+        s += a[j] * b[j];
+    }
+    s
+}
+
+/// a += alpha * b (axpy).
+#[inline]
+pub fn axpy(alpha: f32, b: &[f32], a: &mut [f32]) {
+    for (ai, bi) in a.iter_mut().zip(b) {
+        *ai += alpha * bi;
+    }
+}
+
+/// Euclidean norm squared.
+#[inline]
+pub fn norm2_sq(a: &[f32]) -> f32 {
+    dot(a, a)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_matches_naive() {
+        let a: Vec<f32> = (0..103).map(|i| (i as f32) * 0.1).collect();
+        let b: Vec<f32> = (0..103).map(|i| 1.0 - (i as f32) * 0.01).collect();
+        let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - naive).abs() < 1e-2);
+    }
+
+    #[test]
+    fn matvec_identity() {
+        let n = 5;
+        let mut a = vec![0f32; n * n];
+        for i in 0..n {
+            a[i * n + i] = 1.0;
+        }
+        let x: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let mut y = vec![0f32; n];
+        matvec(&a, n, n, &x, &mut y);
+        assert_eq!(x, y);
+    }
+
+    #[test]
+    fn axpy_works() {
+        let mut a = vec![1f32, 2.0, 3.0];
+        axpy(2.0, &[1.0, 1.0, 1.0], &mut a);
+        assert_eq!(a, vec![3.0, 4.0, 5.0]);
+    }
+}

@@ -1,0 +1,262 @@
+//! `pemsvm` — CLI for the parallel data-augmentation SVM.
+//!
+//! Subcommands:
+//!   train <data.svm>  --options LIN-EM-CLS --workers 8 --lambda 1.0 ...
+//!   datagen <out.svm> --dataset alpha --n 10000 --k 64 --seed 0
+//!   eval <data.svm> <model.txt>
+//!   info
+//!
+//! `train` writes the learned weights to `--model-out` (default
+//! `model.txt`, one weight per line; M blocks for multiclass).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use pemsvm::cli::Args;
+use pemsvm::config::{TaskKind, TrainConfig};
+use pemsvm::data::{libsvm, synth, Dataset, Task};
+use pemsvm::model::Weights;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: Vec<String>) -> Result<()> {
+    if argv.is_empty() {
+        print_usage();
+        return Ok(());
+    }
+    let args = Args::parse(argv)?;
+    match args.subcommand.as_str() {
+        "train" => cmd_train(&args),
+        "datagen" => cmd_datagen(&args),
+        "eval" => cmd_eval(&args),
+        "info" => cmd_info(&args),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown subcommand `{other}` (try `pemsvm help`)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "pemsvm — Fast Parallel SVM using Data Augmentation (Perkins et al. 2015)
+
+USAGE:
+  pemsvm train <data.svm> [--options LIN-EM-CLS] [--workers P] [--lambda L]
+               [--backend native|xla] [--reduce flat|tree] [--max-iters I]
+               [--tol T] [--seed S] [--num-classes M] [--model-out model.txt]
+               [--config file.toml] [--test test.svm] [--verbose]
+  pemsvm datagen <out.svm> --dataset alpha|dna|year|mnist|news20
+               [--n N] [--k K] [--m M] [--seed S]
+  pemsvm eval <data.svm> <model.txt> [--task cls|svr|mlt] [--num-classes M]
+  pemsvm info [--artifacts-dir artifacts]"
+    );
+}
+
+fn build_config(args: &Args) -> Result<TrainConfig> {
+    let mut cfg = TrainConfig::default();
+    if let Some(path) = args.get("config") {
+        let doc = pemsvm::config::TomlDoc::load(Path::new(path))?;
+        cfg.apply_toml(&doc)?;
+    }
+    for (key, val) in &args.flags {
+        let k = key.replace('-', "_");
+        match k.as_str() {
+            "config" | "model_out" | "test" => continue,
+            "max_iters" | "options" | "lambda" | "workers" | "seed" | "tol" | "backend"
+            | "reduce" | "burn_in" | "num_classes" | "eps_clamp" | "eps_insensitive"
+            | "artifacts_dir" | "verbose" | "kernel" | "kernel_sigma" | "algo" | "task"
+            | "model" => cfg.set(&k, val)?,
+            other => bail!("unknown flag --{other}"),
+        }
+    }
+    Ok(cfg)
+}
+
+fn task_of(cfg: &TrainConfig) -> Task {
+    match cfg.task {
+        TaskKind::Cls => Task::Binary,
+        TaskKind::Svr => Task::Regression,
+        TaskKind::Mlt => Task::Multiclass(cfg.num_classes),
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let Some(data_path) = args.positional.first() else {
+        bail!("train: missing <data.svm>");
+    };
+    let cfg = build_config(args)?;
+    let t_load = std::time::Instant::now();
+    let ds = libsvm::load(Path::new(data_path), task_of(&cfg), cfg.workers)
+        .with_context(|| format!("loading {data_path}"))?;
+    let load_secs = t_load.elapsed().as_secs_f64();
+    let test = args
+        .get("test")
+        .map(|p| libsvm::load(Path::new(p), task_of(&cfg), cfg.workers))
+        .transpose()?;
+
+    println!(
+        "# {} on {} (N={} K={} density={:.3}) workers={} backend={:?}",
+        cfg.options_string(),
+        data_path,
+        ds.n,
+        ds.k,
+        ds.density(),
+        cfg.workers,
+        cfg.backend
+    );
+    let t_train = std::time::Instant::now();
+    let out = pemsvm::coordinator::train_full(&ds, test.as_ref(), &cfg)?;
+    let train_secs = t_train.elapsed().as_secs_f64();
+
+    if cfg.verbose {
+        for h in &out.history {
+            println!(
+                "iter {:>4}  J = {:<14.4} loss = {:<12.4} err = {:.4}{}",
+                h.iter,
+                h.objective,
+                h.train_loss,
+                h.train_err,
+                h.test_metric.map(|m| format!("  test = {m:.4}")).unwrap_or_default()
+            );
+        }
+    }
+    println!("# load {load_secs:.2}s  train {train_secs:.2}s  iters {}", out.iterations);
+    println!("# phases: {}", out.metrics.report());
+    println!("# final objective {:.4}", out.objective);
+    let train_metric = pemsvm::model::evaluate(&ds, &out.weights);
+    println!(
+        "# train {} = {:.4}",
+        if cfg.task == TaskKind::Svr { "rmse" } else { "accuracy" },
+        train_metric
+    );
+    if let Some(te) = &test {
+        let m = match (&out.kernel_model, cfg.model) {
+            (Some(km), pemsvm::config::ModelKind::Kernel) => km.accuracy(te),
+            _ => pemsvm::model::evaluate(te, &out.weights),
+        };
+        println!(
+            "# test {} = {m:.4}",
+            if cfg.task == TaskKind::Svr { "rmse" } else { "accuracy" }
+        );
+    }
+
+    let model_out = PathBuf::from(args.get("model-out").unwrap_or("model.txt"));
+    save_weights(&out.weights, &model_out)?;
+    println!("# model written to {}", model_out.display());
+    Ok(())
+}
+
+fn save_weights(w: &Weights, path: &Path) -> Result<()> {
+    use std::io::Write;
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    match w {
+        Weights::Single(v) => {
+            writeln!(f, "# pemsvm single {}", v.len())?;
+            for x in v {
+                writeln!(f, "{x}")?;
+            }
+        }
+        Weights::PerClass(m) => {
+            writeln!(f, "# pemsvm perclass {} {}", m.rows, m.cols)?;
+            for c in 0..m.rows {
+                for x in m.row(c) {
+                    writeln!(f, "{x}")?;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+fn load_weights(path: &Path) -> Result<Weights> {
+    let text = std::fs::read_to_string(path)?;
+    let mut lines = text.lines();
+    let header = lines.next().context("empty model file")?;
+    let parts: Vec<&str> = header.split_whitespace().collect();
+    let vals: Vec<f32> = lines.filter_map(|l| l.trim().parse().ok()).collect();
+    match parts.get(2) {
+        Some(&"single") => Ok(Weights::Single(vals)),
+        Some(&"perclass") => {
+            let rows: usize = parts[3].parse()?;
+            let cols: usize = parts[4].parse()?;
+            if vals.len() != rows * cols {
+                bail!("model file: expected {} values, got {}", rows * cols, vals.len());
+            }
+            let mut m = pemsvm::linalg::Mat::zeros(rows, cols);
+            m.data.copy_from_slice(&vals);
+            Ok(Weights::PerClass(m))
+        }
+        _ => bail!("bad model header `{header}`"),
+    }
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let (Some(data_path), Some(model_path)) =
+        (args.positional.first(), args.positional.get(1))
+    else {
+        bail!("eval: need <data.svm> <model.txt>");
+    };
+    let m: usize = args.get_usize("num-classes", 10)?;
+    let task = match args.get("task").unwrap_or("cls") {
+        "cls" => Task::Binary,
+        "svr" => Task::Regression,
+        "mlt" => Task::Multiclass(m),
+        t => bail!("bad task {t}"),
+    };
+    let ds = libsvm::load(Path::new(data_path), task, 4)?;
+    let w = load_weights(Path::new(model_path))?;
+    let metric = pemsvm::model::evaluate(&ds, &w);
+    println!(
+        "{} = {metric:.4}",
+        if task == Task::Regression { "rmse" } else { "accuracy" }
+    );
+    Ok(())
+}
+
+fn cmd_datagen(args: &Args) -> Result<()> {
+    let Some(out_path) = args.positional.first() else {
+        bail!("datagen: missing <out.svm>");
+    };
+    let n = args.get_usize("n", 10_000)?;
+    let k = args.get_usize("k", 64)?;
+    let m = args.get_usize("m", 10)?;
+    let seed = args.get_u64("seed", 0)?;
+    let ds: Dataset = match args.get("dataset").unwrap_or("alpha") {
+        "alpha" => synth::alpha_like(n, k, seed),
+        "dna" => synth::dna_like(n, k, seed),
+        "year" => synth::year_like(n, k, seed),
+        "mnist" => synth::mnist_like(n, k, m, seed),
+        "news20" => synth::news20_like(n, k, seed),
+        other => bail!("unknown dataset `{other}`"),
+    };
+    libsvm::save(&ds, Path::new(out_path))?;
+    println!("wrote {} rows x {} features to {out_path}", ds.n, ds.k);
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = args.get("artifacts-dir").unwrap_or("artifacts");
+    match pemsvm::runtime::Runtime::load(Path::new(dir)) {
+        Ok(rt) => {
+            println!(
+                "artifacts: {} graphs, chunk={}, K family {:?}, M={}",
+                rt.manifest.len(),
+                rt.chunk(),
+                rt.manifest.k_family,
+                rt.manifest.m_classes
+            );
+        }
+        Err(e) => println!("artifacts not available at `{dir}`: {e:#}"),
+    }
+    println!("cores: {}", std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1));
+    Ok(())
+}

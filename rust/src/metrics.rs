@@ -1,0 +1,162 @@
+//! Phase timers + counters. The phase set mirrors the rows of the
+//! paper's Table 1 (Draw gamma / Calculate mu_p, Sigma_p / Reduce /
+//! Draw mu / Broadcast mu) so the itertime bench can print an empirical
+//! version of the asymptotic table.
+
+use std::time::{Duration, Instant};
+
+/// Per-iteration phases, in Table-1 order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// gamma draw/update (EM Eq. 9 / MC Eq. 5)
+    DrawGamma,
+    /// local mu^p and Sigma^p accumulation (Eq. 40)
+    LocalStats,
+    /// partial-sum reduction to the leader
+    Reduce,
+    /// master solve / posterior draw (Eq. 6)
+    DrawMu,
+    /// w broadcast back to workers
+    Broadcast,
+    /// objective bookkeeping, stopping checks
+    Other,
+}
+
+pub const PHASES: [Phase; 6] = [
+    Phase::DrawGamma,
+    Phase::LocalStats,
+    Phase::Reduce,
+    Phase::DrawMu,
+    Phase::Broadcast,
+    Phase::Other,
+];
+
+impl Phase {
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::DrawGamma => "draw_gamma",
+            Phase::LocalStats => "local_stats",
+            Phase::Reduce => "reduce",
+            Phase::DrawMu => "draw_mu",
+            Phase::Broadcast => "broadcast",
+            Phase::Other => "other",
+        }
+    }
+
+    fn idx(self) -> usize {
+        match self {
+            Phase::DrawGamma => 0,
+            Phase::LocalStats => 1,
+            Phase::Reduce => 2,
+            Phase::DrawMu => 3,
+            Phase::Broadcast => 4,
+            Phase::Other => 5,
+        }
+    }
+}
+
+/// Accumulated wall-clock per phase + iteration count.
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    totals: [Duration; 6],
+    pub iterations: usize,
+    /// number of reduce rounds (== collects; > iterations for MLT)
+    pub reduces: usize,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, phase: Phase, d: Duration) {
+        self.totals[phase.idx()] += d;
+    }
+
+    /// Time a closure into `phase`.
+    pub fn time<T>(&mut self, phase: Phase, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(phase, t0.elapsed());
+        out
+    }
+
+    pub fn total(&self, phase: Phase) -> Duration {
+        self.totals[phase.idx()]
+    }
+
+    pub fn grand_total(&self) -> Duration {
+        self.totals.iter().sum()
+    }
+
+    /// Merge another worker's metrics (phases accumulate; iterations max).
+    pub fn merge(&mut self, other: &Metrics) {
+        for (a, b) in self.totals.iter_mut().zip(&other.totals) {
+            *a += *b;
+        }
+        self.iterations = self.iterations.max(other.iterations);
+        self.reduces += other.reduces;
+    }
+
+    /// Simulated parallel wall-clock (seconds): per-iteration
+    /// max-worker step time plus the serial reduce/solve/broadcast
+    /// phases. Equals real wall-clock shape when workers run threaded on
+    /// enough cores; in `simulate_cluster` mode it is the cluster cost
+    /// model's prediction.
+    pub fn simulated_secs(&self) -> f64 {
+        self.grand_total().as_secs_f64()
+    }
+
+    /// One-line report, Table-1 style.
+    pub fn report(&self) -> String {
+        let mut s = format!("iters={} ", self.iterations);
+        for p in PHASES {
+            let t = self.total(p);
+            if !t.is_zero() {
+                s.push_str(&format!("{}={:.1}ms ", p.name(), t.as_secs_f64() * 1e3));
+            }
+        }
+        s.trim_end().to_string()
+    }
+}
+
+/// Simple stopwatch for benches.
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch(Instant::now())
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_and_merges() {
+        let mut m = Metrics::new();
+        m.add(Phase::Reduce, Duration::from_millis(5));
+        m.add(Phase::Reduce, Duration::from_millis(7));
+        m.iterations = 3;
+        let mut o = Metrics::new();
+        o.add(Phase::Reduce, Duration::from_millis(1));
+        o.iterations = 2;
+        m.merge(&o);
+        assert_eq!(m.total(Phase::Reduce), Duration::from_millis(13));
+        assert_eq!(m.iterations, 3);
+    }
+
+    #[test]
+    fn time_closure() {
+        let mut m = Metrics::new();
+        let v = m.time(Phase::DrawMu, || 42);
+        assert_eq!(v, 42);
+        assert!(m.total(Phase::DrawMu) > Duration::ZERO);
+        assert!(m.report().contains("draw_mu"));
+    }
+}

@@ -1,0 +1,222 @@
+//! Model-level definitions: discriminant functions, losses, objectives,
+//! prediction, and evaluation metrics for the three tasks.
+
+use crate::data::{Dataset, Task};
+use crate::linalg::Mat;
+
+/// The learned parameters: one weight vector for CLS/SVR, M of them for
+/// the Crammer-Singer model, or dual coefficients omega for KRN (same
+/// representation, interpreted against the Gram matrix).
+#[derive(Clone, Debug)]
+pub enum Weights {
+    Single(Vec<f32>),
+    /// row-major [m, k]
+    PerClass(Mat),
+}
+
+impl Weights {
+    pub fn single(&self) -> &[f32] {
+        match self {
+            Weights::Single(w) => w,
+            _ => panic!("expected single weight vector"),
+        }
+    }
+
+    pub fn per_class(&self) -> &Mat {
+        match self {
+            Weights::PerClass(w) => w,
+            _ => panic!("expected per-class weights"),
+        }
+    }
+
+    pub fn norm_sq(&self) -> f32 {
+        match self {
+            Weights::Single(w) => crate::linalg::norm2_sq(w),
+            Weights::PerClass(w) => crate::linalg::norm2_sq(&w.data),
+        }
+    }
+}
+
+/// hinge(z) = max(0, 1 - z)
+#[inline]
+pub fn hinge(margin: f32) -> f32 {
+    (1.0 - margin).max(0.0)
+}
+
+/// epsilon-insensitive loss |r|_eps = max(0, |r| - eps)
+#[inline]
+pub fn eps_insensitive(r: f32, eps: f32) -> f32 {
+    (r.abs() - eps).max(0.0)
+}
+
+/// Full primal objective for binary CLS (Eq. 1):
+/// J = lambda/2 ||w||^2 + 2 sum_d hinge(y_d w.x_d)
+pub fn objective_cls(ds: &Dataset, w: &[f32], lambda: f32) -> f64 {
+    let mut loss = 0f64;
+    for d in 0..ds.n {
+        loss += hinge(ds.labels[d] * ds.dot_row(d, w)) as f64;
+    }
+    0.5 * lambda as f64 * crate::linalg::norm2_sq(w) as f64 + 2.0 * loss
+}
+
+/// SVR objective (Eq. 20).
+pub fn objective_svr(ds: &Dataset, w: &[f32], lambda: f32, eps: f32) -> f64 {
+    let mut loss = 0f64;
+    for d in 0..ds.n {
+        loss += eps_insensitive(ds.labels[d] - ds.dot_row(d, w), eps) as f64;
+    }
+    0.5 * lambda as f64 * crate::linalg::norm2_sq(w) as f64 + 2.0 * loss
+}
+
+/// Crammer-Singer objective (Eq. 30) with 0/1 cost Delta.
+pub fn objective_mlt(ds: &Dataset, w: &Mat, lambda: f32) -> f64 {
+    let m = w.rows;
+    let mut loss = 0f64;
+    let mut scores = vec![0f32; m];
+    for d in 0..ds.n {
+        class_scores(ds, d, w, &mut scores);
+        let yd = ds.labels[d] as usize;
+        let mut best = f32::NEG_INFINITY;
+        for (c, &s) in scores.iter().enumerate() {
+            let delta = if c == yd { 0.0 } else { 1.0 };
+            best = best.max(delta + s - scores[yd]);
+        }
+        loss += best.max(0.0) as f64;
+    }
+    0.5 * lambda as f64 * crate::linalg::norm2_sq(&w.data) as f64 + 2.0 * loss
+}
+
+/// scores[c] = w_c . x_d
+pub fn class_scores(ds: &Dataset, d: usize, w: &Mat, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), w.rows);
+    out.fill(0.0);
+    ds.for_nonzero(d, |j, v| {
+        for (c, o) in out.iter_mut().enumerate() {
+            *o += v * w[(c, j as usize)];
+        }
+    });
+}
+
+/// Binary accuracy of w on ds.
+pub fn accuracy_cls(ds: &Dataset, w: &[f32]) -> f64 {
+    let correct = (0..ds.n)
+        .filter(|&d| ds.labels[d] * ds.dot_row(d, w) > 0.0)
+        .count();
+    correct as f64 / ds.n.max(1) as f64
+}
+
+/// Multiclass accuracy.
+pub fn accuracy_mlt(ds: &Dataset, w: &Mat) -> f64 {
+    let mut scores = vec![0f32; w.rows];
+    let correct = (0..ds.n)
+        .filter(|&d| {
+            class_scores(ds, d, w, &mut scores);
+            let pred = scores
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .map(|(c, _)| c)
+                .unwrap();
+            pred == ds.labels[d] as usize
+        })
+        .count();
+    correct as f64 / ds.n.max(1) as f64
+}
+
+/// Root-mean-square error for SVR.
+pub fn rmse(ds: &Dataset, w: &[f32]) -> f64 {
+    let mut s = 0f64;
+    for d in 0..ds.n {
+        let r = (ds.labels[d] - ds.dot_row(d, w)) as f64;
+        s += r * r;
+    }
+    (s / ds.n.max(1) as f64).sqrt()
+}
+
+/// Accuracy/RMSE dispatch on the dataset's task.
+pub fn evaluate(ds: &Dataset, w: &Weights) -> f64 {
+    match (ds.task, w) {
+        (Task::Binary, Weights::Single(w)) => accuracy_cls(ds, w),
+        (Task::Regression, Weights::Single(w)) => rmse(ds, w),
+        (Task::Multiclass(_), Weights::PerClass(w)) => accuracy_mlt(ds, w),
+        _ => panic!("weights/task mismatch"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn hinge_and_eps_loss() {
+        assert_eq!(hinge(2.0), 0.0);
+        assert_eq!(hinge(0.0), 1.0);
+        assert_eq!(hinge(-1.0), 2.0);
+        assert_eq!(eps_insensitive(0.2, 0.3), 0.0);
+        assert!((eps_insensitive(-0.5, 0.3) - 0.2).abs() < 1e-7);
+    }
+
+    #[test]
+    fn perfect_separator_has_low_objective() {
+        let ds = synth::gaussian_margin(500, 8, 1, 3.0, 0.0);
+        // w along the planted direction should classify well; estimate it
+        // as the class-mean difference
+        let mut w = vec![0f32; 8];
+        let mut buf = vec![0f32; 8];
+        for d in 0..ds.n {
+            ds.densify_row(d, &mut buf);
+            for j in 0..8 {
+                w[j] += ds.labels[d] * buf[j] / ds.n as f32;
+            }
+        }
+        // scale up to get margins > 1
+        w.iter_mut().for_each(|v| *v *= 10.0);
+        assert!(accuracy_cls(&ds, &w) > 0.95);
+        let j_sep = objective_cls(&ds, &w, 1e-6);
+        let j_zero = objective_cls(&ds, &vec![0.0; 8], 1e-6);
+        assert!(j_sep < j_zero);
+    }
+
+    #[test]
+    fn mlt_scores_and_accuracy() {
+        let ds = synth::mnist_like(300, 12, 4, 3);
+        // prototype classifier: mean of each class
+        let mut w = Mat::zeros(4, 12);
+        let mut counts = [0f32; 4];
+        let mut buf = vec![0f32; 12];
+        for d in 0..ds.n {
+            let c = ds.labels[d] as usize;
+            counts[c] += 1.0;
+            ds.densify_row(d, &mut buf);
+            for j in 0..12 {
+                w[(c, j)] += buf[j];
+            }
+        }
+        for c in 0..4 {
+            for j in 0..12 {
+                w[(c, j)] /= counts[c].max(1.0);
+            }
+        }
+        assert!(accuracy_mlt(&ds, &w) > 0.7);
+    }
+
+    #[test]
+    fn rmse_of_true_weights_small() {
+        let ds = synth::year_like(2000, 10, 4);
+        // least squares fit via normal equations as a sanity reference
+        let mut a = Mat::zeros(10, 10);
+        let mut b = vec![0f32; 10];
+        let mut buf = vec![0f32; 10];
+        for d in 0..ds.n {
+            ds.densify_row(d, &mut buf);
+            crate::linalg::rank_update_dense(&mut a, &buf, 1, 10, &[1.0]);
+            crate::linalg::axpy(ds.labels[d], &buf, &mut b);
+        }
+        crate::linalg::symmetrize_from_lower(&mut a);
+        a.add_scaled_eye(1.0);
+        let w = crate::linalg::solve_cholesky(&mut a, &b).unwrap();
+        assert!(rmse(&ds, &w) < 0.6);
+        assert!(rmse(&ds, &vec![0.0; 10]) > rmse(&ds, &w));
+    }
+}

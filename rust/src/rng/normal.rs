@@ -1,0 +1,81 @@
+//! Standard normal variates via Marsaglia's polar method, with the spare
+//! cached (the usual Box–Muller-family trick).
+
+use super::Pcg64;
+
+/// Wraps a [`Pcg64`] and produces N(0, 1) draws.
+pub struct NormalSource {
+    spare: Option<f64>,
+}
+
+impl Default for NormalSource {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl NormalSource {
+    pub fn new() -> Self {
+        NormalSource { spare: None }
+    }
+
+    /// One N(0,1) draw, consuming entropy from `g`.
+    #[inline]
+    pub fn next(&mut self, g: &mut Pcg64) -> f64 {
+        if let Some(s) = self.spare.take() {
+            return s;
+        }
+        loop {
+            let u = 2.0 * g.next_f64() - 1.0;
+            let v = 2.0 * g.next_f64() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                let m = (-2.0 * s.ln() / s).sqrt();
+                self.spare = Some(v * m);
+                return u * m;
+            }
+        }
+    }
+
+    /// Fill `out` with N(0,1) f32 draws.
+    pub fn fill_f32(&mut self, g: &mut Pcg64, out: &mut [f32]) {
+        for o in out {
+            *o = self.next(g) as f32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn moments() {
+        let mut g = Pcg64::new(9);
+        let mut ns = NormalSource::new();
+        let n = 200_000;
+        let (mut s1, mut s2, mut s3, mut s4) = (0.0, 0.0, 0.0, 0.0);
+        for _ in 0..n {
+            let x = ns.next(&mut g);
+            s1 += x;
+            s2 += x * x;
+            s3 += x * x * x;
+            s4 += x * x * x * x;
+        }
+        let nf = n as f64;
+        assert!((s1 / nf).abs() < 0.01);
+        assert!((s2 / nf - 1.0).abs() < 0.02);
+        assert!((s3 / nf).abs() < 0.05);
+        assert!((s4 / nf - 3.0).abs() < 0.15); // kurtosis of N(0,1)
+    }
+
+    #[test]
+    fn tail_probability() {
+        let mut g = Pcg64::new(10);
+        let mut ns = NormalSource::new();
+        let n = 100_000;
+        let beyond2 = (0..n).filter(|_| ns.next(&mut g).abs() > 2.0).count();
+        let frac = beyond2 as f64 / n as f64;
+        assert!((frac - 0.0455).abs() < 0.005, "P(|Z|>2) = {frac}");
+    }
+}

@@ -1,0 +1,125 @@
+//! PCG-XSL-RR 128/64: O'Neill's PCG64. 128-bit LCG state, 64-bit output
+//! via xor-fold + random rotation. Small, fast, and good enough that the
+//! MC sampler's mixing is limited by the chain, not the generator.
+
+const MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+/// PCG64 generator. One instance per worker thread (not `Sync`; cheap to
+/// clone for checkpointing).
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128, // must be odd
+}
+
+impl Pcg64 {
+    /// Default stream.
+    pub fn new(seed: u64) -> Self {
+        Self::new_stream(seed, 0)
+    }
+
+    /// Independent stream selected by `stream` (distinct increments give
+    /// statistically independent sequences in the PCG family).
+    pub fn new_stream(seed: u64, stream: u64) -> Self {
+        let seq = ((stream as u128) << 64) | 0xda3e_39cb_94b9_5bdb;
+        let mut g = Pcg64 { state: 0, inc: (seq << 1) | 1 };
+        g.state = g.inc.wrapping_add(seed as u128);
+        g.next_u64();
+        // extra scramble so seed=0/stream=0 doesn't start near the fixed point
+        g.state = g.state.wrapping_add((seed as u128) << 64);
+        g.next_u64();
+        g
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform in the open interval (0, 1): never exactly 0 or 1, safe to
+    /// feed to log/division in samplers.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (((self.next_u64() >> 11) as f64) + 0.5) * (1.0 / 9_007_199_254_740_992.0)
+    }
+
+    /// Uniform f32 in (0, 1).
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (((self.next_u64() >> 40) as f32) + 0.5) * (1.0 / 16_777_216.0)
+    }
+
+    /// Uniform integer in [0, n) by Lemire reduction (unbiased enough for
+    /// shuffles; n is tiny relative to 2^64).
+    #[inline]
+    pub fn next_below(&mut self, n: u64) -> u64 {
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_range_and_mean() {
+        let mut g = Pcg64::new(1);
+        let n = 100_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let x = g.next_f64();
+            assert!(x > 0.0 && x < 1.0);
+            sum += x;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.005, "mean {mean}");
+    }
+
+    #[test]
+    fn next_below_is_in_range_and_covers() {
+        let mut g = Pcg64::new(2);
+        let mut seen = [false; 7];
+        for _ in 0..1000 {
+            let v = g.next_below(7) as usize;
+            assert!(v < 7);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn shuffle_is_a_permutation() {
+        let mut g = Pcg64::new(3);
+        let mut v: Vec<u32> = (0..100).collect();
+        g.shuffle(&mut v);
+        let mut s = v.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn equidistribution_chi2ish() {
+        // 16 buckets over u64 high bits; crude chi^2 sanity bound
+        let mut g = Pcg64::new(4);
+        let mut counts = [0u32; 16];
+        let n = 160_000;
+        for _ in 0..n {
+            counts[(g.next_u64() >> 60) as usize] += 1;
+        }
+        let exp = n as f64 / 16.0;
+        let chi2: f64 = counts.iter().map(|&c| (c as f64 - exp).powi(2) / exp).sum();
+        assert!(chi2 < 50.0, "chi2 {chi2}"); // df=15, p~1e-5 cut
+    }
+}

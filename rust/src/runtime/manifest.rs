@@ -1,0 +1,156 @@
+//! `artifacts/manifest.json` — the contract between `python/compile/aot.py`
+//! and the Rust runtime.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::Json;
+
+/// One artifact's metadata.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    /// "lin_step" | "svr_step" | "mlt_step" | "solve" | "predict" | "predict_mlt"
+    pub kind: String,
+    /// "em" | "mc"
+    pub variant: String,
+    pub k: usize,
+    pub chunk: usize,
+    pub m: usize,
+    pub num_inputs: usize,
+    pub num_outputs: usize,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub chunk: usize,
+    pub k_family: Vec<usize>,
+    pub m_classes: usize,
+    by_name: HashMap<String, ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text)?;
+        let need = |v: Option<usize>, what: &str| v.ok_or_else(|| anyhow!("manifest: missing {what}"));
+        let chunk = need(j.get("chunk").and_then(Json::as_usize), "chunk")?;
+        let m_classes = need(j.get("m_classes").and_then(Json::as_usize), "m_classes")?;
+        let mut k_family: Vec<usize> = j
+            .get("k_family")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest: missing k_family"))?
+            .iter()
+            .filter_map(Json::as_usize)
+            .collect();
+        k_family.sort_unstable();
+
+        let mut by_name = HashMap::new();
+        for a in j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest: missing artifacts"))?
+        {
+            let s = |key: &str| -> Result<String> {
+                a.get(key)
+                    .and_then(Json::as_str)
+                    .map(str::to_string)
+                    .ok_or_else(|| anyhow!("artifact missing `{key}`"))
+            };
+            let u = |key: &str| -> Result<usize> {
+                a.get(key)
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("artifact missing `{key}`"))
+            };
+            let meta = ArtifactMeta {
+                name: s("name")?,
+                file: s("file")?,
+                kind: s("kind")?,
+                variant: s("variant")?,
+                k: u("k")?,
+                chunk: u("chunk")?,
+                m: u("m")?,
+                num_inputs: a
+                    .get("inputs")
+                    .and_then(Json::as_arr)
+                    .map(|x| x.len())
+                    .ok_or_else(|| anyhow!("artifact missing `inputs`"))?,
+                num_outputs: u("num_outputs")?,
+            };
+            by_name.insert(meta.name.clone(), meta);
+        }
+        Ok(Manifest { chunk, k_family, m_classes, by_name })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.by_name.get(name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_name.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_name.is_empty()
+    }
+
+    /// Artifact name for a worker step.
+    pub fn step_name(kind: &str, variant: &str, k: usize, m: usize) -> String {
+        match kind {
+            "mlt_step" => format!("mlt_{variant}_step_k{k}_m{m}"),
+            "lin_step" => format!("lin_{variant}_step_k{k}"),
+            "lin_step_jnp" => format!("lin_{variant}_step_jnp_k{k}"),
+            "svr_step" => format!("svr_{variant}_step_k{k}"),
+            _ => unreachable!("not a step kind: {kind}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "chunk": 512, "k_family": [64, 16], "m_classes": 10,
+        "artifacts": [
+            {"name": "lin_em_step_k16", "file": "lin_em_step_k16.hlo.txt",
+             "kind": "lin_step", "variant": "em", "k": 16, "chunk": 512, "m": 0,
+             "num_outputs": 4, "sha256": "ab",
+             "inputs": [{"shape": [512,16], "dtype": "float32"},
+                        {"shape": [512], "dtype": "float32"},
+                        {"shape": [512], "dtype": "float32"},
+                        {"shape": [16], "dtype": "float32"},
+                        {"shape": [1], "dtype": "float32"}]}
+        ]}"#;
+
+    #[test]
+    fn parses_and_sorts_family() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.chunk, 512);
+        assert_eq!(m.k_family, vec![16, 64]);
+        let a = m.get("lin_em_step_k16").unwrap();
+        assert_eq!(a.num_inputs, 5);
+        assert_eq!(a.num_outputs, 4);
+        assert_eq!(m.len(), 1);
+    }
+
+    #[test]
+    fn step_names() {
+        assert_eq!(Manifest::step_name("lin_step", "em", 16, 0), "lin_em_step_k16");
+        assert_eq!(Manifest::step_name("mlt_step", "mc", 64, 10), "mlt_mc_step_k64_m10");
+    }
+
+    #[test]
+    fn missing_fields_rejected() {
+        assert!(Manifest::parse(r#"{"chunk": 1}"#).is_err());
+    }
+}

@@ -1,0 +1,204 @@
+//! PJRT runtime: load the AOT HLO-text artifacts and execute them.
+//!
+//! One shared CPU [`xla::PjRtClient`] per process; executables are
+//! compiled lazily per artifact and cached. The `xla` crate's handles
+//! wrap raw pointers without `Send`/`Sync`, so the runtime serializes
+//! device access behind a mutex — which is also the honest model of the
+//! paper's GPU backend (§5.7.2): one accelerator shared by all workers,
+//! partitions processed as a queue. (PJRT CPU parallelizes *inside* an
+//! execution with its own thread pool.)
+
+mod manifest;
+
+pub use manifest::{ArtifactMeta, Manifest};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Mutex, OnceLock};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+struct Device {
+    client: xla::PjRtClient,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+/// Handle to the artifacts + compiled-executable cache.
+///
+/// Typically wrapped in `Arc` (or obtained via [`global`]) and shared by
+/// every worker thread.
+pub struct Runtime {
+    dir: PathBuf,
+    pub manifest: Manifest,
+    device: Mutex<Device>,
+}
+
+// SAFETY: all access to the client / executables goes through the
+// `device` mutex; the raw PJRT handles never escape it. PJRT itself is
+// thread-safe, the mutex is belt-and-braces for the wrapper types.
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+impl Runtime {
+    /// Load `manifest.json` from `dir` and create the CPU client.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime {
+            dir: dir.to_path_buf(),
+            manifest,
+            device: Mutex::new(Device { client, cache: HashMap::new() }),
+        })
+    }
+
+    /// Rows per worker-step execution.
+    pub fn chunk(&self) -> usize {
+        self.manifest.chunk
+    }
+
+    /// Smallest artifact K that fits `k` features. Feature padding is
+    /// exact: zero columns contribute nothing to the statistics and the
+    /// lam*I block keeps the padded solve well-posed with w_pad = 0.
+    pub fn pad_k(&self, k: usize) -> Result<usize> {
+        self.manifest
+            .k_family
+            .iter()
+            .copied()
+            .find(|&fk| fk >= k)
+            .ok_or_else(|| {
+                anyhow!(
+                    "K={k} exceeds the largest artifact K={} (regenerate artifacts)",
+                    self.manifest.k_family.last().copied().unwrap_or(0)
+                )
+            })
+    }
+
+    /// Execute artifact `name` on `args`, returning the untupled outputs.
+    /// Accepts owned literals or references (`Borrow<Literal>`).
+    pub fn execute<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        name: &str,
+        args: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        let meta = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact `{name}`"))?;
+        if meta.num_inputs != args.len() {
+            bail!("artifact `{name}` wants {} inputs, got {}", meta.num_inputs, args.len());
+        }
+        let mut dev = self.device.lock().unwrap();
+        if !dev.cache.contains_key(name) {
+            let path = self.dir.join(&meta.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = dev
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+            dev.cache.insert(name.to_string(), exe);
+        }
+        let exe = dev.cache.get(name).unwrap();
+        let borrowed: Vec<&xla::Literal> = args.iter().map(|a| a.borrow()).collect();
+        let result = exe
+            .execute::<&xla::Literal>(&borrowed)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {name}: {e:?}"))?;
+        tuple.to_tuple().map_err(|e| anyhow!("untuple {name}: {e:?}"))
+    }
+
+    /// Number of artifacts compiled so far (for tests/metrics).
+    pub fn compiled_count(&self) -> usize {
+        self.device.lock().unwrap().cache.len()
+    }
+}
+
+/// Process-wide runtime singleton keyed by artifacts dir — PJRT CPU
+/// clients are expensive (each owns a thread pool), so examples, tests
+/// and benches share one.
+pub fn global(dir: &Path) -> Result<&'static Runtime> {
+    static CELL: OnceLock<Mutex<HashMap<PathBuf, &'static Runtime>>> = OnceLock::new();
+    let map = CELL.get_or_init(|| Mutex::new(HashMap::new()));
+    let mut map = map.lock().unwrap();
+    if let Some(rt) = map.get(dir) {
+        return Ok(rt);
+    }
+    let rt: &'static Runtime = Box::leak(Box::new(Runtime::load(dir)?));
+    map.insert(dir.to_path_buf(), rt);
+    Ok(rt)
+}
+
+/// Build an f32 literal of the given logical shape from a flat slice.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    if dims.len() == 1 {
+        debug_assert_eq!(dims[0] as usize, data.len());
+        return Ok(lit);
+    }
+    lit.reshape(dims).map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+/// Fetch an f32 output.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn load_and_execute_predict() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let rt = global(&dir).unwrap();
+        let chunk = rt.chunk();
+        let k = 16usize;
+        // x = row of ones for d=0, zeros elsewhere; w = [0..k)
+        let mut x = vec![0f32; chunk * k];
+        for j in 0..k {
+            x[j] = 1.0;
+        }
+        let w: Vec<f32> = (0..k).map(|j| j as f32).collect();
+        let out = rt
+            .execute(
+                "predict_k16",
+                &[
+                    literal_f32(&x, &[chunk as i64, k as i64]).unwrap(),
+                    literal_f32(&w, &[k as i64]).unwrap(),
+                ],
+            )
+            .unwrap();
+        let scores = to_vec_f32(&out[0]).unwrap();
+        assert_eq!(scores.len(), chunk);
+        let want: f32 = (0..k).map(|j| j as f32).sum();
+        assert!((scores[0] - want).abs() < 1e-4);
+        assert_eq!(scores[1], 0.0);
+        assert!(rt.compiled_count() >= 1);
+    }
+
+    #[test]
+    fn pad_k_picks_smallest_fit() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let rt = global(&dir).unwrap();
+        assert_eq!(rt.pad_k(1).unwrap(), 16);
+        assert_eq!(rt.pad_k(16).unwrap(), 16);
+        assert_eq!(rt.pad_k(17).unwrap(), 64);
+        assert_eq!(rt.pad_k(500).unwrap(), 1024);
+        assert!(rt.pad_k(5000).is_err());
+    }
+}

@@ -1,0 +1,321 @@
+//! Native worker steps: gamma update + local statistics over a shard
+//! range (the paper's MPI per-process computation, §4.1). These mirror
+//! the L2 jax graphs in `python/compile/model.py` — the cross-backend
+//! integration tests assert they produce the same statistics.
+
+use std::ops::Range;
+
+use crate::data::Dataset;
+use crate::linalg::{rank_update_dense, rank_update_sparse};
+use crate::model::hinge;
+
+use super::gamma::GammaMode;
+use super::PartialStats;
+
+/// Accumulate one datum into the partials (dispatching on sparsity).
+#[inline]
+fn accumulate(ds: &Dataset, d: usize, a_d: f32, b_d: f32, out: &mut PartialStats, buf: &mut [f32]) {
+    if let Some((idx, val)) = ds.sparse_row(d) {
+        rank_update_sparse(&mut out.sigma, idx, val, a_d);
+        if b_d != 0.0 {
+            for (p, &i) in idx.iter().enumerate() {
+                out.mu[i as usize] += b_d * val[p];
+            }
+        }
+    } else {
+        ds.densify_row(d, buf);
+        rank_update_dense(&mut out.sigma, buf, 1, ds.k, &[a_d]);
+        if b_d != 0.0 {
+            crate::linalg::axpy(b_d, buf, &mut out.mu);
+        }
+    }
+}
+
+/// Dense fast path shared by the three steps: given per-row weights
+/// (a_d, b_d) already computed for `range`, do the Sigma^p rank update
+/// in one blocked call (the rank-4 micro-kernel; EXPERIMENTS.md §Perf)
+/// and the mu^p accumulation as a second streaming pass.
+fn accumulate_dense_block(
+    data: &[f32],
+    k: usize,
+    range: &Range<usize>,
+    aw: &[f32],
+    bw: &[f32],
+    out: &mut PartialStats,
+) {
+    let rows = &data[range.start * k..range.end * k];
+    rank_update_dense(&mut out.sigma, rows, range.len(), k, aw);
+    for (r, &b_d) in bw.iter().enumerate() {
+        if b_d != 0.0 {
+            crate::linalg::axpy(b_d, &rows[r * k..(r + 1) * k], &mut out.mu);
+        }
+    }
+}
+
+/// Binary-classification step (Eqs. 5/9 + 40) over `range`.
+///
+/// `out` must be zeroed (`reset`) by the caller; `obj` gets the hinge
+/// sum and `aux` the training-error count at the current `w`.
+pub fn lin_step(
+    ds: &Dataset,
+    range: Range<usize>,
+    w: &[f32],
+    eps: f32,
+    mode: &mut GammaMode,
+    out: &mut PartialStats,
+) {
+    if let crate::data::Features::Dense { data } = &ds.features {
+        // dense fast path: weights first, then one blocked rank update
+        let k = ds.k;
+        let nn = range.len();
+        let (mut aw, mut bw) = (vec![0f32; nn], vec![0f32; nn]);
+        for (r, d) in range.clone().enumerate() {
+            let y = ds.labels[d];
+            let score = crate::linalg::dot(&data[d * k..(d + 1) * k], w);
+            let margin = 1.0 - y * score;
+            out.obj += hinge(y * score) as f64;
+            out.aux += f64::from(y * score <= 0.0);
+            let inv_g = mode.inv_gamma(margin.abs(), eps);
+            aw[r] = inv_g;
+            bw[r] = y * (1.0 + inv_g);
+        }
+        accumulate_dense_block(data, k, &range, &aw, &bw, out);
+        return;
+    }
+    let mut buf = vec![0f32; ds.k];
+    for d in range {
+        let y = ds.labels[d];
+        let score = ds.dot_row(d, w);
+        let margin = 1.0 - y * score;
+        out.obj += hinge(y * score) as f64;
+        out.aux += f64::from(y * score <= 0.0);
+        let inv_g = mode.inv_gamma(margin.abs(), eps);
+        let a_d = inv_g;
+        let b_d = y * (1.0 + inv_g);
+        accumulate(ds, d, a_d, b_d, out, &mut buf);
+    }
+}
+
+/// SVR step (Lemma 3 + Eqs. 25-28). `obj` gets the eps-insensitive loss
+/// sum, `aux` the squared-residual sum (for RMSE reporting).
+pub fn svr_step(
+    ds: &Dataset,
+    range: Range<usize>,
+    w: &[f32],
+    eps: f32,
+    eps_ins: f32,
+    mode: &mut GammaMode,
+    out: &mut PartialStats,
+) {
+    if let crate::data::Features::Dense { data } = &ds.features {
+        let k = ds.k;
+        let nn = range.len();
+        let (mut aw, mut bw) = (vec![0f32; nn], vec![0f32; nn]);
+        for (ri, d) in range.clone().enumerate() {
+            let y = ds.labels[d];
+            let r = y - crate::linalg::dot(&data[d * k..(d + 1) * k], w);
+            out.obj += crate::model::eps_insensitive(r, eps_ins) as f64;
+            out.aux += (r * r) as f64;
+            let inv_g = mode.inv_gamma((r - eps_ins).abs(), eps);
+            let inv_o = mode.inv_gamma((r + eps_ins).abs(), eps);
+            aw[ri] = inv_g + inv_o;
+            bw[ri] = (y - eps_ins) * inv_g + (y + eps_ins) * inv_o;
+        }
+        accumulate_dense_block(data, k, &range, &aw, &bw, out);
+        return;
+    }
+    let mut buf = vec![0f32; ds.k];
+    for d in range {
+        let y = ds.labels[d];
+        let r = y - ds.dot_row(d, w);
+        out.obj += crate::model::eps_insensitive(r, eps_ins) as f64;
+        out.aux += (r * r) as f64;
+        let inv_g = mode.inv_gamma((r - eps_ins).abs(), eps);
+        let inv_o = mode.inv_gamma((r + eps_ins).abs(), eps);
+        let a_d = inv_g + inv_o;
+        let b_d = (y - eps_ins) * inv_g + (y + eps_ins) * inv_o;
+        accumulate(ds, d, a_d, b_d, out, &mut buf);
+    }
+}
+
+/// Crammer-Singer per-class step (§3.3, Eqs. 36-39) for target class
+/// `yidx` given all current class weights `w_all` ([m, k] row-major).
+///
+/// `obj` gets the CS loss sum and `aux` the error count — only
+/// meaningful once per datum, so the driver reads them from the
+/// `yidx == 0` call.
+pub fn mlt_step(
+    ds: &Dataset,
+    range: Range<usize>,
+    w_all: &crate::linalg::Mat,
+    yidx: usize,
+    eps: f32,
+    mode: &mut GammaMode,
+    out: &mut PartialStats,
+) {
+    let m = w_all.rows;
+    let dense_data = match &ds.features {
+        crate::data::Features::Dense { data } => Some(data),
+        _ => None,
+    };
+    let nn = range.len();
+    let (mut aw, mut bw) = (vec![0f32; nn], vec![0f32; nn]);
+    let mut buf = vec![0f32; ds.k];
+    let mut scores = vec![0f32; m];
+    for d in range.clone() {
+        let yd = ds.labels[d] as usize;
+        crate::model::class_scores(ds, d, w_all, &mut scores);
+
+        // zeta_d(yidx) = max_{y' != yidx} (score[y'] + Delta_d(y'))
+        let mut zeta = f32::NEG_INFINITY;
+        let mut best_aug = f32::NEG_INFINITY;
+        let mut argmax = 0usize;
+        let mut best_score = f32::NEG_INFINITY;
+        for (c, &s) in scores.iter().enumerate() {
+            let aug = s + if c == yd { 0.0 } else { 1.0 };
+            if aug > best_aug {
+                best_aug = aug;
+            }
+            if s > best_score {
+                best_score = s;
+                argmax = c;
+            }
+            if c != yidx && aug > zeta {
+                zeta = aug;
+            }
+        }
+        if yidx == 0 {
+            out.obj += (best_aug - scores[yd]).max(0.0) as f64;
+            out.aux += f64::from(argmax != yd);
+        }
+
+        let delta_y = if yidx == yd { 0.0 } else { 1.0 };
+        let rho = zeta - delta_y;
+        let beta = if yidx == yd { 1.0 } else { -1.0 };
+        let margin = rho - scores[yidx];
+        let inv_g = mode.inv_gamma(margin.abs(), eps);
+        let a_d = inv_g;
+        let b_d = rho * inv_g + beta;
+        if dense_data.is_some() {
+            aw[d - range.start] = a_d;
+            bw[d - range.start] = b_d;
+        } else {
+            accumulate(ds, d, a_d, b_d, out, &mut buf);
+        }
+    }
+    if let Some(data) = dense_data {
+        accumulate_dense_block(data, ds.k, &range, &aw, &bw, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::linalg::{symmetrize_from_lower, Mat};
+
+    /// Dense vs sparse representations of the same data produce the same
+    /// statistics.
+    #[test]
+    fn sparse_dense_agree() {
+        let ds = synth::dna_like(200, 50, 1);
+        let dd = ds.to_dense();
+        let w: Vec<f32> = (0..50).map(|j| 0.01 * j as f32).collect();
+        let mut a = PartialStats::zeros(50);
+        let mut b = PartialStats::zeros(50);
+        lin_step(&ds, 0..200, &w, 1e-5, &mut GammaMode::Em, &mut a);
+        lin_step(&dd, 0..200, &w, 1e-5, &mut GammaMode::Em, &mut b);
+        symmetrize_from_lower(&mut a.sigma);
+        symmetrize_from_lower(&mut b.sigma);
+        assert!(a.sigma.max_abs_diff(&b.sigma) < 2e-1, "{}", a.sigma.max_abs_diff(&b.sigma));
+        assert!((a.obj - b.obj).abs() < 1e-4 * a.obj.abs().max(1.0));
+        assert_eq!(a.aux, b.aux);
+    }
+
+    /// Two half-range steps merged == one full-range step (the reduce
+    /// operator really is the sum the paper claims).
+    #[test]
+    fn split_merge_equals_whole() {
+        let ds = synth::alpha_like(300, 12, 2);
+        let w = vec![0.05f32; 12];
+        let mut whole = PartialStats::zeros(12);
+        lin_step(&ds, 0..300, &w, 1e-5, &mut GammaMode::Em, &mut whole);
+        let mut h1 = PartialStats::zeros(12);
+        let mut h2 = PartialStats::zeros(12);
+        lin_step(&ds, 0..150, &w, 1e-5, &mut GammaMode::Em, &mut h1);
+        lin_step(&ds, 150..300, &w, 1e-5, &mut GammaMode::Em, &mut h2);
+        h1.merge(&h2);
+        assert!(whole.sigma.max_abs_diff(&h1.sigma) < 1e-1);
+        assert!((whole.obj - h1.obj).abs() < 1e-6);
+    }
+
+    /// SVR statistics hand-checked on a single datum.
+    #[test]
+    fn svr_single_datum() {
+        let ds = crate::data::Dataset::dense(
+            vec![2.0, 0.0],
+            vec![1.0],
+            2,
+            crate::data::Task::Regression,
+        );
+        let w = vec![0.0f32, 0.0];
+        let (eps, eps_ins) = (1e-5f32, 0.25f32);
+        let mut out = PartialStats::zeros(2);
+        svr_step(&ds, 0..1, &w, eps, eps_ins, &mut GammaMode::Em, &mut out);
+        // r = 1; gamma = |1 - .25| = .75, omega = |1 + .25| = 1.25
+        let (ig, io) = (1.0 / 0.75, 1.0 / 1.25);
+        let a_d = ig + io;
+        let b_d = 0.75 * ig + 1.25 * io;
+        assert!((out.sigma[(0, 0)] - 4.0 * a_d).abs() < 1e-5);
+        assert!((out.mu[0] - 2.0 * b_d).abs() < 1e-5);
+        assert!((out.obj - 0.75).abs() < 1e-6);
+    }
+
+    /// MLT: for m = 2 the CS update must reduce to the binary hinge
+    /// geometry (rho = score of other class +/- 1).
+    #[test]
+    fn mlt_two_class_consistency() {
+        let ds = crate::data::Dataset::dense(
+            vec![1.0, 0.5],
+            vec![0.0],
+            2,
+            crate::data::Task::Multiclass(2),
+        );
+        let mut w = Mat::zeros(2, 2);
+        w[(0, 0)] = 0.3;
+        w[(1, 1)] = -0.2;
+        let mut out = PartialStats::zeros(2);
+        mlt_step(&ds, 0..1, &w, 0, 1e-5, &mut GammaMode::Em, &mut out);
+        // scores: s0 = .3, s1 = -.1; yd = 0, yidx = 0:
+        // zeta = s1 + 1 = 0.9; rho = 0.9 - 0 = 0.9; beta = +1
+        // margin = 0.9 - 0.3 = 0.6 => inv_g = 1/0.6
+        let inv_g = 1.0f32 / 0.6;
+        let b_d = 0.9 * inv_g + 1.0;
+        assert!((out.mu[0] - b_d).abs() < 1e-4);
+        // obj: best_aug = max(.3, .9) = .9 minus s_yd (.3) = .6
+        assert!((out.obj - 0.6).abs() < 1e-6);
+    }
+
+    /// EM objective decreases over full iterations (uses master::solve).
+    #[test]
+    fn em_iteration_decreases_objective() {
+        let ds = synth::alpha_like(400, 6, 5);
+        let lambda = 1.0f32;
+        let mut w = vec![0f32; 6];
+        let mut prev = f64::INFINITY;
+        for _ in 0..10 {
+            let mut st = PartialStats::zeros(6);
+            lin_step(&ds, 0..ds.n, &w, 1e-5, &mut GammaMode::Em, &mut st);
+            let j = 0.5 * lambda as f64 * crate::linalg::norm2_sq(&w) as f64 + 2.0 * st.obj;
+            assert!(j <= prev + 1e-3 * ds.n as f64, "{j} > {prev}");
+            prev = j;
+            w = crate::solver::master::solve_native(
+                &mut st,
+                &crate::solver::master::Regularizer::Eye(lambda),
+                None,
+            )
+            .unwrap();
+        }
+        assert!(crate::model::accuracy_cls(&ds, &w) > 0.85);
+    }
+}

@@ -1,0 +1,219 @@
+//! Low-rank kernel SVM — the paper's own §4.3 suggestion, implemented:
+//!
+//! > "PSVM approximates the N by N kernel matrix with an N by sqrt(N)
+//! >  matrix, and gets very good accuracy. Maybe there is a way to do
+//! >  something similar with the sampling kernel SVM formulation?"
+//!
+//! There is. With a pivoted incomplete Cholesky `K ~= H H^T`
+//! (H: [N, r]), substitute `v = H^T omega` in problem (15):
+//!
+//!   lam/2 omega^T K omega + 2 sum hinge(y_d omega.K_d)
+//!     ~=  lam/2 ||v||^2  + 2 sum hinge(y_d v.H_d)
+//!
+//! — *exactly* the linear problem (1) over the r-dimensional ICF
+//! features H, so the whole parallel LIN machinery (EM and MC, any
+//! backend, any P) applies unchanged. Iteration cost drops from O(N^3/P)
+//! to O(N r^2 / P) with r = sqrt(N) reproducing PSVM's budget, and the
+//! learned model predicts via k(x, pivots) projections.
+
+use anyhow::Result;
+
+use crate::config::{KernelCfg, TrainConfig};
+use crate::data::{Dataset, Task};
+
+/// Kernel-space ICF: pivoted incomplete Cholesky of the *kernel* Gram
+/// matrix (generalizes `baselines::psvm_lite::icf`, which is
+/// linear-kernel only). Returns (H [n, r_eff], pivot rows).
+pub fn kernel_icf(ds: &Dataset, cfg: &KernelCfg, r: usize) -> (Vec<f32>, Vec<usize>) {
+    let n = ds.n;
+    let r = r.clamp(1, n);
+    let mut h = vec![0f32; n * r];
+    let (mut bi, mut bj) = (vec![0f32; ds.k], vec![0f32; ds.k]);
+    let mut diag: Vec<f32> = (0..n)
+        .map(|d| super::kernel::kval(ds, d, ds, d, cfg, &mut bi, &mut bj))
+        .collect();
+    let mut used = vec![false; n];
+    let mut pivots = Vec::with_capacity(r);
+    for col in 0..r {
+        let Some((piv, &dmax)) = diag
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| !used[*i])
+            .max_by(|a, b| a.1.total_cmp(b.1))
+        else {
+            break;
+        };
+        if dmax <= 1e-9 {
+            break;
+        }
+        used[piv] = true;
+        pivots.push(piv);
+        let droot = dmax.sqrt();
+        h[piv * r + col] = droot;
+        for i in 0..n {
+            if used[i] || diag[i] <= 0.0 {
+                continue;
+            }
+            let kip = super::kernel::kval(ds, i, ds, piv, cfg, &mut bi, &mut bj);
+            let mut proj = 0f32;
+            for c in 0..col {
+                proj += h[i * r + c] * h[piv * r + c];
+            }
+            let v = (kip - proj) / droot;
+            h[i * r + col] = v;
+            diag[i] -= v * v;
+        }
+    }
+    (h, pivots)
+}
+
+/// A trained low-rank kernel model: predicts by projecting a test point
+/// onto the pivot columns: h(x)_c = (k(x, piv_c) - proj) / L_cc, then
+/// score = v . h(x). Equivalent to the Nystrom feature map.
+pub struct LowRankKernelModel {
+    pub train_pivots: Dataset,
+    /// r x r lower-triangular factor restricted to pivot rows
+    pub l_piv: Vec<f32>,
+    pub v: Vec<f32>,
+    pub cfg: KernelCfg,
+    pub rank: usize,
+}
+
+impl LowRankKernelModel {
+    pub fn decision(&self, test: &Dataset, j: usize) -> f32 {
+        let r = self.rank;
+        let (mut bi, mut bj) = (vec![0f32; self.train_pivots.k], vec![0f32; self.train_pivots.k]);
+        // forward-substitute h(x): L_piv h = k(x, pivots)
+        let mut hx = vec![0f32; r];
+        for c in 0..r {
+            let kxc = super::kernel::kval(&self.train_pivots, c, test, j, &self.cfg, &mut bi, &mut bj);
+            let mut s = kxc;
+            for p in 0..c {
+                s -= self.l_piv[c * r + p] * hx[p];
+            }
+            let d = self.l_piv[c * r + c];
+            hx[c] = if d.abs() > 1e-12 { s / d } else { 0.0 };
+        }
+        crate::linalg::dot(&self.v, &hx)
+    }
+
+    pub fn accuracy(&self, test: &Dataset) -> f64 {
+        let correct = (0..test.n)
+            .filter(|&j| test.labels[j] * self.decision(test, j) > 0.0)
+            .count();
+        correct as f64 / test.n.max(1) as f64
+    }
+}
+
+/// Train the low-rank sampling kernel SVM: kernel ICF, then the
+/// parallel LIN solver (EM or MC, any backend/worker count from `cfg`)
+/// on the ICF features.
+pub fn train_lowrank_krn(
+    ds: &Dataset,
+    cfg: &TrainConfig,
+    rank: Option<usize>,
+) -> Result<(LowRankKernelModel, crate::coordinator::TrainOutput)> {
+    let r = rank.unwrap_or_else(|| (ds.n as f64).sqrt().ceil() as usize).clamp(1, ds.n);
+    let (h, pivots) = kernel_icf(ds, &cfg.kernel, r);
+    let r_eff = r; // columns beyond the effective rank are zero — harmless
+    let feat = Dataset::dense(h, ds.labels.clone(), r_eff, Task::Binary);
+
+    // reuse the LIN coordinator verbatim (the paper's point)
+    let mut lin_cfg = cfg.clone();
+    lin_cfg.model = crate::config::ModelKind::Linear;
+    let out = crate::coordinator::train(&feat, &lin_cfg)?;
+    let v = out.weights.single().to_vec();
+
+    // pivot-restricted factor for prediction
+    let mut l_piv = vec![0f32; r_eff * r_eff];
+    let mut piv_rows = Vec::new();
+    for (c, &p) in pivots.iter().enumerate() {
+        if let crate::data::Features::Dense { data } = &feat.features {
+            l_piv[c * r_eff..c * r_eff + r_eff]
+                .copy_from_slice(&data[p * r_eff..(p + 1) * r_eff]);
+        }
+        piv_rows.push(p);
+    }
+    // pivot dataset (rows of the original data at pivot positions)
+    let mut pdata = vec![0f32; piv_rows.len() * ds.k];
+    let mut buf = vec![0f32; ds.k];
+    for (c, &p) in piv_rows.iter().enumerate() {
+        ds.densify_row(p, &mut buf);
+        pdata[c * ds.k..(c + 1) * ds.k].copy_from_slice(&buf);
+    }
+    let train_pivots = Dataset::dense(pdata, vec![0.0; piv_rows.len()], ds.k, Task::Binary);
+    Ok((
+        LowRankKernelModel { train_pivots, l_piv, v, cfg: cfg.kernel, rank: r_eff },
+        out,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TrainConfig;
+
+    fn rings(n: usize, seed: u64) -> Dataset {
+        let mut g = crate::rng::Pcg64::new(seed);
+        let mut data = Vec::with_capacity(n * 2);
+        let mut labels = Vec::with_capacity(n);
+        for _ in 0..n {
+            let y: f32 = if g.next_f64() < 0.5 { 1.0 } else { -1.0 };
+            let r = if y > 0.0 { 0.5 } else { 1.6 };
+            let th = g.next_f64() * std::f64::consts::TAU;
+            data.push(r * th.cos() as f32 + 0.05 * (g.next_f32() - 0.5));
+            data.push(r * th.sin() as f32 + 0.05 * (g.next_f32() - 0.5));
+            labels.push(y);
+        }
+        Dataset::dense(data, labels, 2, Task::Binary)
+    }
+
+    #[test]
+    fn kernel_icf_approximates_gram() {
+        let ds = rings(60, 1);
+        let cfg = KernelCfg::Gaussian { sigma: 0.8 };
+        let (h, _) = kernel_icf(&ds, &cfg, 40);
+        let gram = crate::solver::gram_matrix(&ds, &cfg);
+        let mut worst = 0f32;
+        for i in 0..60 {
+            for j in 0..60 {
+                let approx = crate::linalg::dot(&h[i * 40..(i + 1) * 40], &h[j * 40..(j + 1) * 40]);
+                worst = worst.max((gram[(i, j)] - approx).abs());
+            }
+        }
+        assert!(worst < 0.05, "ICF error {worst}");
+    }
+
+    #[test]
+    fn lowrank_krn_solves_rings() {
+        let train = rings(300, 2);
+        let test = rings(120, 3);
+        let mut cfg = TrainConfig::default().with_options("KRN-EM-CLS").unwrap();
+        cfg.lambda = 1e-2;
+        cfg.kernel = KernelCfg::Gaussian { sigma: 0.5 };
+        cfg.workers = 2;
+        cfg.max_iters = 30;
+        let (model, out) = train_lowrank_krn(&train, &cfg, Some(40)).unwrap();
+        assert!(out.iterations > 0);
+        let acc = model.accuracy(&test);
+        assert!(acc > 0.95, "low-rank kernel accuracy {acc}");
+    }
+
+    #[test]
+    fn lowrank_close_to_exact_krn() {
+        let train = rings(240, 4);
+        let mut cfg = TrainConfig::default().with_options("KRN-EM-CLS").unwrap();
+        cfg.lambda = 1e-2;
+        cfg.kernel = KernelCfg::Gaussian { sigma: 0.5 };
+        cfg.workers = 2;
+        cfg.max_iters = 25;
+        let exact = crate::coordinator::train(&train, &cfg).unwrap();
+        let acc_exact = exact.kernel_model.as_ref().unwrap().accuracy(&train);
+        let (model, _) = train_lowrank_krn(&train, &cfg, Some(60)).unwrap();
+        let acc_lr = model.accuracy(&train);
+        assert!(
+            acc_lr >= acc_exact - 0.03,
+            "low-rank {acc_lr} vs exact {acc_exact}"
+        );
+    }
+}

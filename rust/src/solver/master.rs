@@ -1,0 +1,156 @@
+//! The master step: `Sigma^{-1} = lam R + sum_p Sigma^p`, then the EM
+//! mode takes `w = Sigma (sum_p mu^p)` (Eq. 6) and the MC mode draws
+//! `w ~ N(Sigma b, Sigma)` via `w = mu + L^{-T} z`.
+
+use anyhow::{Context, Result};
+
+use crate::linalg::{
+    cholesky_in_place, solve_lower, solve_upper, symmetrize_from_lower, Mat,
+};
+
+use super::PartialStats;
+
+/// The quadratic regularizer R: identity for LIN (Eq. 6), the Gram
+/// matrix for KRN (§3.1).
+pub enum Regularizer<'a> {
+    Eye(f32),
+    Gram { lambda: f32, gram: &'a Mat },
+}
+
+/// Solve the master step in place (destroys `stats.sigma`). `mc_noise`
+/// is a pre-drawn N(0, I) vector for the MC posterior sample; None = EM.
+pub fn solve_native(
+    stats: &mut PartialStats,
+    reg: &Regularizer,
+    mc_noise: Option<&[f32]>,
+) -> Result<Vec<f32>> {
+    let k = stats.mu.len();
+    symmetrize_from_lower(&mut stats.sigma);
+    match reg {
+        Regularizer::Eye(lam) => stats.sigma.add_scaled_eye(*lam),
+        Regularizer::Gram { lambda, gram } => stats.sigma.add_scaled(*lambda, gram),
+    }
+    // The gamma clamp lets Sigma^-1 reach condition numbers ~1/eps^2; in
+    // f32 that can round a (mathematically SPD) matrix indefinite,
+    // especially for KRN grams. Retry with escalating diagonal jitter —
+    // statistically this only smooths the near-zero-margin directions.
+    let mean_diag = (0..k).map(|i| stats.sigma[(i, i)] as f64).sum::<f64>() / k.max(1) as f64;
+    let pristine = stats.sigma.clone();
+    let mut jitter = 0f64;
+    loop {
+        match cholesky_in_place(&mut stats.sigma) {
+            Ok(()) => break,
+            Err(e) => {
+                jitter = if jitter == 0.0 { mean_diag * 1e-6 } else { jitter * 100.0 };
+                if jitter > mean_diag * 1e-2 {
+                    return Err(e).context(
+                        "master solve: Sigma^-1 not positive definite (lambda too small?)",
+                    );
+                }
+                stats.sigma = pristine.clone();
+                stats.sigma.add_scaled_eye(jitter as f32);
+            }
+        }
+    }
+    let l = &stats.sigma;
+    let mut y = vec![0f32; k];
+    let mut w = vec![0f32; k];
+    solve_lower(l, &stats.mu, &mut y);
+    solve_upper(l, &y, &mut w);
+    if let Some(z) = mc_noise {
+        // w += L^{-T} z  adds the N(0, Sigma) fluctuation
+        let mut fluct = vec![0f32; k];
+        solve_upper(l, z, &mut fluct);
+        for (wi, fi) in w.iter_mut().zip(&fluct) {
+            *wi += fi;
+        }
+    }
+    Ok(w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{NormalSource, Pcg64};
+
+    fn stats_from(sigma_lower: Mat, mu: Vec<f32>) -> PartialStats {
+        PartialStats { sigma: sigma_lower, mu, obj: 0.0, aux: 0.0 }
+    }
+
+    #[test]
+    fn em_solves_normal_equations() {
+        // Sigma^-1 = I + S with S = diag(1, 2); b = [3, 8]
+        let mut s = Mat::zeros(2, 2);
+        s[(0, 0)] = 1.0;
+        s[(1, 1)] = 2.0;
+        let mut st = stats_from(s, vec![3.0, 8.0]);
+        let w = solve_native(&mut st, &Regularizer::Eye(1.0), None).unwrap();
+        assert!((w[0] - 1.5).abs() < 1e-5);
+        assert!((w[1] - 8.0 / 3.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn gram_regularizer_used() {
+        // R = 2 I as a "gram"; lam = 0.5 -> A = I + S
+        let mut gram = Mat::eye(2);
+        gram[(0, 0)] = 2.0;
+        gram[(1, 1)] = 2.0;
+        let mut s = Mat::zeros(2, 2);
+        s[(0, 0)] = 1.0;
+        s[(1, 1)] = 2.0;
+        let mut st = stats_from(s, vec![3.0, 8.0]);
+        let w = solve_native(&mut st, &Regularizer::Gram { lambda: 0.5, gram: &gram }, None)
+            .unwrap();
+        assert!((w[0] - 1.5).abs() < 1e-5);
+        assert!((w[1] - 8.0 / 3.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn mc_sample_has_posterior_moments() {
+        let k = 3;
+        let mut rng = Pcg64::new(2);
+        let mut ns = NormalSource::new();
+        // A = diag(4, 1, 0.25) + lam(=0) handled via Eye(0) forbidden ->
+        // use lam = tiny and fold into diag
+        let diag = [4.0f32, 1.0, 0.25];
+        let b = [1.0f32, 2.0, 3.0];
+        let n_draws = 20_000;
+        let mut mean = [0f64; 3];
+        let mut var = [0f64; 3];
+        let mut draws = Vec::with_capacity(n_draws);
+        for _ in 0..n_draws {
+            let mut s = Mat::zeros(k, k);
+            for i in 0..k {
+                s[(i, i)] = diag[i] - 1e-6;
+            }
+            let mut st = stats_from(s, b.to_vec());
+            let z: Vec<f32> = (0..k).map(|_| ns.next(&mut rng) as f32).collect();
+            let w = solve_native(&mut st, &Regularizer::Eye(1e-6), Some(&z)).unwrap();
+            draws.push(w);
+        }
+        for w in &draws {
+            for i in 0..k {
+                mean[i] += w[i] as f64 / n_draws as f64;
+            }
+        }
+        for w in &draws {
+            for i in 0..k {
+                var[i] += (w[i] as f64 - mean[i]).powi(2) / n_draws as f64;
+            }
+        }
+        for i in 0..k {
+            let want_mean = b[i] as f64 / diag[i] as f64;
+            let want_var = 1.0 / diag[i] as f64;
+            assert!((mean[i] - want_mean).abs() < 0.05 * (1.0 + want_mean.abs()), "mean[{i}]");
+            assert!((var[i] - want_var).abs() / want_var < 0.1, "var[{i}] {} vs {want_var}", var[i]);
+        }
+    }
+
+    #[test]
+    fn indefinite_rejected() {
+        let mut s = Mat::zeros(2, 2);
+        s[(0, 0)] = -5.0;
+        let mut st = stats_from(s, vec![1.0, 1.0]);
+        assert!(solve_native(&mut st, &Regularizer::Eye(1.0), None).is_err());
+    }
+}

@@ -1,0 +1,81 @@
+//! Solver core: the data-augmentation updates shared by both backends.
+//!
+//! A training iteration is `worker step -> reduce -> master solve`
+//! (paper §4.1); this module owns the numeric pieces, `coordinator/`
+//! owns the topology, `backend/` owns where the flops run.
+
+pub mod gamma;
+pub mod kernel;
+pub mod local;
+pub mod lowrank;
+pub mod master;
+
+pub use gamma::GammaMode;
+pub use kernel::{gram_dataset, gram_matrix, KernelModel};
+pub use master::{solve_native, Regularizer};
+
+use crate::linalg::Mat;
+
+/// A worker's partial statistics for one iteration (Eq. 40):
+/// `sigma` accumulates only the lower triangle until the master
+/// symmetrizes it.
+#[derive(Clone, Debug)]
+pub struct PartialStats {
+    pub sigma: Mat,
+    pub mu: Vec<f32>,
+    /// sum of the per-datum loss at the *current* weights
+    pub obj: f64,
+    /// task-dependent second statistic: error count (CLS/MLT) or
+    /// squared-residual sum (SVR)
+    pub aux: f64,
+}
+
+impl PartialStats {
+    pub fn zeros(k: usize) -> Self {
+        PartialStats { sigma: Mat::zeros(k, k), mu: vec![0.0; k], obj: 0.0, aux: 0.0 }
+    }
+
+    pub fn reset(&mut self) {
+        self.sigma.fill(0.0);
+        self.mu.fill(0.0);
+        self.obj = 0.0;
+        self.aux = 0.0;
+    }
+
+    /// Merge another partial into this one (the reduce operator; it is
+    /// associative and commutative up to f32 rounding, which the
+    /// coordinator tests exercise).
+    pub fn merge(&mut self, other: &PartialStats) {
+        self.sigma.add_assign(&other.sigma);
+        for (a, b) in self.mu.iter_mut().zip(&other.mu) {
+            *a += b;
+        }
+        self.obj += other.obj;
+        self.aux += other.aux;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_is_additive() {
+        let mut a = PartialStats::zeros(3);
+        a.sigma[(1, 0)] = 2.0;
+        a.mu[2] = 1.0;
+        a.obj = 0.5;
+        let mut b = PartialStats::zeros(3);
+        b.sigma[(1, 0)] = 3.0;
+        b.mu[2] = -0.5;
+        b.aux = 2.0;
+        a.merge(&b);
+        assert_eq!(a.sigma[(1, 0)], 5.0);
+        assert_eq!(a.mu[2], 0.5);
+        assert_eq!(a.obj, 0.5);
+        assert_eq!(a.aux, 2.0);
+        a.reset();
+        assert_eq!(a.sigma[(1, 0)], 0.0);
+        assert_eq!(a.obj, 0.0);
+    }
+}

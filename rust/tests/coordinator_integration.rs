@@ -1,0 +1,251 @@
+//! Integration tests: the full leader/worker coordinator across option
+//! combinations, backends, worker counts, and reduce topologies.
+
+use pemsvm::config::{Algo, BackendKind, ReduceKind, TrainConfig};
+use pemsvm::coordinator::{train, train_full};
+use pemsvm::data::synth;
+use pemsvm::model::Weights;
+
+fn base_cfg(options: &str) -> TrainConfig {
+    let mut cfg = TrainConfig::default().with_options(options).unwrap();
+    cfg.max_iters = 40;
+    cfg.workers = 4;
+    cfg.artifacts_dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    cfg
+}
+
+fn have_artifacts() -> bool {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/manifest.json")
+        .exists()
+}
+
+#[test]
+fn lin_em_cls_trains() {
+    let ds = synth::alpha_like(4000, 24, 1);
+    let out = train(&ds, &base_cfg("LIN-EM-CLS")).unwrap();
+    let acc = pemsvm::model::evaluate(&ds, &out.weights);
+    assert!(acc > 0.82, "accuracy {acc}");
+    assert!(out.iterations >= 3);
+    // EM objective is non-increasing after the first couple of iterations
+    let objs: Vec<f64> = out.history.iter().map(|h| h.objective).collect();
+    for w in objs[1..].windows(2) {
+        assert!(w[1] <= w[0] + 1e-2 * w[0].abs(), "objective rose: {w:?}");
+    }
+}
+
+#[test]
+fn lin_mc_cls_trains_and_averages() {
+    let ds = synth::alpha_like(3000, 16, 2);
+    let mut cfg = base_cfg("LIN-MC-CLS");
+    cfg.burn_in = 5;
+    cfg.max_iters = 40;
+    let out = train(&ds, &cfg).unwrap();
+    let acc = pemsvm::model::evaluate(&ds, &out.weights);
+    assert!(acc > 0.82, "accuracy {acc}");
+}
+
+#[test]
+fn deterministic_for_fixed_seed_any_workers() {
+    let ds = synth::alpha_like(1000, 12, 3);
+    // EM is deterministic: same trajectory regardless of seed / P
+    let mut w_ref: Option<Vec<f32>> = None;
+    for p in [1usize, 2, 5, 8] {
+        let mut cfg = base_cfg("LIN-EM-CLS");
+        cfg.workers = p;
+        cfg.max_iters = 10;
+        let out = train(&ds, &cfg).unwrap();
+        let w = out.weights.single().to_vec();
+        match &w_ref {
+            None => w_ref = Some(w),
+            Some(r) => {
+                for (a, b) in r.iter().zip(&w) {
+                    assert!((a - b).abs() < 2e-2 * (1.0 + a.abs()), "P={p}: {a} vs {b}");
+                }
+            }
+        }
+    }
+    // MC with the same seed and same P is bit-reproducible
+    let mut cfg = base_cfg("LIN-MC-CLS");
+    cfg.max_iters = 12;
+    let o1 = train(&ds, &cfg).unwrap();
+    let o2 = train(&ds, &cfg).unwrap();
+    assert_eq!(o1.weights.single(), o2.weights.single());
+}
+
+#[test]
+fn tree_and_flat_reduce_agree() {
+    let ds = synth::alpha_like(2000, 16, 4);
+    let mut cfg_flat = base_cfg("LIN-EM-CLS");
+    cfg_flat.max_iters = 8;
+    let mut cfg_tree = cfg_flat.clone();
+    cfg_flat.reduce = ReduceKind::Flat;
+    cfg_tree.reduce = ReduceKind::Tree;
+    let a = train(&ds, &cfg_flat).unwrap();
+    let b = train(&ds, &cfg_tree).unwrap();
+    for (x, y) in a.weights.single().iter().zip(b.weights.single()) {
+        assert!((x - y).abs() < 1e-3 * (1.0 + x.abs()), "{x} vs {y}");
+    }
+}
+
+#[test]
+fn svr_trains() {
+    let ds = synth::year_like(4000, 16, 5);
+    let mut cfg = base_cfg("LIN-EM-SVR");
+    cfg.lambda = 0.1;
+    cfg.eps_insensitive = 0.1;
+    let out = train(&ds, &cfg).unwrap();
+    let rmse = pemsvm::model::evaluate(&ds, &out.weights);
+    assert!(rmse < 0.8, "rmse {rmse}");
+}
+
+#[test]
+fn mlt_trains() {
+    let ds = synth::mnist_like(2000, 16, 5, 6);
+    let mut cfg = base_cfg("LIN-EM-MLT");
+    cfg.num_classes = 5;
+    cfg.max_iters = 15;
+    let out = train(&ds, &cfg).unwrap();
+    let acc = pemsvm::model::evaluate(&ds, &out.weights);
+    assert!(acc > 0.8, "accuracy {acc}");
+    assert!(matches!(out.weights, Weights::PerClass(_)));
+}
+
+#[test]
+fn krn_solves_nonlinear_problem() {
+    // concentric-ish classes: inner radius positive, outer negative
+    let n = 240;
+    let mut g = pemsvm::rng::Pcg64::new(7);
+    let mut data = Vec::with_capacity(n * 2);
+    let mut labels = Vec::with_capacity(n);
+    for _ in 0..n {
+        let y: f32 = if g.next_f64() < 0.5 { 1.0 } else { -1.0 };
+        let r = if y > 0.0 { 0.5 } else { 1.6 };
+        let theta = g.next_f64() * std::f64::consts::TAU;
+        data.push(r * theta.cos() as f32 + 0.05 * (g.next_f32() - 0.5));
+        data.push(r * theta.sin() as f32 + 0.05 * (g.next_f32() - 0.5));
+        labels.push(y);
+    }
+    let ds = pemsvm::data::Dataset::dense(data, labels, 2, pemsvm::data::Task::Binary);
+    let mut cfg = base_cfg("KRN-EM-CLS");
+    cfg.lambda = 1e-2;
+    cfg.kernel = pemsvm::config::KernelCfg::Gaussian { sigma: 0.5 };
+    cfg.max_iters = 30;
+    let out = train(&ds, &cfg).unwrap();
+    let km = out.kernel_model.as_ref().unwrap();
+    let acc = km.accuracy(&ds);
+    assert!(acc > 0.95, "kernel accuracy {acc}");
+}
+
+#[test]
+fn history_records_test_metric() {
+    let ds = synth::alpha_like(2000, 12, 8);
+    let (tr, te) = synth::split(&ds, 5);
+    let mut cfg = base_cfg("LIN-EM-CLS");
+    cfg.max_iters = 6;
+    let out = train_full(&tr, Some(&te), &cfg).unwrap();
+    assert!(out.history.iter().all(|h| h.test_metric.is_some()));
+    let last = out.history.last().unwrap().test_metric.unwrap();
+    assert!(last > 0.8, "test accuracy {last}");
+}
+
+#[test]
+fn stopping_rule_halts_early() {
+    let ds = synth::gaussian_margin(1500, 8, 9, 3.0, 0.0);
+    let mut cfg = base_cfg("LIN-EM-CLS");
+    cfg.max_iters = 200;
+    cfg.tol = 1e-3;
+    let out = train(&ds, &cfg).unwrap();
+    assert!(out.iterations < 100, "did not stop early: {}", out.iterations);
+}
+
+#[test]
+fn task_mismatch_rejected() {
+    let ds = synth::year_like(100, 4, 1);
+    assert!(train(&ds, &base_cfg("LIN-EM-CLS")).is_err());
+}
+
+// ---- XLA backend end-to-end (needs artifacts) --------------------------
+
+#[test]
+fn xla_backend_matches_native_em() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let ds = synth::alpha_like(1500, 16, 10);
+    let mut cfg_n = base_cfg("LIN-EM-CLS");
+    cfg_n.max_iters = 8;
+    cfg_n.workers = 2;
+    let mut cfg_x = cfg_n.clone();
+    cfg_n.backend = BackendKind::Native;
+    cfg_x.backend = BackendKind::Xla;
+    let a = train(&ds, &cfg_n).unwrap();
+    let b = train(&ds, &cfg_x).unwrap();
+    let acc_a = pemsvm::model::evaluate(&ds, &a.weights);
+    let acc_b = pemsvm::model::evaluate(&ds, &b.weights);
+    assert!((acc_a - acc_b).abs() < 0.02, "native {acc_a} vs xla {acc_b}");
+    for (x, y) in a.weights.single().iter().zip(b.weights.single()) {
+        assert!((x - y).abs() < 5e-2 * (1.0 + x.abs()), "{x} vs {y}");
+    }
+}
+
+#[test]
+fn xla_backend_mlt() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let ds = synth::mnist_like(1200, 24, 5, 11);
+    let mut cfg = base_cfg("LIN-EM-MLT");
+    cfg.backend = BackendKind::Xla;
+    cfg.num_classes = 5;
+    cfg.workers = 2;
+    cfg.max_iters = 8;
+    let out = train(&ds, &cfg).unwrap();
+    let acc = pemsvm::model::evaluate(&ds, &out.weights);
+    assert!(acc > 0.75, "accuracy {acc}");
+}
+
+#[test]
+fn xla_backend_svr_and_mc() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let ds = synth::year_like(1500, 12, 12);
+    let mut cfg = base_cfg("LIN-EM-SVR");
+    cfg.backend = BackendKind::Xla;
+    cfg.lambda = 0.1;
+    cfg.workers = 2;
+    cfg.max_iters = 10;
+    let out = train(&ds, &cfg).unwrap();
+    let rmse = pemsvm::model::evaluate(&ds, &out.weights);
+    assert!(rmse < 0.9, "rmse {rmse}");
+
+    let ds2 = synth::alpha_like(1200, 16, 13);
+    let mut cfg2 = base_cfg("LIN-MC-CLS");
+    cfg2.backend = BackendKind::Xla;
+    cfg2.burn_in = 4;
+    cfg2.workers = 2;
+    cfg2.max_iters = 16;
+    let out2 = train(&ds2, &cfg2).unwrap();
+    let acc = pemsvm::model::evaluate(&ds2, &out2.weights);
+    assert!(acc > 0.8, "MC/XLA accuracy {acc}");
+}
+
+/// EM across both algos: MC's averaged solution lands near EM's optimum.
+#[test]
+fn mc_approaches_em_solution() {
+    let ds = synth::alpha_like(2500, 10, 14);
+    let mut cfg_em = base_cfg("LIN-EM-CLS");
+    cfg_em.max_iters = 30;
+    let em = train(&ds, &cfg_em).unwrap();
+    let mut cfg_mc = base_cfg("LIN-MC-CLS");
+    cfg_mc.max_iters = 60;
+    cfg_mc.burn_in = 10;
+    let mc = train(&ds, &cfg_mc).unwrap();
+    let j_em = pemsvm::model::objective_cls(&ds, em.weights.single(), cfg_em.lambda);
+    let j_mc = pemsvm::model::objective_cls(&ds, mc.weights.single(), cfg_mc.lambda);
+    assert!(j_mc < 1.1 * j_em, "J_mc={j_mc} J_em={j_em}");
+}

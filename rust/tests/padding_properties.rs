@@ -1,0 +1,144 @@
+//! Property tests for the XLA shape-padding contract (DESIGN.md §3):
+//! feature padding to the artifact family and row padding to CHUNK must
+//! be *exact* — identical statistics, identical solutions — for any
+//! (N, K) that isn't already family-aligned.
+
+use std::sync::Arc;
+
+use pemsvm::backend::{MasterBackend, StepInput, WorkerBackend};
+use pemsvm::config::{Algo, TrainConfig};
+use pemsvm::data::synth;
+
+fn have_artifacts() -> bool {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/manifest.json")
+        .exists()
+}
+
+fn cfg() -> TrainConfig {
+    let mut c = TrainConfig::default();
+    c.artifacts_dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    c
+}
+
+/// Sweep awkward (N, K): chunk-misaligned rows, family-misaligned
+/// features; padded XLA stats must match native stats on the true
+/// coordinates and be exactly zero on the padding.
+#[test]
+fn padded_stats_equal_native_for_awkward_shapes() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let cfg = cfg();
+    for (n, k, seed) in [(513usize, 17usize, 1u64), (1000, 63, 2), (511, 65, 3), (77, 5, 4)] {
+        let ds = Arc::new(synth::alpha_like(n, k, seed));
+        let w = Arc::new(vec![0.03f32; k]);
+        let mut xw =
+            pemsvm::backend::xla::XlaWorker::new(&cfg, &ds, 0..n, 0).unwrap();
+        let mut nw = pemsvm::backend::native::NativeWorker::new(
+            ds.clone(),
+            0..n,
+            Algo::Em,
+            cfg.eps_clamp,
+            0,
+            0,
+        );
+        let sx = xw.step(&StepInput::Binary { w: w.clone() }).unwrap();
+        let mut sn = nw.step(&StepInput::Binary { w }).unwrap();
+        pemsvm::linalg::symmetrize_from_lower(&mut sn.sigma);
+        let pk = xw.stat_dim();
+        let scale = sn.sigma.data.iter().fold(1f32, |a, &b| a.max(b.abs()));
+        for i in 0..pk {
+            for j in 0..pk {
+                let want = if i < k && j < k { sn.sigma[(i, j)] } else { 0.0 };
+                let got = sx.sigma[(i, j)];
+                assert!(
+                    (got - want).abs() < 2e-4 * scale,
+                    "(n={n},k={k}) sigma[{i},{j}] {got} vs {want}"
+                );
+            }
+        }
+        for j in k..pk {
+            assert_eq!(sx.mu[j], 0.0, "mu padding dirty at {j}");
+        }
+        assert!((sx.obj - sn.obj).abs() < 1e-3 * sn.obj.abs().max(1.0));
+        assert_eq!(sx.aux, sn.aux, "(n={n},k={k}) error counts differ");
+    }
+}
+
+/// The padded solve returns w with exact zeros on padded coordinates
+/// and the native solution on the rest.
+#[test]
+fn padded_solve_zero_on_padding() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let cfg = cfg();
+    let (n, k) = (600usize, 40usize);
+    let ds = Arc::new(synth::alpha_like(n, k, 9));
+    let w0 = Arc::new(vec![0f32; k]);
+    let mut xw = pemsvm::backend::xla::XlaWorker::new(&cfg, &ds, 0..n, 0).unwrap();
+    let mut stats = xw.step(&StepInput::Binary { w: w0 }).unwrap();
+    let mut stats_native = stats.clone();
+    let pk = xw.stat_dim();
+
+    let mut xm = pemsvm::backend::xla::XlaMaster::new(&cfg, pk, None).unwrap();
+    let wx = xm.solve(&mut stats, None).unwrap();
+    for j in k..pk {
+        assert!(
+            wx[j].abs() < 1e-6,
+            "padded weight {j} = {} should be ~0",
+            wx[j]
+        );
+    }
+    let mut nm = pemsvm::backend::native::NativeMaster::new(cfg.lambda, None);
+    let wn = nm.solve(&mut stats_native, None).unwrap();
+    for j in 0..k {
+        assert!(
+            (wx[j] - wn[j]).abs() < 2e-3 * (1.0 + wn[j].abs()),
+            "w[{j}] {} vs {}",
+            wx[j],
+            wn[j]
+        );
+    }
+}
+
+/// Shard/chunk boundaries must not change the statistics: one worker
+/// over [0, n) equals the merge of three workers over a 3-way split,
+/// on the XLA backend (each worker pads its own tail chunk).
+#[test]
+fn chunking_is_invisible_in_the_reduce() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let cfg = cfg();
+    let (n, k) = (1100usize, 24usize);
+    let ds = Arc::new(synth::alpha_like(n, k, 5));
+    let w = Arc::new(vec![0.05f32; k]);
+    let mut whole = pemsvm::backend::xla::XlaWorker::new(&cfg, &ds, 0..n, 0)
+        .unwrap()
+        .step(&StepInput::Binary { w: w.clone() })
+        .unwrap();
+    let cuts = [0usize, 400, 900, n];
+    let mut merged: Option<pemsvm::solver::PartialStats> = None;
+    for wdw in cuts.windows(2) {
+        let part = pemsvm::backend::xla::XlaWorker::new(&cfg, &ds, wdw[0]..wdw[1], 0)
+            .unwrap()
+            .step(&StepInput::Binary { w: w.clone() })
+            .unwrap();
+        match &mut merged {
+            None => merged = Some(part),
+            Some(m) => m.merge(&part),
+        }
+    }
+    let merged = merged.unwrap();
+    pemsvm::linalg::symmetrize_from_lower(&mut whole.sigma);
+    let mut msig = merged.sigma.clone();
+    pemsvm::linalg::symmetrize_from_lower(&mut msig);
+    let scale = whole.sigma.data.iter().fold(1f32, |a, &b| a.max(b.abs()));
+    assert!(whole.sigma.max_abs_diff(&msig) < 2e-4 * scale);
+    assert!((whole.obj - merged.obj).abs() < 1e-6 * whole.obj.abs().max(1.0));
+}
