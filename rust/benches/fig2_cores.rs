@@ -8,7 +8,7 @@
 //! included for P up to this box's cores.
 
 use pemsvm::benchutil::{header, loglog_slope, modeled_sim_secs, scaled};
-use pemsvm::config::TrainConfig;
+use pemsvm::config::{Topology, TrainConfig};
 use pemsvm::data::synth;
 
 fn main() {
@@ -28,7 +28,7 @@ fn main() {
     for p in [1usize, 2, 4, 8, 16, 48, 96, 240, 480] {
         let mut cfg = TrainConfig::default().with_options("LIN-EM-CLS").unwrap();
         cfg.workers = p;
-        cfg.simulate_cluster = true;
+        cfg.topology = Topology::Simulate;
         cfg.max_iters = iters;
         cfg.tol = 0.0; // fixed iteration count for clean scaling
         let out = pemsvm::coordinator::train(&ds, &cfg).unwrap();

@@ -10,14 +10,14 @@
 //! exponent of each phase next to the asymptotic prediction.
 
 use pemsvm::benchutil::{header, loglog_slope, scaled};
-use pemsvm::config::TrainConfig;
+use pemsvm::config::{Topology, TrainConfig};
 use pemsvm::data::synth;
 use pemsvm::metrics::Phase;
 
 fn phases_for(ds: &pemsvm::data::Dataset, p: usize, iters: usize) -> (f64, f64, f64) {
     let mut cfg = TrainConfig::default().with_options("LIN-EM-CLS").unwrap();
     cfg.workers = p;
-    cfg.simulate_cluster = true;
+    cfg.topology = Topology::Simulate;
     cfg.max_iters = iters;
     cfg.tol = 0.0;
     let out = pemsvm::coordinator::train(ds, &cfg).unwrap();

@@ -6,14 +6,14 @@
 
 use pemsvm::baselines::{cutting_plane, dcd, pegasos, primal_newton, stream_dcd};
 use pemsvm::benchutil::{header, modeled_sim_secs, scaled, time};
-use pemsvm::config::TrainConfig;
+use pemsvm::config::{Topology, TrainConfig};
 use pemsvm::data::synth;
 use pemsvm::model::accuracy_cls;
 
 fn pem_row(tr: &pemsvm::data::Dataset, te: &pemsvm::data::Dataset, p: usize) -> (f64, f64) {
     let mut cfg = TrainConfig::default().with_options("LIN-EM-CLS").unwrap();
     cfg.workers = p;
-    cfg.simulate_cluster = true;
+    cfg.topology = Topology::Simulate;
     cfg.max_iters = 60;
     let out = pemsvm::coordinator::train(tr, &cfg).unwrap();
     (modeled_sim_secs(&out, p, tr.k), accuracy_cls(te, out.weights.single()) * 100.0)

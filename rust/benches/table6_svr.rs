@@ -5,7 +5,7 @@
 
 use pemsvm::baselines::svr_dcd;
 use pemsvm::benchutil::{header, modeled_sim_secs, scaled, time};
-use pemsvm::config::TrainConfig;
+use pemsvm::config::{Topology, TrainConfig};
 use pemsvm::data::synth;
 use pemsvm::model::rmse;
 
@@ -38,7 +38,7 @@ fn main() {
     cfg.lambda = lam;
     cfg.eps_insensitive = eps;
     cfg.workers = 48;
-    cfg.simulate_cluster = true;
+    cfg.topology = Topology::Simulate;
     cfg.max_iters = 60;
     let out = pemsvm::coordinator::train(&tr, &cfg).unwrap();
     println!(

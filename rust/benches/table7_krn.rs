@@ -5,7 +5,7 @@
 
 use pemsvm::baselines::{dcd, primal_newton};
 use pemsvm::benchutil::{header, modeled_sim_secs, time};
-use pemsvm::config::{KernelCfg, TrainConfig};
+use pemsvm::config::{KernelCfg, Topology, TrainConfig};
 use pemsvm::data::synth;
 use pemsvm::model::accuracy_cls;
 
@@ -14,7 +14,7 @@ fn krn_row(tr: &pemsvm::data::Dataset, te: &pemsvm::data::Dataset) -> (f64, f64)
     cfg.lambda = 1e-2;
     cfg.kernel = KernelCfg::Gaussian { sigma: 1.0 };
     cfg.workers = 48;
-    cfg.simulate_cluster = true;
+    cfg.topology = Topology::Simulate;
     cfg.max_iters = 40;
     let (t_gram_plus_train, out) = time(|| pemsvm::coordinator::train_full(tr, Some(te), &cfg).unwrap());
     let _ = t_gram_plus_train;

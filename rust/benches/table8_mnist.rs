@@ -6,7 +6,7 @@
 
 use pemsvm::baselines::cs_dcd;
 use pemsvm::benchutil::{header, modeled_sim_secs, scaled, time};
-use pemsvm::config::TrainConfig;
+use pemsvm::config::{Topology, TrainConfig};
 use pemsvm::data::synth;
 use pemsvm::model::accuracy_mlt;
 
@@ -14,7 +14,7 @@ fn pem_row(tr: &pemsvm::data::Dataset, te: &pemsvm::data::Dataset, m: usize, p: 
     let mut cfg = TrainConfig::default().with_options("LIN-MC-MLT").unwrap();
     cfg.num_classes = m;
     cfg.workers = p;
-    cfg.simulate_cluster = true;
+    cfg.topology = Topology::Simulate;
     cfg.burn_in = 5;
     cfg.max_iters = 8;
     let out = pemsvm::coordinator::train(tr, &cfg).unwrap();

@@ -8,12 +8,18 @@
 //! *offload structure* — real-TPU speedups are estimated analytically
 //! in DESIGN.md §Hardware-Adaptation.
 
-use pemsvm::benchutil::{header, scaled, time};
-use pemsvm::data::synth;
-use pemsvm::linalg::Mat;
-use pemsvm::runtime::{global, literal_f32};
-
+#[cfg(not(feature = "xla"))]
 fn main() {
+    println!("table9_sigma compares against the PJRT graphs; rebuild with `--features xla`");
+}
+
+#[cfg(feature = "xla")]
+fn main() {
+    use pemsvm::benchutil::{header, scaled, time};
+    use pemsvm::data::synth;
+    use pemsvm::linalg::Mat;
+    use pemsvm::runtime::{global, literal_f32};
+
     header("Table 9", "using accelerator graphs to evaluate Sigma (N=250k, K=500)");
     let n = scaled(250_000, 20_000);
     let k = 500usize;

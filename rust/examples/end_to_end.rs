@@ -17,7 +17,7 @@
 use std::path::Path;
 
 use pemsvm::baselines::{dcd, pegasos, primal_newton};
-use pemsvm::config::{BackendKind, TrainConfig};
+use pemsvm::config::{BackendKind, Topology, TrainConfig};
 use pemsvm::data::{libsvm, synth, Task};
 use pemsvm::metrics::Stopwatch;
 
@@ -72,15 +72,16 @@ fn main() -> anyhow::Result<()> {
         curve = out.history.iter().map(|h| (h.iter, h.objective)).collect();
     }
     // P workers. With >= P physical cores this is real parallel wall
-    // clock; on smaller boxes the coordinator's cluster cost model
-    // (simulate_cluster) reports max-worker time per iteration instead
+    // clock; on smaller boxes the engine's cluster cost model
+    // (Topology::Simulate) reports max-worker time per iteration instead
     // (DESIGN.md §6 cluster substitution).
     let p_par = 8.max(cores);
     {
         let mut cfg = TrainConfig::default().with_options("LIN-EM-CLS")?;
         cfg.lambda = lambda;
         cfg.workers = p_par;
-        cfg.simulate_cluster = cores < p_par;
+        cfg.topology =
+            if cores < p_par { Topology::Simulate } else { Topology::Threads };
         cfg.max_iters = 60;
         let out = pemsvm::coordinator::train(&trp, &cfg)?;
         let secs = out.metrics.simulated_secs();
@@ -88,7 +89,7 @@ fn main() -> anyhow::Result<()> {
         rows.push(("LIN-EM-CLS".into(), p_par, secs, acc));
         println!(
             "    LIN-EM-CLS    {p_par:>3}   {secs:>7.2}s   {acc:.2}{}",
-            if cfg.simulate_cluster { "  (cluster cost model)" } else { "" }
+            if cfg.topology == Topology::Simulate { "  (cluster cost model)" } else { "" }
         );
     }
 

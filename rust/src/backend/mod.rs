@@ -4,11 +4,14 @@
 //!   MPI CPU implementation (§5.7.1).
 //! * [`xla`] — executes the AOT-compiled HLO artifacts (Pallas kernel
 //!   inside) through PJRT; the stand-in for the paper's GPU
-//!   implementation (§5.7.2).
+//!   implementation (§5.7.2). Gated behind the `xla` cargo feature so
+//!   the default native build compiles offline without the PJRT
+//!   bindings.
 //!
-//! Both expose the same two traits so the coordinator is backend-blind.
+//! Both expose the same two traits so the engine is backend-blind.
 
 pub mod native;
+#[cfg(feature = "xla")]
 pub mod xla;
 
 use std::ops::Range;
@@ -16,7 +19,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::config::{Algo, BackendKind, TrainConfig};
+use crate::config::{BackendKind, TrainConfig};
 use crate::data::Dataset;
 use crate::linalg::Mat;
 use crate::solver::PartialStats;
@@ -69,12 +72,15 @@ pub fn make_workers(
                 cfg.seed,
                 wid as u64,
             ))),
-            BackendKind::Xla => out.push(Box::new(xla::XlaWorker::new(
-                cfg,
-                ds,
-                r.clone(),
-                wid as u64,
-            )?)),
+            BackendKind::Xla => {
+                #[cfg(feature = "xla")]
+                out.push(Box::new(xla::XlaWorker::new(cfg, ds, r.clone(), wid as u64)?));
+                #[cfg(not(feature = "xla"))]
+                anyhow::bail!(
+                    "built without the `xla` feature; rebuild with `--features xla` \
+                     for the PJRT backend"
+                );
+            }
         }
     }
     Ok(out)
@@ -88,12 +94,27 @@ pub fn make_master(
 ) -> Result<Box<dyn MasterBackend>> {
     match cfg.backend {
         BackendKind::Native => Ok(Box::new(native::NativeMaster::new(cfg.lambda, gram))),
-        BackendKind::Xla => Ok(Box::new(xla::XlaMaster::new(cfg, k, gram)?)),
+        BackendKind::Xla => {
+            #[cfg(feature = "xla")]
+            {
+                Ok(Box::new(xla::XlaMaster::new(cfg, k, gram)?))
+            }
+            #[cfg(not(feature = "xla"))]
+            {
+                let _ = k;
+                anyhow::bail!(
+                    "built without the `xla` feature; rebuild with `--features xla` \
+                     for the PJRT backend"
+                );
+            }
+        }
     }
 }
 
 /// Algo tag for artifact names.
-pub(crate) fn variant_str(algo: Algo) -> &'static str {
+#[cfg(feature = "xla")]
+pub(crate) fn variant_str(algo: crate::config::Algo) -> &'static str {
+    use crate::config::Algo;
     match algo {
         Algo::Em => "em",
         Algo::Mc => "mc",

@@ -110,31 +110,6 @@ pub fn train(ds: &Dataset, cfg: &StreamDcdCfg) -> Result<Vec<f32>> {
     Ok(w)
 }
 
-impl Dataset {
-    /// rows [from..] — helper for block streaming.
-    fn subset_rows_from(&self, from: usize) -> Dataset {
-        match &self.features {
-            crate::data::Features::Dense { data } => Dataset::dense(
-                data[from * self.k..].to_vec(),
-                self.labels[from..].to_vec(),
-                self.k,
-                self.task,
-            ),
-            crate::data::Features::Sparse { indptr, indices, values } => {
-                let off = indptr[from];
-                Dataset::sparse(
-                    indptr[from..].iter().map(|p| p - off).collect(),
-                    indices[off..].to_vec(),
-                    values[off..].to_vec(),
-                    self.labels[from..].to_vec(),
-                    self.k,
-                    self.task,
-                )
-            }
-        }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -50,7 +50,7 @@ pub fn pair_merge_secs(k: usize) -> f64 {
     t0.elapsed().as_secs_f64() / reps as f64
 }
 
-/// Cluster cost model for a `simulate_cluster` run: per-iteration
+/// Cluster cost model for a `Topology::Simulate` run: per-iteration
 /// max-worker stats time + solve + bookkeeping, with the serial
 /// measured reduce replaced by the paper's tree reduce
 /// (ceil(log2 P) pair-merge rounds per collect; §4.1 / Table 1 —

@@ -48,8 +48,21 @@ pub enum BackendKind {
 pub enum ReduceKind {
     /// leader sums all P partials (O(P) at the leader)
     Flat,
-    /// binary tree among workers (the paper's log(P) term)
+    /// binary tree (the paper's log(P) term): pair merges run on the
+    /// engine's worker threads in the threaded topology, serially (in
+    /// the same pairing order) in the simulated one
     Tree,
+}
+
+/// How the worker "cluster" executes (see `engine::Cluster`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Topology {
+    /// one persistent OS thread per worker — the MPI-rank analogue
+    Threads,
+    /// workers run serially on the leader thread and the metrics record
+    /// max(worker durations) per iteration — the homogeneous-cluster
+    /// cost model (§4.1), for sweeping P beyond this box's cores
+    Simulate,
 }
 
 /// Kernel function for KRN runs.
@@ -89,10 +102,12 @@ pub struct TrainConfig {
     pub artifacts_dir: String,
     /// print per-iteration progress
     pub verbose: bool,
-    /// run workers sequentially and report max(worker time) per
-    /// iteration in the metrics — the homogeneous-cluster cost model,
-    /// for sweeping P beyond this box's physical cores (DESIGN.md §6)
-    pub simulate_cluster: bool,
+    /// worker-pool execution mode: real threads or the sequential
+    /// cluster cost model (DESIGN.md §6)
+    pub topology: Topology,
+    /// multi-session runs (the `sweep` subcommand): start each session
+    /// from the previous session's weights instead of zero
+    pub warm_start: bool,
     /// XLA backend: route the Sigma/mu statistics through the Pallas
     /// kernel artifact (true, default) or the XLA-native-dot ablation
     /// twin (false; EM/CLS only)
@@ -119,7 +134,8 @@ impl Default for TrainConfig {
             kernel: KernelCfg::Gaussian { sigma: 1.0 },
             artifacts_dir: "artifacts".into(),
             verbose: false,
-            simulate_cluster: false,
+            topology: Topology::Threads,
+            warm_start: false,
             xla_use_pallas: true,
         }
     }
@@ -211,7 +227,19 @@ impl TrainConfig {
             "num_classes" => self.num_classes = v.parse()?,
             "artifacts_dir" => self.artifacts_dir = v.to_string(),
             "verbose" => self.verbose = v.parse()?,
-            "simulate_cluster" => self.simulate_cluster = v.parse()?,
+            "topology" => {
+                self.topology = match v.to_ascii_lowercase().as_str() {
+                    "threads" | "threaded" => Topology::Threads,
+                    "simulate" | "simulated" => Topology::Simulate,
+                    _ => bail!("bad topology `{v}`"),
+                }
+            }
+            // back-compat alias for the pre-engine boolean flag
+            "simulate_cluster" => {
+                self.topology =
+                    if v.parse()? { Topology::Simulate } else { Topology::Threads }
+            }
+            "warm_start" => self.warm_start = v.parse()?,
             "xla_use_pallas" => self.xla_use_pallas = v.parse()?,
             "backend" => {
                 self.backend = match v.to_ascii_lowercase().as_str() {
@@ -268,6 +296,19 @@ mod tests {
         assert_eq!(c.backend, BackendKind::Xla);
         assert_eq!(c.reduce, ReduceKind::Tree);
         assert!(c.set("nope", "1").is_err());
+    }
+
+    #[test]
+    fn topology_and_warm_start_keys() {
+        let mut c = TrainConfig::default();
+        c.set("topology", "simulate").unwrap();
+        assert_eq!(c.topology, Topology::Simulate);
+        // back-compat boolean alias
+        c.set("simulate_cluster", "false").unwrap();
+        assert_eq!(c.topology, Topology::Threads);
+        c.set("warm_start", "true").unwrap();
+        assert!(c.warm_start);
+        assert!(c.set("topology", "mesh").is_err());
     }
 
     #[test]

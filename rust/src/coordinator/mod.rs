@@ -1,65 +1,25 @@
-//! The parallel coordinator — the paper's §4 contribution.
+//! One-shot training entrypoints — thin wrappers over the persistent
+//! [`crate::engine`] runtime.
 //!
-//! Topology: one leader (this thread) + P worker threads (the MPI ranks
-//! of §5.7.1). Each iteration:
-//!
-//! 1. leader broadcasts the current weights (Cmd::Step),
-//! 2. workers run their shard's gamma update + local statistics on
-//!    their backend (native CPU or XLA/PJRT),
-//! 3. partials are reduced (flat or binary tree),
-//! 4. leader solves / samples the posterior for the new weights,
-//! 5. stopping rule: |J_m - J_{m-1}| <= tol * N (§5.5).
-//!
-//! MC mode additionally averages post-burn-in samples (§5.13). The
-//! Crammer-Singer task wraps steps 1-4 in a loop over classes (§3.3's
-//! blockwise scheme).
+//! The leader/worker topology, the iteration loop and the reduce step
+//! all live in `engine::{Cluster, Pool, IterDriver}` now; `train` /
+//! `train_full` build a single-use [`Cluster`] and run one session on
+//! it. Long-lived callers (the `sweep` subcommand, serving paths)
+//! should hold a `Cluster` directly and amortize the setup across
+//! sessions.
 
 pub mod reduce;
 
-use std::sync::mpsc;
 use std::sync::Arc;
-use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{bail, Result};
 
-use crate::backend::{self, StepInput, WorkerBackend};
-use crate::config::{Algo, ModelKind, TaskKind, TrainConfig};
-use crate::data::{shard_ranges, Dataset, Task};
-use crate::linalg::Mat;
-use crate::metrics::{Metrics, Phase};
-use crate::model::Weights;
-use crate::rng::{NormalSource, Pcg64};
-use crate::solver::{gram_dataset, KernelModel, PartialStats};
+use crate::config::{ModelKind, TaskKind, TrainConfig};
+use crate::data::{Dataset, Task};
+use crate::engine::{Cluster, WarmStart};
+use crate::solver::{gram_dataset, KernelModel};
 
-/// Per-iteration record (drives Figures 5 and 6).
-#[derive(Clone, Debug)]
-pub struct IterRecord {
-    pub iter: usize,
-    /// primal objective J at the weights the step was computed from
-    pub objective: f64,
-    /// training loss sum (hinge / eps-insensitive / CS)
-    pub train_loss: f64,
-    /// training error fraction (CLS/MLT) or mean squared residual (SVR)
-    pub train_err: f64,
-    /// held-out metric (accuracy or RMSE) if a test set was supplied
-    pub test_metric: Option<f64>,
-}
-
-/// Everything a training run returns.
-pub struct TrainOutput {
-    pub weights: Weights,
-    pub objective: f64,
-    pub iterations: usize,
-    pub metrics: Metrics,
-    pub history: Vec<IterRecord>,
-    /// populated for KRN runs: the dual model for prediction
-    pub kernel_model: Option<KernelModel>,
-}
-
-enum Cmd {
-    Step(StepInput),
-    Stop,
-}
+pub use crate::engine::{IterRecord, TrainOutput};
 
 /// Train with the configured topology/backend. Convenience wrapper
 /// without a held-out set.
@@ -70,6 +30,8 @@ pub fn train(ds: &Dataset, cfg: &TrainConfig) -> Result<TrainOutput> {
 /// Train; when `test` is given, the per-iteration history carries the
 /// held-out metric (accuracy for CLS/MLT, RMSE for SVR).
 pub fn train_full(ds: &Dataset, test: Option<&Dataset>, cfg: &TrainConfig) -> Result<TrainOutput> {
+    // reject a task/dataset mismatch before any work — for KRN the
+    // engine's own check would only fire after the O(N^2 K) Gram pass
     match (cfg.task, ds.task) {
         (TaskKind::Cls, Task::Binary)
         | (TaskKind::Svr, Task::Regression)
@@ -82,15 +44,16 @@ pub fn train_full(ds: &Dataset, test: Option<&Dataset>, cfg: &TrainConfig) -> Re
         }
         return train_kernel(ds, test, cfg);
     }
-    train_inner(ds, test, cfg, None, ds)
+    let mut cluster = Cluster::new(ds, cfg)?;
+    cluster.run_session(cfg, test, WarmStart::Cold)
 }
 
 /// KRN: swap in the Gram-row dataset and the Gram regularizer (§3.1),
 /// then reuse the LIN machinery verbatim.
 fn train_kernel(ds: &Dataset, test: Option<&Dataset>, cfg: &TrainConfig) -> Result<TrainOutput> {
     let (kds, gram) = gram_dataset(ds, &cfg.kernel);
-    let gram = Arc::new(gram);
-    let mut out = train_inner(&kds, None, cfg, Some(gram), ds)?;
+    let mut cluster = Cluster::with_gram(&kds, cfg, Some(Arc::new(gram)))?;
+    let mut out = cluster.run_session(cfg, None, WarmStart::Cold)?;
     let omega = out.weights.single().to_vec();
     let model = KernelModel { train: ds.clone(), omega, cfg: cfg.kernel };
     if let Some(te) = test {
@@ -101,284 +64,4 @@ fn train_kernel(ds: &Dataset, test: Option<&Dataset>, cfg: &TrainConfig) -> Resu
     }
     out.kernel_model = Some(model);
     Ok(out)
-}
-
-fn train_inner(
-    ds: &Dataset,
-    test: Option<&Dataset>,
-    cfg: &TrainConfig,
-    gram: Option<Arc<Mat>>,
-    orig: &Dataset,
-) -> Result<TrainOutput> {
-    let n = ds.n;
-    let p = cfg.workers.max(1);
-    let ds_arc = Arc::new(ds.clone());
-    let shards: Vec<_> = shard_ranges(n, p).into_iter().map(|s| s.range).collect();
-    let workers = backend::make_workers(cfg, &ds_arc, &shards)?;
-    let dim = workers.iter().map(|w| w.stat_dim()).max().unwrap_or(ds.k);
-    let mut master = backend::make_master(cfg, dim, gram.clone())?;
-
-    let mut metrics = Metrics::new();
-    let mut history: Vec<IterRecord> = Vec::new();
-    let mut leader_rng = Pcg64::new_stream(cfg.seed, 0x1ead);
-    let mut leader_normals = NormalSource::new();
-
-    // MC running average (post burn-in)
-    let mut avg: Option<Vec<f32>> = None;
-    let mut avg_count = 0usize;
-
-    let m_classes = match ds.task {
-        Task::Multiclass(m) => m,
-        _ => 1,
-    };
-    let mut w_all = Mat::zeros(m_classes.max(1), dim);
-    let mut w = Arc::new(vec![0f32; dim]);
-
-    let result: Result<()> = std::thread::scope(|scope| {
-        // Worker pool: real threads (the default; MPI-rank analogue) or
-        // the sequential cluster simulator. In simulate mode each worker
-        // runs serially on this thread and the "parallel" iteration time
-        // recorded in metrics is max(worker durations) — the cost model
-        // of the paper's homogeneous cluster (§4.1), which lets the
-        // scaling benches sweep P far beyond this box's physical cores.
-        let mut seq_workers: Vec<Box<dyn WorkerBackend>> = Vec::new();
-        let (res_tx, res_rx) = mpsc::channel::<(usize, Result<PartialStats>, Duration)>();
-        let mut cmd_txs = Vec::new();
-        if cfg.simulate_cluster {
-            seq_workers = workers;
-        } else {
-            for (wid, mut wk) in workers.into_iter().enumerate() {
-                let (tx, rx) = mpsc::channel::<Cmd>();
-                cmd_txs.push(tx);
-                let res_tx = res_tx.clone();
-                scope.spawn(move || {
-                    while let Ok(cmd) = rx.recv() {
-                        match cmd {
-                            Cmd::Stop => break,
-                            Cmd::Step(input) => {
-                                let t0 = Instant::now();
-                                let r = wk.step(&input);
-                                let _ = res_tx.send((wid, r, t0.elapsed()));
-                            }
-                        }
-                    }
-                });
-            }
-        }
-        drop(res_tx);
-
-        // one broadcast+collect+reduce round; returns reduced stats
-        let mut collect = |input: StepInput, metrics: &mut Metrics| -> Result<PartialStats> {
-            let partials: Vec<PartialStats> = if cfg.simulate_cluster {
-                let mut max_step = Duration::ZERO;
-                let mut out = Vec::with_capacity(p);
-                for wk in seq_workers.iter_mut() {
-                    let t0 = Instant::now();
-                    out.push(wk.step(&input)?);
-                    max_step = max_step.max(t0.elapsed());
-                }
-                metrics.add(Phase::LocalStats, max_step);
-                out
-            } else {
-                let t0 = Instant::now();
-                for tx in &cmd_txs {
-                    tx.send(Cmd::Step(input.clone()))
-                        .map_err(|_| anyhow!("worker hung up"))?;
-                }
-                metrics.add(Phase::Broadcast, t0.elapsed());
-                let mut slots: Vec<Option<PartialStats>> = (0..p).map(|_| None).collect();
-                let mut max_step = Duration::ZERO;
-                for _ in 0..p {
-                    let (wid, r, dur) = res_rx.recv().context("worker died")?;
-                    slots[wid] = Some(r?);
-                    max_step = max_step.max(dur);
-                }
-                metrics.add(Phase::LocalStats, max_step);
-                slots.into_iter().map(Option::unwrap).collect()
-            };
-            metrics.reduces += 1;
-            Ok(metrics.time(Phase::Reduce, || reduce::reduce(cfg.reduce, partials)))
-        };
-
-        let mut j_prev = f64::INFINITY;
-        let mut smooth: Vec<f64> = Vec::new();
-        for iter in 0..cfg.max_iters {
-            let (loss_sum, err_sum, j) = match cfg.task {
-                TaskKind::Mlt => {
-                    let mut loss_sum = 0f64;
-                    let mut err_sum = 0f64;
-                    for y in 0..m_classes {
-                        // Gauss-Seidel over class blocks: each class sees
-                        // the already-updated weights of earlier classes
-                        let w_arc = Arc::new(w_all.clone());
-                        let mut stats = collect(
-                            StepInput::Mlt { w_all: w_arc, yidx: y },
-                            &mut metrics,
-                        )?;
-                        if y == 0 {
-                            loss_sum = stats.obj;
-                            err_sum = stats.aux;
-                        }
-                        let noise = mc_noise(cfg, dim, &mut leader_rng, &mut leader_normals);
-                        let wy = metrics
-                            .time(Phase::DrawMu, || master.solve(&mut stats, noise.as_deref()))?;
-                        w_all.row_mut(y).copy_from_slice(&wy);
-                    }
-                    let j = 0.5 * cfg.lambda as f64
-                        * crate::linalg::norm2_sq(&w_all.data) as f64
-                        + 2.0 * loss_sum;
-                    (loss_sum, err_sum, j)
-                }
-                _ => {
-                    let input = match cfg.task {
-                        TaskKind::Cls => StepInput::Binary { w: w.clone() },
-                        TaskKind::Svr => {
-                            StepInput::Svr { w: w.clone(), eps_ins: cfg.eps_insensitive }
-                        }
-                        TaskKind::Mlt => unreachable!(),
-                    };
-                    let mut stats = collect(input, &mut metrics)?;
-                    let loss_sum = stats.obj;
-                    let err_sum = stats.aux;
-                    let j = reg_quad(cfg, &gram, &w) + 2.0 * loss_sum;
-                    let noise = mc_noise(cfg, dim, &mut leader_rng, &mut leader_normals);
-                    let w_new = metrics
-                        .time(Phase::DrawMu, || master.solve(&mut stats, noise.as_deref()))?;
-                    w = Arc::new(w_new);
-                    (loss_sum, err_sum, j)
-                }
-            };
-
-            // MC running average (post burn-in)
-            if cfg.algo == Algo::Mc && iter >= cfg.burn_in {
-                let cur: &[f32] = match cfg.task {
-                    TaskKind::Mlt => &w_all.data,
-                    _ => &w,
-                };
-                match &mut avg {
-                    None => {
-                        avg = Some(cur.to_vec());
-                        avg_count = 1;
-                    }
-                    Some(a) => {
-                        avg_count += 1;
-                        let alpha = 1.0 / avg_count as f32;
-                        for (ai, ci) in a.iter_mut().zip(cur) {
-                            *ai += alpha * (ci - *ai);
-                        }
-                    }
-                }
-            }
-
-            // held-out metric for the history (Figure 6)
-            let test_metric = metrics.time(Phase::Other, || {
-                test.filter(|_| cfg.model == ModelKind::Linear).map(|te| {
-                    let weights = snapshot_weights(cfg, ds, &w, &w_all, &avg, m_classes);
-                    crate::model::evaluate(te, &weights)
-                })
-            });
-
-            history.push(IterRecord {
-                iter,
-                objective: j,
-                train_loss: loss_sum,
-                train_err: match cfg.task {
-                    TaskKind::Svr => err_sum / n as f64, // mean squared residual
-                    _ => err_sum / n as f64,             // error fraction
-                },
-                test_metric,
-            });
-            metrics.iterations = iter + 1;
-
-            // stopping rule (§5.5): change of (smoothed, for MC) J
-            let j_s = if cfg.algo == Algo::Mc {
-                smooth.push(j);
-                let lo = smooth.len().saturating_sub(5);
-                smooth[lo..].iter().sum::<f64>() / (smooth.len() - lo) as f64
-            } else {
-                j
-            };
-            let min_iters = if cfg.algo == Algo::Mc { cfg.burn_in + 5 } else { 2 };
-            if iter >= min_iters && (j_prev - j_s).abs() <= cfg.tol as f64 * n as f64 {
-                break;
-            }
-            j_prev = j_s;
-        }
-
-        for tx in &cmd_txs {
-            let _ = tx.send(Cmd::Stop);
-        }
-        Ok(())
-    });
-    result?;
-
-    let weights = snapshot_weights(cfg, ds, &w, &w_all, &avg, m_classes);
-    let objective = history.last().map(|h| h.objective).unwrap_or(f64::INFINITY);
-    let iterations = history.len();
-    let _ = orig; // kernel caller re-wraps; kept for API symmetry
-    Ok(TrainOutput { weights, objective, iterations, metrics, history, kernel_model: None })
-}
-
-/// lam/2 * w^T R w (R = I for LIN, Gram for KRN).
-fn reg_quad(cfg: &TrainConfig, gram: &Option<Arc<Mat>>, w: &[f32]) -> f64 {
-    match gram {
-        None => 0.5 * cfg.lambda as f64 * crate::linalg::norm2_sq(w) as f64,
-        Some(g) => {
-            let k = g.rows.min(w.len());
-            let mut q = 0f64;
-            for i in 0..k {
-                q += w[i] as f64 * crate::linalg::dot(&g.row(i)[..k], &w[..k]) as f64;
-            }
-            0.5 * cfg.lambda as f64 * q
-        }
-    }
-}
-
-/// MC posterior noise for the master draw.
-fn mc_noise(
-    cfg: &TrainConfig,
-    dim: usize,
-    rng: &mut Pcg64,
-    normals: &mut NormalSource,
-) -> Option<Vec<f32>> {
-    (cfg.algo == Algo::Mc).then(|| {
-        let mut z = vec![0f32; dim];
-        normals.fill_f32(rng, &mut z);
-        z
-    })
-}
-
-/// Current model snapshot: EM takes the latest weights, MC the running
-/// post-burn-in average (§5.13); always truncated back to the dataset's
-/// true feature width (XLA pads).
-fn snapshot_weights(
-    cfg: &TrainConfig,
-    ds: &Dataset,
-    w: &Arc<Vec<f32>>,
-    w_all: &Mat,
-    avg: &Option<Vec<f32>>,
-    m_classes: usize,
-) -> Weights {
-    let k = ds.k;
-    match cfg.task {
-        TaskKind::Mlt => {
-            let dim = w_all.cols;
-            let src: &[f32] = match (cfg.algo, avg) {
-                (Algo::Mc, Some(a)) => a,
-                _ => &w_all.data,
-            };
-            let mut out = Mat::zeros(m_classes, k);
-            for c in 0..m_classes {
-                out.row_mut(c).copy_from_slice(&src[c * dim..c * dim + k]);
-            }
-            Weights::PerClass(out)
-        }
-        _ => {
-            let src: &[f32] = match (cfg.algo, avg) {
-                (Algo::Mc, Some(a)) => a,
-                _ => w,
-            };
-            Weights::Single(src[..k].to_vec())
-        }
-    }
 }

@@ -1,8 +1,15 @@
 //! The reduce step: sum the P workers' partial statistics.
 //!
 //! `flat` folds at the leader (O(P K^2) sequential); `tree` merges pairs
-//! in log2(P) parallel rounds — the topology behind the `K^2 log(P)`
-//! term in the paper's Table 1.
+//! in log2(P) rounds — the topology behind the `K^2 log(P)` term in the
+//! paper's Table 1.
+//!
+//! Both run on the calling thread: in the threaded topology the engine's
+//! pool dispatches the tree's pair merges onto its own worker threads
+//! (`engine::pool`) rather than spawning fresh OS threads per round, and
+//! the sequential simulator uses this serial tree directly. The pairing
+//! order here (slot `i` absorbs slot `i + stride`) is identical to the
+//! in-pool version, so the two produce bit-identical f32 sums.
 
 use crate::config::ReduceKind;
 use crate::solver::PartialStats;
@@ -25,18 +32,12 @@ pub fn reduce(kind: ReduceKind, mut partials: Vec<PartialStats>) -> PartialStats
 fn tree_reduce(mut partials: Vec<PartialStats>) -> PartialStats {
     let mut stride = 1usize;
     while stride < partials.len() {
-        // each round's merges run in parallel, like simultaneous
-        // pairwise exchanges on a cluster
-        std::thread::scope(|scope| {
-            for chunk in partials.chunks_mut(2 * stride) {
-                if chunk.len() > stride {
-                    let (a, b) = chunk.split_at_mut(stride);
-                    let dst = &mut a[0];
-                    let src = &b[0];
-                    scope.spawn(move || dst.merge(src));
-                }
-            }
-        });
+        let mut i = 0usize;
+        while i + stride < partials.len() {
+            let (a, b) = partials.split_at_mut(i + stride);
+            a[i].merge(&b[0]);
+            i += 2 * stride;
+        }
         stride *= 2;
     }
     partials.swap_remove(0)

@@ -167,6 +167,33 @@ impl Dataset {
         }
     }
 
+    /// Drop the first `n0` rows — the complement of [`subset_rows`]
+    /// (`ds.subset_rows(hi).subset_rows_from(lo)` is the row window
+    /// `lo..hi`, which the out-of-core baseline streams block by block).
+    ///
+    /// [`subset_rows`]: Dataset::subset_rows
+    pub fn subset_rows_from(&self, n0: usize) -> Dataset {
+        let n0 = n0.min(self.n);
+        let labels = self.labels[n0..].to_vec();
+        match &self.features {
+            Features::Dense { data } => {
+                Dataset::dense(data[n0 * self.k..].to_vec(), labels, self.k, self.task)
+            }
+            Features::Sparse { indptr, indices, values } => {
+                let start = indptr[n0];
+                let ip: Vec<usize> = indptr[n0..].iter().map(|&p| p - start).collect();
+                Dataset::sparse(
+                    ip,
+                    indices[start..].to_vec(),
+                    values[start..].to_vec(),
+                    labels,
+                    self.k,
+                    self.task,
+                )
+            }
+        }
+    }
+
     /// Keep only features with index < k0 (paper §5.3's "K = K0 subset").
     pub fn subset_features(&self, k0: usize) -> Dataset {
         let k0 = k0.min(self.k);
@@ -260,6 +287,16 @@ mod tests {
         assert_eq!(f.k, 2);
         // feature index 2 dropped from row 1
         assert_eq!(f.sparse_row(1).unwrap().0, &[0u32]);
+    }
+
+    #[test]
+    fn subset_rows_from_is_a_row_window() {
+        let ds = tiny_sparse();
+        let w = ds.subset_rows(3).subset_rows_from(1);
+        assert_eq!(w.n, 2);
+        assert_eq!(w.labels, vec![-1.0, 1.0]);
+        assert_eq!(w.sparse_row(0).unwrap().0, &[0u32, 2]);
+        assert!(w.sparse_row(1).unwrap().0.is_empty());
     }
 
     #[test]

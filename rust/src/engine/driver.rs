@@ -1,0 +1,221 @@
+//! Per-task iteration drivers: each task owns its step input, objective
+//! assembly and weight state, while [`super::Cluster::run_session`] owns
+//! the shared session scaffolding (stopping rule, MC averaging,
+//! history). This replaces the pre-engine `train_inner`, which
+//! interleaved all three tasks in one 200-line loop.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::backend::StepInput;
+use crate::linalg::Mat;
+use crate::model::Weights;
+
+use super::EngineCtx;
+
+/// What one driver iteration reports back to the session loop.
+pub struct IterStats {
+    /// training loss sum (hinge / eps-insensitive / CS) at the
+    /// pre-update weights
+    pub loss_sum: f64,
+    /// task-dependent second statistic summed over data: error count
+    /// (CLS/MLT) or squared residuals (SVR)
+    pub err_sum: f64,
+    /// primal objective J at the pre-update weights
+    pub objective: f64,
+}
+
+/// One task's `worker step -> reduce -> master solve` round.
+pub trait IterDriver {
+    /// Run one full iteration, updating the internal weights.
+    fn iterate(&mut self, cx: &mut EngineCtx<'_>) -> Result<IterStats>;
+
+    /// Flat view of the current weights (for the MC running average).
+    fn current(&self) -> &[f32];
+
+    /// Seed the weights from a previous session's solution.
+    fn warm_start(&mut self, w: &Weights) -> Result<()>;
+
+    /// Model snapshot truncated to the dataset's true feature width
+    /// `k` (the XLA backend pads); `avg` substitutes the MC
+    /// post-burn-in average when present.
+    fn snapshot(&self, k: usize, avg: Option<&[f32]>) -> Weights;
+}
+
+/// Shared state/logic of the single-weight-vector tasks (CLS, SVR):
+/// the two drivers differ only in the `StepInput` they broadcast.
+struct SingleWeight {
+    w: Arc<Vec<f32>>,
+}
+
+impl SingleWeight {
+    fn new(dim: usize) -> Self {
+        SingleWeight { w: Arc::new(vec![0.0; dim]) }
+    }
+
+    fn iterate_with(
+        &mut self,
+        cx: &mut EngineCtx<'_>,
+        input: StepInput,
+    ) -> Result<IterStats> {
+        let mut stats = cx.collect(input)?;
+        let loss_sum = stats.obj;
+        let err_sum = stats.aux;
+        let objective = cx.reg_quad(&self.w) + 2.0 * loss_sum;
+        self.w = Arc::new(cx.solve(&mut stats)?);
+        Ok(IterStats { loss_sum, err_sum, objective })
+    }
+
+    fn warm_start(&mut self, w: &Weights) -> Result<()> {
+        let Weights::Single(src) = w else {
+            bail!("warm start: CLS/SVR session expects a single weight vector");
+        };
+        self.w = Arc::new(pad_to(src, self.w.len()));
+        Ok(())
+    }
+
+    fn snapshot(&self, k: usize, avg: Option<&[f32]>) -> Weights {
+        let src: &[f32] = avg.unwrap_or(&self.w);
+        Weights::Single(src[..k.min(src.len())].to_vec())
+    }
+}
+
+/// Binary hinge classification (Eqs. 5/9 + 40); also drives KRN, where
+/// `w` is the dual vector omega over Gram-row features.
+pub struct BinaryDriver(SingleWeight);
+
+impl BinaryDriver {
+    pub fn new(dim: usize) -> Self {
+        BinaryDriver(SingleWeight::new(dim))
+    }
+}
+
+impl IterDriver for BinaryDriver {
+    fn iterate(&mut self, cx: &mut EngineCtx<'_>) -> Result<IterStats> {
+        let input = StepInput::Binary { w: self.0.w.clone() };
+        self.0.iterate_with(cx, input)
+    }
+
+    fn current(&self) -> &[f32] {
+        &self.0.w
+    }
+
+    fn warm_start(&mut self, w: &Weights) -> Result<()> {
+        self.0.warm_start(w)
+    }
+
+    fn snapshot(&self, k: usize, avg: Option<&[f32]>) -> Weights {
+        self.0.snapshot(k, avg)
+    }
+}
+
+/// Epsilon-insensitive regression (Lemma 3 + Eqs. 25-28).
+pub struct SvrDriver(SingleWeight);
+
+impl SvrDriver {
+    pub fn new(dim: usize) -> Self {
+        SvrDriver(SingleWeight::new(dim))
+    }
+}
+
+impl IterDriver for SvrDriver {
+    fn iterate(&mut self, cx: &mut EngineCtx<'_>) -> Result<IterStats> {
+        let input =
+            StepInput::Svr { w: self.0.w.clone(), eps_ins: cx.cfg.eps_insensitive };
+        self.0.iterate_with(cx, input)
+    }
+
+    fn current(&self) -> &[f32] {
+        &self.0.w
+    }
+
+    fn warm_start(&mut self, w: &Weights) -> Result<()> {
+        self.0.warm_start(w)
+    }
+
+    fn snapshot(&self, k: usize, avg: Option<&[f32]>) -> Weights {
+        self.0.snapshot(k, avg)
+    }
+}
+
+/// Crammer-Singer multiclass: one Gauss-Seidel sweep over the M class
+/// blocks per iteration (§3.3) — each class sees the already-updated
+/// weights of earlier classes.
+pub struct CsBlockDriver {
+    w_all: Arc<Mat>,
+    m: usize,
+}
+
+impl CsBlockDriver {
+    pub fn new(m: usize, dim: usize) -> Self {
+        let m = m.max(1);
+        CsBlockDriver { w_all: Arc::new(Mat::zeros(m, dim)), m }
+    }
+}
+
+impl IterDriver for CsBlockDriver {
+    fn iterate(&mut self, cx: &mut EngineCtx<'_>) -> Result<IterStats> {
+        let mut loss_sum = 0f64;
+        let mut err_sum = 0f64;
+        for y in 0..self.m {
+            let input = StepInput::Mlt { w_all: self.w_all.clone(), yidx: y };
+            let mut stats = cx.collect(input)?;
+            // the CS loss / error count cover all classes at once, so
+            // they are only meaningful from the first class's pass
+            if y == 0 {
+                loss_sum = stats.obj;
+                err_sum = stats.aux;
+            }
+            let wy = cx.solve(&mut stats)?;
+            // every worker has dropped its share of the broadcast Arc by
+            // now, so this updates the block in place instead of cloning
+            // the whole [m, dim] matrix per class
+            Arc::make_mut(&mut self.w_all).row_mut(y).copy_from_slice(&wy);
+        }
+        let objective = 0.5 * cx.cfg.lambda as f64
+            * crate::linalg::norm2_sq(&self.w_all.data) as f64
+            + 2.0 * loss_sum;
+        Ok(IterStats { loss_sum, err_sum, objective })
+    }
+
+    fn current(&self) -> &[f32] {
+        &self.w_all.data
+    }
+
+    fn warm_start(&mut self, w: &Weights) -> Result<()> {
+        let Weights::PerClass(src) = w else {
+            bail!("warm start: MLT session expects per-class weights");
+        };
+        if src.rows != self.m {
+            bail!("warm start: {} classes, cluster has {}", src.rows, self.m);
+        }
+        let dst = Arc::make_mut(&mut self.w_all);
+        let n = src.cols.min(dst.cols);
+        for c in 0..src.rows {
+            dst.row_mut(c)[..n].copy_from_slice(&src.row(c)[..n]);
+        }
+        Ok(())
+    }
+
+    fn snapshot(&self, k: usize, avg: Option<&[f32]>) -> Weights {
+        let dim = self.w_all.cols;
+        let src: &[f32] = avg.unwrap_or(&self.w_all.data);
+        let kk = k.min(dim);
+        let mut out = Mat::zeros(self.m, kk);
+        for c in 0..self.m {
+            out.row_mut(c).copy_from_slice(&src[c * dim..c * dim + kk]);
+        }
+        Weights::PerClass(out)
+    }
+}
+
+/// Copy `src` into a zero vector of width `dim` (truncating or
+/// zero-extending: sessions may warm-start across backends whose
+/// padded stat widths differ).
+fn pad_to(src: &[f32], dim: usize) -> Vec<f32> {
+    let mut v = vec![0f32; dim];
+    let n = src.len().min(dim);
+    v[..n].copy_from_slice(&src[..n]);
+    v
+}

@@ -1,0 +1,392 @@
+//! The persistent training engine — the architectural seam between "run
+//! one `train()`" and "serve sustained training traffic".
+//!
+//! A [`Cluster`] is built **once** from a dataset + topology config: it
+//! shards the data, constructs one worker backend per shard (uploading
+//! chunk literals on the XLA backend — the expensive part), and, in the
+//! threaded topology, spawns the worker threads. It then runs any number
+//! of **sessions** — repeated solves, lambda/config sweeps, warm starts
+//! from a previous solution — without re-spawning threads or re-sharding
+//! data. The paper's iteration is an embarrassingly parallel
+//! `worker step -> reduce -> master solve` round (§4.1); amortizing the
+//! cluster setup across solves is where sustained-traffic throughput
+//! comes from (cf. arXiv:1406.5161, arXiv:2207.01016).
+//!
+//! Three pieces (see DESIGN.md §2):
+//!
+//! * [`pool::Pool`] — the worker runtime behind a [`Topology`]: real
+//!   threads or the sequential cluster cost model, plus the in-pool
+//!   tree reduce (pair merges on worker threads).
+//! * [`driver::IterDriver`] — per-task iteration logic:
+//!   [`driver::BinaryDriver`], [`driver::SvrDriver`],
+//!   [`driver::CsBlockDriver`].
+//! * [`Cluster::run_session`] — the shared session scaffolding:
+//!   stopping rule (§5.5), MC burn-in averaging (§5.13), history,
+//!   metrics.
+//!
+//! `coordinator::train` / `train_full` remain as thin one-shot wrappers.
+
+pub mod driver;
+pub mod pool;
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+pub use driver::{BinaryDriver, CsBlockDriver, IterDriver, IterStats, SvrDriver};
+pub use pool::Pool;
+
+use crate::backend::{self, MasterBackend, StepInput};
+use crate::config::{Algo, ModelKind, TaskKind, TrainConfig};
+use crate::data::{shard_ranges, Dataset, Task};
+use crate::linalg::Mat;
+use crate::metrics::{Metrics, Phase};
+use crate::model::Weights;
+use crate::rng::{NormalSource, Pcg64};
+use crate::solver::{KernelModel, PartialStats};
+
+/// Per-iteration record (drives Figures 5 and 6).
+#[derive(Clone, Debug)]
+pub struct IterRecord {
+    pub iter: usize,
+    /// primal objective J at the weights the step was computed from
+    pub objective: f64,
+    /// training loss sum (hinge / eps-insensitive / CS)
+    pub train_loss: f64,
+    /// `err_sum / N`: the training **error fraction** for CLS/MLT (aux
+    /// counts misclassifications) and the **mean squared residual** for
+    /// SVR (aux sums squared residuals) — same ratio, different statistic
+    pub train_err: f64,
+    /// held-out metric (accuracy or RMSE) if a test set was supplied
+    pub test_metric: Option<f64>,
+}
+
+/// Everything a training session returns.
+pub struct TrainOutput {
+    pub weights: Weights,
+    pub objective: f64,
+    pub iterations: usize,
+    pub metrics: Metrics,
+    pub history: Vec<IterRecord>,
+    /// populated for KRN runs: the dual model for prediction
+    pub kernel_model: Option<KernelModel>,
+}
+
+/// How a session initializes its weights.
+#[derive(Clone, Copy, Debug, Default)]
+pub enum WarmStart<'a> {
+    /// start from zero
+    #[default]
+    Cold,
+    /// start from the cluster's previous session's solution (cold if
+    /// no session has run yet)
+    Last,
+    /// start from explicit weights
+    Weights(&'a Weights),
+}
+
+/// What the drivers see each iteration: the pool, the master backend,
+/// and the session's config/RNG/metrics, behind two composite
+/// operations (`collect`, `solve`).
+pub struct EngineCtx<'a> {
+    pool: &'a mut Pool,
+    master: &'a mut dyn MasterBackend,
+    metrics: &'a mut Metrics,
+    pub(crate) cfg: &'a TrainConfig,
+    gram: Option<&'a Arc<Mat>>,
+    rng: &'a mut Pcg64,
+    normals: &'a mut NormalSource,
+    dim: usize,
+}
+
+impl EngineCtx<'_> {
+    /// One broadcast + collect + reduce round.
+    pub fn collect(&mut self, input: StepInput) -> Result<PartialStats> {
+        let partials = self.pool.step_all(input, self.metrics)?;
+        self.pool.reduce(self.cfg.reduce, partials, self.metrics)
+    }
+
+    /// The master solve (Eq. 6), drawing MC posterior noise when the
+    /// session runs the sampler.
+    pub fn solve(&mut self, stats: &mut PartialStats) -> Result<Vec<f32>> {
+        let noise = (self.cfg.algo == Algo::Mc).then(|| {
+            let mut z = vec![0f32; self.dim];
+            self.normals.fill_f32(self.rng, &mut z);
+            z
+        });
+        let master = &mut *self.master;
+        self.metrics.time(Phase::DrawMu, || master.solve(stats, noise.as_deref()))
+    }
+
+    /// `lam/2 w^T R w` — R = I for LIN, the Gram matrix for KRN (§3.1).
+    pub fn reg_quad(&self, w: &[f32]) -> f64 {
+        match self.gram {
+            None => 0.5 * self.cfg.lambda as f64 * crate::linalg::norm2_sq(w) as f64,
+            Some(g) => {
+                let k = g.rows.min(w.len());
+                let mut q = 0f64;
+                for i in 0..k {
+                    q += w[i] as f64 * crate::linalg::dot(&g.row(i)[..k], &w[..k]) as f64;
+                }
+                0.5 * self.cfg.lambda as f64 * q
+            }
+        }
+    }
+}
+
+/// The stopping rule (§5.5): `|J_m - J_{m-1}| <= tol * N`, on a
+/// 5-iteration moving average of J for the MC sampler.
+struct StopRule {
+    j_prev: f64,
+    smooth: Vec<f64>,
+    mc: bool,
+    min_iters: usize,
+    tol_n: f64,
+}
+
+impl StopRule {
+    fn new(cfg: &TrainConfig, n: usize) -> Self {
+        let mc = cfg.algo == Algo::Mc;
+        StopRule {
+            j_prev: f64::INFINITY,
+            smooth: Vec::new(),
+            mc,
+            min_iters: if mc { cfg.burn_in + 5 } else { 2 },
+            tol_n: cfg.tol as f64 * n as f64,
+        }
+    }
+
+    fn converged(&mut self, iter: usize, j: f64) -> bool {
+        let j_s = if self.mc {
+            self.smooth.push(j);
+            let lo = self.smooth.len().saturating_sub(5);
+            self.smooth[lo..].iter().sum::<f64>() / (self.smooth.len() - lo) as f64
+        } else {
+            j
+        };
+        let stop = iter >= self.min_iters && (self.j_prev - j_s).abs() <= self.tol_n;
+        self.j_prev = j_s;
+        stop
+    }
+}
+
+/// A persistent worker-pool cluster bound to one dataset.
+///
+/// Construction pays the full setup cost (clone + shard the dataset,
+/// build one backend per shard, spawn threads); every subsequent
+/// [`run_session`](Cluster::run_session) reuses all of it.
+pub struct Cluster {
+    cfg: TrainConfig,
+    ds: Arc<Dataset>,
+    gram: Option<Arc<Mat>>,
+    pool: Pool,
+    /// statistics width: `ds.k`, or the padded width on the XLA backend
+    dim: usize,
+    m_classes: usize,
+    sessions: usize,
+    last: Option<Weights>,
+}
+
+impl Cluster {
+    /// Build a cluster over `ds` with `cfg`'s topology (workers,
+    /// backend, algo, seed and topology are fixed for the cluster's
+    /// lifetime; per-session knobs like lambda/tol/max_iters may vary).
+    pub fn new(ds: &Dataset, cfg: &TrainConfig) -> Result<Cluster> {
+        Self::with_gram(ds, cfg, None)
+    }
+
+    /// KRN variant: `ds` is the Gram-row dataset and `gram` the Gram
+    /// regularizer (§3.1).
+    pub fn with_gram(
+        ds: &Dataset,
+        cfg: &TrainConfig,
+        gram: Option<Arc<Mat>>,
+    ) -> Result<Cluster> {
+        match (cfg.task, ds.task) {
+            (TaskKind::Cls, Task::Binary)
+            | (TaskKind::Svr, Task::Regression)
+            | (TaskKind::Mlt, Task::Multiclass(_)) => {}
+            (t, d) => bail!("config task {t:?} does not match dataset task {d:?}"),
+        }
+        let p = cfg.workers.max(1);
+        let ds_arc = Arc::new(ds.clone());
+        let shards: Vec<_> = shard_ranges(ds.n, p).into_iter().map(|s| s.range).collect();
+        let workers = backend::make_workers(cfg, &ds_arc, &shards)?;
+        let dim = workers.iter().map(|w| w.stat_dim()).max().unwrap_or(ds.k);
+        let pool = Pool::spawn(workers, cfg.topology);
+        let m_classes = match ds.task {
+            Task::Multiclass(m) => m,
+            _ => 1,
+        };
+        Ok(Cluster {
+            cfg: cfg.clone(),
+            ds: ds_arc,
+            gram,
+            pool,
+            dim,
+            m_classes,
+            sessions: 0,
+            last: None,
+        })
+    }
+
+    pub fn workers(&self) -> usize {
+        self.pool.len()
+    }
+
+    /// Sessions completed on this cluster so far.
+    pub fn sessions(&self) -> usize {
+        self.sessions
+    }
+
+    /// The previous session's solution, if any.
+    pub fn last_weights(&self) -> Option<&Weights> {
+        self.last.as_ref()
+    }
+
+    /// A session config must agree with the cluster on everything baked
+    /// into the workers at construction.
+    fn check_compat(&self, cfg: &TrainConfig) -> Result<()> {
+        let base = &self.cfg;
+        if cfg.workers.max(1) != self.pool.len() {
+            bail!(
+                "session wants {} workers, cluster was built with {}",
+                cfg.workers.max(1),
+                self.pool.len()
+            );
+        }
+        if cfg.backend != base.backend {
+            bail!("session backend {:?} != cluster backend {:?}", cfg.backend, base.backend);
+        }
+        if cfg.algo != base.algo {
+            bail!(
+                "session algo {:?} != cluster algo {:?} (worker gamma mode is fixed at \
+                 construction)",
+                cfg.algo,
+                base.algo
+            );
+        }
+        if cfg.task != base.task {
+            bail!("session task {:?} != cluster task {:?}", cfg.task, base.task);
+        }
+        if cfg.seed != base.seed {
+            bail!("session seed {} != cluster seed {} (worker RNG streams)", cfg.seed, base.seed);
+        }
+        if cfg.eps_clamp != base.eps_clamp {
+            bail!("session eps_clamp differs from the cluster's");
+        }
+        if cfg.topology != base.topology {
+            bail!(
+                "session topology {:?} != cluster topology {:?}",
+                cfg.topology,
+                base.topology
+            );
+        }
+        Ok(())
+    }
+
+    /// Convenience: one session under the cluster's own config.
+    pub fn train(&mut self, test: Option<&Dataset>) -> Result<TrainOutput> {
+        let cfg = self.cfg.clone();
+        self.run_session(&cfg, test, WarmStart::Cold)
+    }
+
+    /// Run one training session on the live cluster. Threads stay up and
+    /// shards stay resident across calls; only the master backend and
+    /// the driver's weight state are per-session.
+    pub fn run_session(
+        &mut self,
+        cfg: &TrainConfig,
+        test: Option<&Dataset>,
+        warm: WarmStart<'_>,
+    ) -> Result<TrainOutput> {
+        self.check_compat(cfg)?;
+        let mut master = backend::make_master(cfg, self.dim, self.gram.clone())?;
+        let mut metrics = Metrics::new();
+        let mut history: Vec<IterRecord> = Vec::new();
+        let mut rng = Pcg64::new_stream(cfg.seed, 0x1ead);
+        let mut normals = NormalSource::new();
+
+        let mut drv: Box<dyn IterDriver> = match cfg.task {
+            TaskKind::Cls => Box::new(BinaryDriver::new(self.dim)),
+            TaskKind::Svr => Box::new(SvrDriver::new(self.dim)),
+            TaskKind::Mlt => Box::new(CsBlockDriver::new(self.m_classes, self.dim)),
+        };
+        match warm {
+            WarmStart::Cold => {}
+            WarmStart::Weights(w) => drv.warm_start(w)?,
+            WarmStart::Last => {
+                if let Some(w) = self.last.clone() {
+                    drv.warm_start(&w)?;
+                }
+            }
+        }
+
+        // MC running average over post-burn-in samples (§5.13)
+        let mut avg: Option<Vec<f32>> = None;
+        let mut avg_count = 0usize;
+
+        let n = self.ds.n;
+        let mut stop = StopRule::new(cfg, n);
+        for iter in 0..cfg.max_iters {
+            let mut cx = EngineCtx {
+                pool: &mut self.pool,
+                master: &mut *master,
+                metrics: &mut metrics,
+                cfg,
+                gram: self.gram.as_ref(),
+                rng: &mut rng,
+                normals: &mut normals,
+                dim: self.dim,
+            };
+            let st = drv.iterate(&mut cx)?;
+            drop(cx);
+
+            if cfg.algo == Algo::Mc && iter >= cfg.burn_in {
+                let cur = drv.current();
+                match &mut avg {
+                    None => {
+                        avg = Some(cur.to_vec());
+                        avg_count = 1;
+                    }
+                    Some(a) => {
+                        avg_count += 1;
+                        let alpha = 1.0 / avg_count as f32;
+                        for (ai, ci) in a.iter_mut().zip(cur) {
+                            *ai += alpha * (ci - *ai);
+                        }
+                    }
+                }
+            }
+
+            // held-out metric for the history (Figure 6)
+            let k = self.ds.k;
+            let test_metric = metrics.time(Phase::Other, || {
+                test.filter(|_| cfg.model == ModelKind::Linear).map(|te| {
+                    let weights = drv.snapshot(k, avg.as_deref());
+                    crate::model::evaluate(te, &weights)
+                })
+            });
+
+            history.push(IterRecord {
+                iter,
+                objective: st.objective,
+                train_loss: st.loss_sum,
+                train_err: st.err_sum / n as f64,
+                test_metric,
+            });
+            metrics.iterations = iter + 1;
+            if stop.converged(iter, st.objective) {
+                break;
+            }
+        }
+
+        let weights = drv.snapshot(self.ds.k, avg.as_deref());
+        let objective = history.last().map(|h| h.objective).unwrap_or(f64::INFINITY);
+        let iterations = history.len();
+        metrics.sessions = 1;
+        self.sessions += 1;
+        self.last = Some(weights.clone());
+        Ok(TrainOutput { weights, objective, iterations, metrics, history, kernel_model: None })
+    }
+}

@@ -1,0 +1,264 @@
+//! The persistent worker pool: the threads, channels and pinned shards
+//! behind [`super::Cluster`].
+//!
+//! In the [`Topology::Threads`] mode each worker backend lives on its
+//! own OS thread for the lifetime of the pool, serving both `Step`
+//! commands (the per-iteration shard pass) and `Merge` commands (the
+//! in-pool tree reduce — pair merges of partial statistics execute on
+//! the worker threads themselves, instead of the leader spawning fresh
+//! OS threads per reduce round as the pre-engine `reduce.rs` did).
+//!
+//! In the [`Topology::Simulate`] mode the same backends run serially on
+//! the leader thread and the metrics record `max(worker durations)` per
+//! iteration — the homogeneous-cluster cost model of the paper's §4.1.
+//! The two modes are numerically identical for a fixed seed: steps see
+//! the same shard/weights, and the tree reduce uses the same pairing
+//! order (so the f32 sums associate identically).
+
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::backend::{StepInput, WorkerBackend};
+use crate::config::{ReduceKind, Topology};
+use crate::coordinator::reduce;
+use crate::metrics::{Metrics, Phase};
+use crate::solver::PartialStats;
+
+enum Cmd {
+    /// One shard pass at the broadcast weights. The `Arc` is the whole
+    /// broadcast: P workers share one `StepInput` instead of receiving
+    /// P deep copies (the `rebind_weights` optimization — for MLT this
+    /// saves P clones of the full `[m, k]` weight block per class).
+    Step(Arc<StepInput>),
+    /// Merge `src` into the partial at tree slot `.0` and hand it back.
+    Merge(usize, Box<PartialStats>, Box<PartialStats>),
+    Stop,
+}
+
+enum Reply {
+    Stepped { wid: usize, stats: Result<PartialStats>, step_time: Duration },
+    Merged { slot: usize, stats: Box<PartialStats> },
+}
+
+enum Mode {
+    Threads {
+        cmd_txs: Vec<Sender<Cmd>>,
+        res_rx: Receiver<Reply>,
+        handles: Vec<JoinHandle<()>>,
+    },
+    Simulate {
+        workers: Vec<Box<dyn WorkerBackend>>,
+    },
+}
+
+/// A set of worker backends bound to their shards, alive across many
+/// training sessions.
+pub struct Pool {
+    mode: Mode,
+}
+
+impl Pool {
+    /// Take ownership of the (already shard-bound) worker backends and,
+    /// in the threaded topology, spawn their threads.
+    pub fn spawn(workers: Vec<Box<dyn WorkerBackend>>, topology: Topology) -> Pool {
+        match topology {
+            Topology::Simulate => Pool { mode: Mode::Simulate { workers } },
+            Topology::Threads => {
+                let (res_tx, res_rx) = mpsc::channel::<Reply>();
+                let mut cmd_txs = Vec::with_capacity(workers.len());
+                let mut handles = Vec::with_capacity(workers.len());
+                for (wid, mut wk) in workers.into_iter().enumerate() {
+                    let (tx, rx) = mpsc::channel::<Cmd>();
+                    cmd_txs.push(tx);
+                    let res_tx = res_tx.clone();
+                    handles.push(std::thread::spawn(move || {
+                        while let Ok(cmd) = rx.recv() {
+                            match cmd {
+                                Cmd::Stop => break,
+                                Cmd::Step(input) => {
+                                    let t0 = Instant::now();
+                                    let stats = wk.step(&input);
+                                    let step_time = t0.elapsed();
+                                    // drop our share of the broadcast
+                                    // *before* replying, so once the
+                                    // leader holds all P replies its Arc
+                                    // is unique again (MLT mutates the
+                                    // weight block in place via make_mut)
+                                    drop(input);
+                                    if res_tx
+                                        .send(Reply::Stepped { wid, stats, step_time })
+                                        .is_err()
+                                    {
+                                        break;
+                                    }
+                                }
+                                Cmd::Merge(slot, mut dst, src) => {
+                                    dst.merge(&src);
+                                    if res_tx.send(Reply::Merged { slot, stats: dst }).is_err() {
+                                        break;
+                                    }
+                                }
+                            }
+                        }
+                    }));
+                }
+                Pool { mode: Mode::Threads { cmd_txs, res_rx, handles } }
+            }
+        }
+    }
+
+    /// Number of workers.
+    pub fn len(&self) -> usize {
+        match &self.mode {
+            Mode::Threads { cmd_txs, .. } => cmd_txs.len(),
+            Mode::Simulate { workers } => workers.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// One broadcast + collect round: every worker steps on `input`;
+    /// partials come back ordered by worker id. Timing goes to the
+    /// `Broadcast` / `LocalStats` phases (max over workers, per §4.1).
+    pub fn step_all(
+        &mut self,
+        input: StepInput,
+        metrics: &mut Metrics,
+    ) -> Result<Vec<PartialStats>> {
+        match &mut self.mode {
+            Mode::Simulate { workers } => {
+                let mut max_step = Duration::ZERO;
+                let mut out = Vec::with_capacity(workers.len());
+                for wk in workers.iter_mut() {
+                    let t0 = Instant::now();
+                    out.push(wk.step(&input)?);
+                    max_step = max_step.max(t0.elapsed());
+                }
+                metrics.add(Phase::LocalStats, max_step);
+                Ok(out)
+            }
+            Mode::Threads { cmd_txs, res_rx, .. } => {
+                let p = cmd_txs.len();
+                let input = Arc::new(input);
+                let t0 = Instant::now();
+                for tx in cmd_txs.iter() {
+                    tx.send(Cmd::Step(input.clone()))
+                        .map_err(|_| anyhow!("worker hung up"))?;
+                }
+                drop(input);
+                metrics.add(Phase::Broadcast, t0.elapsed());
+                let mut slots: Vec<Option<PartialStats>> = (0..p).map(|_| None).collect();
+                let mut max_step = Duration::ZERO;
+                // Consume all P replies even if one step failed: a reply
+                // left queued in the shared channel would be read by the
+                // *next* session on this persistent pool as if current.
+                let mut first_err: Option<anyhow::Error> = None;
+                for _ in 0..p {
+                    match res_rx.recv().context("worker died")? {
+                        Reply::Stepped { wid, stats, step_time } => match stats {
+                            Ok(s) => {
+                                slots[wid] = Some(s);
+                                max_step = max_step.max(step_time);
+                            }
+                            Err(e) => {
+                                if first_err.is_none() {
+                                    first_err = Some(e);
+                                }
+                            }
+                        },
+                        Reply::Merged { .. } => {
+                            return Err(anyhow!("protocol error: merge reply during step"))
+                        }
+                    }
+                }
+                if let Some(e) = first_err {
+                    return Err(e);
+                }
+                metrics.add(Phase::LocalStats, max_step);
+                Ok(slots.into_iter().map(Option::unwrap).collect())
+            }
+        }
+    }
+
+    /// Reduce the P partials to one. `Flat` folds at the leader; `Tree`
+    /// merges pairs — dispatched to the pool's worker threads in the
+    /// threaded topology, serially (identical pairing order, hence
+    /// bit-identical sums) in the simulated one.
+    pub fn reduce(
+        &mut self,
+        kind: ReduceKind,
+        partials: Vec<PartialStats>,
+        metrics: &mut Metrics,
+    ) -> Result<PartialStats> {
+        metrics.reduces += 1;
+        let t0 = Instant::now();
+        let out = match (&mut self.mode, kind) {
+            (Mode::Threads { cmd_txs, res_rx, .. }, ReduceKind::Tree) if partials.len() > 1 => {
+                in_pool_tree(cmd_txs, res_rx, partials)?
+            }
+            (_, kind) => reduce::reduce(kind, partials),
+        };
+        metrics.add(Phase::Reduce, t0.elapsed());
+        Ok(out)
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        if let Mode::Threads { cmd_txs, handles, .. } = &mut self.mode {
+            for tx in cmd_txs.iter() {
+                let _ = tx.send(Cmd::Stop);
+            }
+            for h in handles.drain(..) {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+/// Binary-tree reduce whose pair merges run on the pool's worker
+/// threads: each round's merges are dispatched round-robin and collected
+/// before the stride doubles (the merges of one round overlap, matching
+/// the simultaneous pairwise exchanges of the paper's Table 1).
+///
+/// Pairing is identical to [`reduce::reduce`]'s serial tree — slot `i`
+/// absorbs slot `i + stride` — so both produce the same f32 sums.
+fn in_pool_tree(
+    cmd_txs: &[Sender<Cmd>],
+    res_rx: &Receiver<Reply>,
+    partials: Vec<PartialStats>,
+) -> Result<PartialStats> {
+    let mut slots: Vec<Option<Box<PartialStats>>> =
+        partials.into_iter().map(|p| Some(Box::new(p))).collect();
+    let n = slots.len();
+    let mut stride = 1usize;
+    while stride < n {
+        let mut inflight = 0usize;
+        let mut i = 0usize;
+        while i + stride < n {
+            let dst = slots[i].take().expect("tree slot vacated twice");
+            let src = slots[i + stride].take().expect("tree slot vacated twice");
+            cmd_txs[inflight % cmd_txs.len()]
+                .send(Cmd::Merge(i, dst, src))
+                .map_err(|_| anyhow!("worker hung up during reduce"))?;
+            inflight += 1;
+            i += 2 * stride;
+        }
+        for _ in 0..inflight {
+            match res_rx.recv().context("worker died during reduce")? {
+                Reply::Merged { slot, stats } => slots[slot] = Some(stats),
+                Reply::Stepped { .. } => {
+                    return Err(anyhow!("protocol error: step reply during reduce"))
+                }
+            }
+        }
+        stride *= 2;
+    }
+    Ok(*slots.swap_remove(0).expect("tree root"))
+}

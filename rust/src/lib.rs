@@ -13,10 +13,11 @@
 //!   hot-spot as a Pallas kernel (the paper's GPU kernel, re-thought for
 //!   the MXU).
 //!
-//! Python never runs at training time: the Rust binary loads the
-//! pre-compiled artifacts through PJRT (`xla` crate) and drives
-//! everything. See `DESIGN.md` for the system inventory and the
-//! experiment index, `EXPERIMENTS.md` for paper-vs-measured results.
+//! Python never runs at training time: with the `xla` cargo feature the
+//! Rust binary loads the pre-compiled artifacts through PJRT and drives
+//! everything (the default build is the pure-native backend and
+//! compiles fully offline). See `DESIGN.md` for the system inventory
+//! and architecture, `EXPERIMENTS.md` for the paper-vs-measured index.
 //!
 //! Quick start:
 //!
@@ -29,6 +30,25 @@
 //! let out = pemsvm::coordinator::train(&ds, &cfg).unwrap();
 //! println!("objective {} after {} iters", out.objective, out.iterations);
 //! ```
+//!
+//! For repeated solves (sweeps, warm starts, serving), build a
+//! persistent [`engine::Cluster`] once and run many sessions on it:
+//!
+//! ```no_run
+//! use pemsvm::config::TrainConfig;
+//! use pemsvm::data::synth;
+//! use pemsvm::engine::{Cluster, WarmStart};
+//!
+//! let ds = synth::alpha_like(10_000, 64, 0);
+//! let cfg = TrainConfig::default().with_options("LIN-EM-CLS").unwrap();
+//! let mut cluster = Cluster::new(&ds, &cfg).unwrap();
+//! for lambda in [1.0f32, 0.1, 0.01] {
+//!     let mut scfg = cfg.clone();
+//!     scfg.lambda = lambda;
+//!     let out = cluster.run_session(&scfg, None, WarmStart::Last).unwrap();
+//!     println!("lambda={lambda}: J={} in {} iters", out.objective, out.iterations);
+//! }
+//! ```
 
 pub mod backend;
 pub mod baselines;
@@ -37,9 +57,11 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod engine;
 pub mod linalg;
 pub mod metrics;
 pub mod model;
 pub mod rng;
+#[cfg(feature = "xla")]
 pub mod runtime;
 pub mod solver;

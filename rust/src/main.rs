@@ -2,12 +2,17 @@
 //!
 //! Subcommands:
 //!   train <data.svm>  --options LIN-EM-CLS --workers 8 --lambda 1.0 ...
+//!   sweep <data.svm>  --lambdas 10,1,0.1,0.01 [--warm-start] ...
 //!   datagen <out.svm> --dataset alpha --n 10000 --k 64 --seed 0
 //!   eval <data.svm> <model.txt>
 //!   info
 //!
 //! `train` writes the learned weights to `--model-out` (default
-//! `model.txt`, one weight per line; M blocks for multiclass).
+//! `model.txt`, one weight per line; M blocks for multiclass). `sweep`
+//! builds one persistent `engine::Cluster` and runs one training
+//! session per lambda on it — threads stay up and shards stay resident
+//! across solves, optionally warm-starting each session from the
+//! previous solution.
 
 use std::path::{Path, PathBuf};
 
@@ -34,6 +39,7 @@ fn run(argv: Vec<String>) -> Result<()> {
     let args = Args::parse(argv)?;
     match args.subcommand.as_str() {
         "train" => cmd_train(&args),
+        "sweep" => cmd_sweep(&args),
         "datagen" => cmd_datagen(&args),
         "eval" => cmd_eval(&args),
         "info" => cmd_info(&args),
@@ -54,6 +60,9 @@ USAGE:
                [--backend native|xla] [--reduce flat|tree] [--max-iters I]
                [--tol T] [--seed S] [--num-classes M] [--model-out model.txt]
                [--config file.toml] [--test test.svm] [--verbose]
+               [--topology threads|simulate]
+  pemsvm sweep <data.svm> [--lambdas 10,1,0.1,0.01] [--warm-start]
+               [--test test.svm] [train flags...]
   pemsvm datagen <out.svm> --dataset alpha|dna|year|mnist|news20
                [--n N] [--k K] [--m M] [--seed S]
   pemsvm eval <data.svm> <model.txt> [--task cls|svr|mlt] [--num-classes M]
@@ -70,11 +79,11 @@ fn build_config(args: &Args) -> Result<TrainConfig> {
     for (key, val) in &args.flags {
         let k = key.replace('-', "_");
         match k.as_str() {
-            "config" | "model_out" | "test" => continue,
+            "config" | "model_out" | "test" | "lambdas" => continue,
             "max_iters" | "options" | "lambda" | "workers" | "seed" | "tol" | "backend"
             | "reduce" | "burn_in" | "num_classes" | "eps_clamp" | "eps_insensitive"
             | "artifacts_dir" | "verbose" | "kernel" | "kernel_sigma" | "algo" | "task"
-            | "model" => cfg.set(&k, val)?,
+            | "model" | "topology" | "simulate_cluster" | "warm_start" => cfg.set(&k, val)?,
             other => bail!("unknown flag --{other}"),
         }
     }
@@ -152,6 +161,90 @@ fn cmd_train(args: &Args) -> Result<()> {
     let model_out = PathBuf::from(args.get("model-out").unwrap_or("model.txt"));
     save_weights(&out.weights, &model_out)?;
     println!("# model written to {}", model_out.display());
+    Ok(())
+}
+
+/// Lambda sweep on one persistent cluster: the `engine::Cluster` is
+/// built once (threads spawned, shards pinned) and then runs one
+/// session per lambda — with `--warm-start`, each session starts from
+/// the previous session's weights.
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let Some(data_path) = args.positional.first() else {
+        bail!("sweep: missing <data.svm>");
+    };
+    let cfg = build_config(args)?;
+    let lambdas: Vec<f32> = match args.get("lambdas") {
+        Some(list) => {
+            let mut out = Vec::new();
+            for part in list.split(',') {
+                out.push(
+                    part.trim()
+                        .parse()
+                        .with_context(|| format!("bad lambda `{part}` in --lambdas"))?,
+                );
+            }
+            out
+        }
+        None => vec![10.0, 1.0, 0.1, 0.01],
+    };
+    if lambdas.is_empty() {
+        bail!("sweep: --lambdas is empty");
+    }
+
+    let ds = libsvm::load(Path::new(data_path), task_of(&cfg), cfg.workers)
+        .with_context(|| format!("loading {data_path}"))?;
+    let test = args
+        .get("test")
+        .map(|p| libsvm::load(Path::new(p), task_of(&cfg), cfg.workers))
+        .transpose()?;
+
+    let t_setup = std::time::Instant::now();
+    let mut cluster = pemsvm::engine::Cluster::new(&ds, &cfg)?;
+    println!(
+        "# sweep: {} lambdas on one cluster (N={} K={} P={} {:?}/{:?}), setup {:.2}s{}",
+        lambdas.len(),
+        ds.n,
+        ds.k,
+        cluster.workers(),
+        cfg.backend,
+        cfg.topology,
+        t_setup.elapsed().as_secs_f64(),
+        if cfg.warm_start { ", warm-started sessions" } else { "" }
+    );
+    let metric_name = if cfg.task == TaskKind::Svr { "rmse" } else { "acc" };
+    println!(
+        "# {:>10} {:>6} {:>14} {:>10} {:>10} {:>8}",
+        "lambda", "iters", "objective", format!("train_{metric_name}"),
+        format!("test_{metric_name}"), "secs"
+    );
+    for (i, &lambda) in lambdas.iter().enumerate() {
+        let mut scfg = cfg.clone();
+        scfg.lambda = lambda;
+        let warm = if cfg.warm_start && i > 0 {
+            pemsvm::engine::WarmStart::Last
+        } else {
+            pemsvm::engine::WarmStart::Cold
+        };
+        let t0 = std::time::Instant::now();
+        // test set stays out of the session: the per-iteration held-out
+        // history would be discarded here; one final evaluate suffices
+        let out = cluster.run_session(&scfg, None, warm)?;
+        let train_metric = pemsvm::model::evaluate(&ds, &out.weights);
+        let test_metric = test.as_ref().map(|te| pemsvm::model::evaluate(te, &out.weights));
+        println!(
+            "  {:>10} {:>6} {:>14.4} {:>10.4} {:>10} {:>7.2}s",
+            lambda,
+            out.iterations,
+            out.objective,
+            train_metric,
+            test_metric.map(|m| format!("{m:.4}")).unwrap_or_else(|| "-".into()),
+            t0.elapsed().as_secs_f64()
+        );
+    }
+    println!(
+        "# cluster reused across {} sessions: threads and shards were built once",
+        cluster.sessions()
+    );
     Ok(())
 }
 
@@ -244,18 +337,26 @@ fn cmd_datagen(args: &Args) -> Result<()> {
 }
 
 fn cmd_info(args: &Args) -> Result<()> {
-    let dir = args.get("artifacts-dir").unwrap_or("artifacts");
-    match pemsvm::runtime::Runtime::load(Path::new(dir)) {
-        Ok(rt) => {
-            println!(
-                "artifacts: {} graphs, chunk={}, K family {:?}, M={}",
-                rt.manifest.len(),
-                rt.chunk(),
-                rt.manifest.k_family,
-                rt.manifest.m_classes
-            );
+    #[cfg(feature = "xla")]
+    {
+        let dir = args.get("artifacts-dir").unwrap_or("artifacts");
+        match pemsvm::runtime::Runtime::load(Path::new(dir)) {
+            Ok(rt) => {
+                println!(
+                    "artifacts: {} graphs, chunk={}, K family {:?}, M={}",
+                    rt.manifest.len(),
+                    rt.chunk(),
+                    rt.manifest.k_family,
+                    rt.manifest.m_classes
+                );
+            }
+            Err(e) => println!("artifacts not available at `{dir}`: {e:#}"),
         }
-        Err(e) => println!("artifacts not available at `{dir}`: {e:#}"),
+    }
+    #[cfg(not(feature = "xla"))]
+    {
+        let _ = args;
+        println!("artifacts runtime: built without the `xla` feature");
     }
     println!("cores: {}", std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1));
     Ok(())

@@ -62,6 +62,9 @@ pub struct Metrics {
     pub iterations: usize,
     /// number of reduce rounds (== collects; > iterations for MLT)
     pub reduces: usize,
+    /// training sessions folded into this record (1 per `run_session`;
+    /// grows under `merge` when aggregating a cluster's lifetime)
+    pub sessions: usize,
 }
 
 impl Metrics {
@@ -96,12 +99,13 @@ impl Metrics {
         }
         self.iterations = self.iterations.max(other.iterations);
         self.reduces += other.reduces;
+        self.sessions += other.sessions;
     }
 
     /// Simulated parallel wall-clock (seconds): per-iteration
     /// max-worker step time plus the serial reduce/solve/broadcast
     /// phases. Equals real wall-clock shape when workers run threaded on
-    /// enough cores; in `simulate_cluster` mode it is the cluster cost
+    /// enough cores; under `Topology::Simulate` it is the cluster cost
     /// model's prediction.
     pub fn simulated_secs(&self) -> f64 {
         self.grand_total().as_secs_f64()
@@ -109,7 +113,11 @@ impl Metrics {
 
     /// One-line report, Table-1 style.
     pub fn report(&self) -> String {
-        let mut s = format!("iters={} ", self.iterations);
+        let mut s = String::new();
+        if self.sessions > 1 {
+            s.push_str(&format!("sessions={} ", self.sessions));
+        }
+        s.push_str(&format!("iters={} ", self.iterations));
         for p in PHASES {
             let t = self.total(p);
             if !t.is_zero() {

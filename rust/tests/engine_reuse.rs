@@ -1,0 +1,161 @@
+//! Engine-level tests: cross-topology determinism, cluster reuse across
+//! sessions, and warm starts.
+
+use pemsvm::config::{ReduceKind, Topology, TrainConfig};
+use pemsvm::coordinator::{train, TrainOutput};
+use pemsvm::data::synth;
+use pemsvm::engine::{Cluster, WarmStart};
+
+fn base_cfg(options: &str) -> TrainConfig {
+    let mut cfg = TrainConfig::default().with_options(options).unwrap();
+    cfg.workers = 4;
+    cfg.max_iters = 30;
+    cfg
+}
+
+/// The full per-iteration trajectory, bit-for-bit.
+fn history_sig(out: &TrainOutput) -> Vec<(usize, f64, f64, f64)> {
+    out.history
+        .iter()
+        .map(|h| (h.iter, h.objective, h.train_loss, h.train_err))
+        .collect()
+}
+
+/// The threaded pool and the sequential cluster simulator must produce
+/// identical iteration histories for a fixed seed — for the flat reduce
+/// (same fold order) and for the tree reduce, whose in-pool pair merges
+/// use the same pairing order as the simulator's serial tree.
+#[test]
+fn threaded_and_simulated_histories_identical() {
+    let ds = synth::alpha_like(1500, 12, 3);
+    for reduce in [ReduceKind::Flat, ReduceKind::Tree] {
+        let mut cfg_thr = base_cfg("LIN-EM-CLS");
+        cfg_thr.reduce = reduce;
+        cfg_thr.topology = Topology::Threads;
+        let mut cfg_sim = cfg_thr.clone();
+        cfg_sim.topology = Topology::Simulate;
+        let a = train(&ds, &cfg_thr).unwrap();
+        let b = train(&ds, &cfg_sim).unwrap();
+        assert_eq!(history_sig(&a), history_sig(&b), "reduce={reduce:?}");
+        assert_eq!(a.weights.single(), b.weights.single(), "reduce={reduce:?}");
+    }
+}
+
+/// In-pool tree reduce vs leader-side flat fold: same sums up to f32
+/// association error.
+#[test]
+fn in_pool_tree_matches_flat() {
+    let ds = synth::alpha_like(2000, 10, 4);
+    let mut cfg_flat = base_cfg("LIN-EM-CLS");
+    cfg_flat.max_iters = 8;
+    cfg_flat.reduce = ReduceKind::Flat;
+    let mut cfg_tree = cfg_flat.clone();
+    cfg_tree.reduce = ReduceKind::Tree;
+    let a = train(&ds, &cfg_flat).unwrap();
+    let b = train(&ds, &cfg_tree).unwrap();
+    for (x, y) in a.weights.single().iter().zip(b.weights.single()) {
+        assert!((x - y).abs() < 1e-3 * (1.0 + x.abs()), "{x} vs {y}");
+    }
+}
+
+/// Two sessions on one live cluster — second with a different lambda —
+/// must match two fresh `train()` calls exactly: reuse may not leak any
+/// state between EM sessions.
+#[test]
+fn cluster_sessions_match_fresh_trains() {
+    let ds = synth::alpha_like(2000, 10, 5);
+    let cfg = base_cfg("LIN-EM-CLS");
+    let mut cfg2 = cfg.clone();
+    cfg2.lambda = 0.25;
+
+    let mut cluster = Cluster::new(&ds, &cfg).unwrap();
+    let s1 = cluster.run_session(&cfg, None, WarmStart::Cold).unwrap();
+    let s2 = cluster.run_session(&cfg2, None, WarmStart::Cold).unwrap();
+    assert_eq!(cluster.sessions(), 2);
+
+    let f1 = train(&ds, &cfg).unwrap();
+    let f2 = train(&ds, &cfg2).unwrap();
+    assert_eq!(history_sig(&s1), history_sig(&f1));
+    assert_eq!(history_sig(&s2), history_sig(&f2));
+    assert_eq!(s1.weights.single(), f1.weights.single());
+    assert_eq!(s2.weights.single(), f2.weights.single());
+    assert_eq!(s1.metrics.sessions, 1);
+}
+
+/// A warm-started session (from the previous solution, at the same
+/// lambda) must converge in fewer iterations than the cold one and land
+/// at (or below) the same objective.
+#[test]
+fn warm_start_converges_in_fewer_iterations() {
+    let ds = synth::alpha_like(3000, 16, 7);
+    let mut cfg = base_cfg("LIN-EM-CLS");
+    cfg.max_iters = 60;
+    cfg.tol = 1e-4;
+    let mut cluster = Cluster::new(&ds, &cfg).unwrap();
+    let cold = cluster.run_session(&cfg, None, WarmStart::Cold).unwrap();
+    let warm = cluster.run_session(&cfg, None, WarmStart::Last).unwrap();
+    assert!(cold.iterations >= 5, "cold run converged suspiciously fast: {}", cold.iterations);
+    assert!(
+        warm.iterations < cold.iterations,
+        "warm {} vs cold {} iterations",
+        warm.iterations,
+        cold.iterations
+    );
+    assert!(
+        warm.objective <= cold.objective * 1.001,
+        "warm J {} vs cold J {}",
+        warm.objective,
+        cold.objective
+    );
+}
+
+/// The Crammer-Singer driver through the engine: sessions on one
+/// cluster are reproducible against a fresh train, and a warm start
+/// does not take longer than the cold solve.
+#[test]
+fn mlt_sessions_and_warm_start() {
+    let ds = synth::mnist_like(1200, 12, 4, 9);
+    let mut cfg = base_cfg("LIN-EM-MLT");
+    cfg.num_classes = 4;
+    cfg.max_iters = 15;
+    let mut cluster = Cluster::new(&ds, &cfg).unwrap();
+    let cold = cluster.run_session(&cfg, None, WarmStart::Cold).unwrap();
+    let warm = cluster.run_session(&cfg, None, WarmStart::Last).unwrap();
+    assert!(warm.iterations <= cold.iterations);
+
+    let fresh = train(&ds, &cfg).unwrap();
+    assert_eq!(history_sig(&cold), history_sig(&fresh));
+    assert_eq!(cold.weights.per_class().data, fresh.weights.per_class().data);
+}
+
+/// Session configs that contradict what the cluster baked in at
+/// construction (worker count, algo) are rejected, not silently run.
+#[test]
+fn incompatible_session_rejected() {
+    let ds = synth::alpha_like(300, 8, 1);
+    let cfg = base_cfg("LIN-EM-CLS");
+    let mut cluster = Cluster::new(&ds, &cfg).unwrap();
+
+    let mut bad_workers = cfg.clone();
+    bad_workers.workers = 2;
+    assert!(cluster.run_session(&bad_workers, None, WarmStart::Cold).is_err());
+
+    let mut bad_algo = cfg.clone();
+    bad_algo.algo = pemsvm::config::Algo::Mc;
+    assert!(cluster.run_session(&bad_algo, None, WarmStart::Cold).is_err());
+
+    // the cluster itself is still usable afterwards
+    assert!(cluster.run_session(&cfg, None, WarmStart::Cold).is_ok());
+}
+
+/// WarmStart::Weights with mismatched shape fails loudly.
+#[test]
+fn warm_start_shape_mismatch_rejected() {
+    let ds = synth::mnist_like(400, 8, 3, 2);
+    let mut cfg = base_cfg("LIN-EM-MLT");
+    cfg.num_classes = 3;
+    cfg.max_iters = 5;
+    let mut cluster = Cluster::new(&ds, &cfg).unwrap();
+    let single = pemsvm::model::Weights::Single(vec![0.0; 8]);
+    assert!(cluster.run_session(&cfg, None, WarmStart::Weights(&single)).is_err());
+}

@@ -3,6 +3,9 @@
 //! be *exact* — identical statistics, identical solutions — for any
 //! (N, K) that isn't already family-aligned.
 
+// the whole file targets the PJRT backend
+#![cfg(feature = "xla")]
+
 use std::sync::Arc;
 
 use pemsvm::backend::{MasterBackend, StepInput, WorkerBackend};
