@@ -1,0 +1,92 @@
+//! Serving throughput: the batched parallel scorer (`serve::Scorer`)
+//! vs the per-row `model::evaluate` loop, on an mnist-like MLT batch
+//! and a CLS margin batch. The acceptance bar for the serving PR is
+//! >= 2x at 4 workers on the mnist-like batch; results are recorded in
+//! EXPERIMENTS.md (§Serving).
+//!
+//! `SCALE=0.2` shrinks the workload like the other benches.
+
+use std::sync::Arc;
+
+use pemsvm::benchutil::{header, scaled, time};
+use pemsvm::config::TaskKind;
+use pemsvm::data::synth;
+use pemsvm::linalg::Mat;
+use pemsvm::model::Weights;
+use pemsvm::rng::Pcg64;
+use pemsvm::serve::{metric_of, ModelBody, ModelMeta, SavedModel, Scorer};
+
+fn saved(task: TaskKind, body: Weights, k: usize, m: usize) -> Arc<SavedModel> {
+    Arc::new(SavedModel::new(
+        ModelMeta { task, k, m, lambda: 1.0, options: String::new(), legacy: false },
+        ModelBody::Linear(body),
+    ))
+}
+
+fn bench_rows(
+    label: &str,
+    n: usize,
+    per_row_secs: f64,
+    model: &Arc<SavedModel>,
+    batch: &Arc<pemsvm::data::Dataset>,
+) {
+    println!(
+        "   {:<22} {:>9} {:>12.0} {:>10}",
+        label,
+        format!("{:.3}s", per_row_secs),
+        n as f64 / per_row_secs,
+        "1.00x"
+    );
+    for workers in [1usize, 2, 4, 8] {
+        let mut scorer = Scorer::new(workers);
+        // one warmup dispatch so thread startup is off the clock
+        scorer.score_batch(model, batch).unwrap();
+        let (secs, out) = time(|| scorer.score_batch(model, batch).unwrap());
+        println!(
+            "   {:<22} {:>9} {:>12.0} {:>9.2}x",
+            format!("scorer workers={workers}"),
+            format!("{secs:.3}s"),
+            n as f64 / secs,
+            per_row_secs / secs
+        );
+        drop(out);
+    }
+}
+
+fn main() {
+    header("serve_throughput", "batched scorer vs per-row evaluate loop");
+
+    // MLT: the paper's mnist-like shape — where the blockwise
+    // [rows x K] multiply replaces the per-row per-class scalar loop
+    let n = scaled(30_000, 2_000);
+    let (k, m) = (256usize, 10usize);
+    let ds = Arc::new(synth::mnist_like(n, k, m, 0));
+    let mut g = Pcg64::new(1);
+    let mut w = Mat::zeros(m, k);
+    for x in w.data.iter_mut() {
+        *x = g.next_f32() - 0.5;
+    }
+    let weights = Weights::PerClass(w);
+    let (t_row, acc_row) = time(|| pemsvm::model::evaluate(&ds, &weights));
+    let model = saved(TaskKind::Mlt, weights, k, m);
+    println!("\nMLT mnist-like N={n} K={k} M={m}");
+    println!("   {:<22} {:>9} {:>12} {:>10}", "path", "secs", "rows/s", "speedup");
+    bench_rows("per-row evaluate", n, t_row, &model, &ds);
+    // the batched path must agree with the per-row loop bit-for-bit
+    let scores = Scorer::new(4).score_batch(&model, &ds).unwrap().scores;
+    assert_eq!(metric_of(TaskKind::Mlt, &ds.labels, &scores), acc_row);
+
+    // CLS: one weight vector, sparse-dot bound
+    let n = scaled(200_000, 10_000);
+    let k = 128usize;
+    let ds = Arc::new(synth::alpha_like(n, k, 2));
+    let w: Vec<f32> = (0..k).map(|_| g.next_f32() - 0.5).collect();
+    let weights = Weights::Single(w);
+    let (t_row, acc_row) = time(|| pemsvm::model::evaluate(&ds, &weights));
+    let model = saved(TaskKind::Cls, weights, k, 1);
+    println!("\nCLS alpha-like N={n} K={k}");
+    println!("   {:<22} {:>9} {:>12} {:>10}", "path", "secs", "rows/s", "speedup");
+    bench_rows("per-row evaluate", n, t_row, &model, &ds);
+    let scores = Scorer::new(4).score_batch(&model, &ds).unwrap().scores;
+    assert_eq!(metric_of(TaskKind::Cls, &ds.labels, &scores), acc_row);
+}

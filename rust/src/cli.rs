@@ -63,6 +63,14 @@ impl Args {
             None => Ok(default),
         }
     }
+
+    /// Port-sized flag (`--port 0` means "pick an ephemeral port").
+    pub fn get_u16(&self, key: &str, default: u16) -> Result<u16> {
+        match self.get(key) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -84,6 +92,10 @@ mod tests {
         assert_eq!(a.get_usize("workers", 1).unwrap(), 8);
         assert_eq!(a.get_f32("lambda", 1.0).unwrap(), 0.5);
         assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+        let s = parse("serve m.txt --port 0");
+        assert_eq!(s.get_u16("port", 7878).unwrap(), 0);
+        assert_eq!(s.get_u16("missing", 7878).unwrap(), 7878);
+        assert!(parse("serve --port 70000").get_u16("port", 0).is_err());
     }
 
     #[test]

@@ -14,8 +14,9 @@ use anyhow::{bail, Context, Result};
 use super::{Dataset, Task};
 
 /// Parse one libsvm line into (label, pairs). Returns None for blank /
-/// comment lines.
-fn parse_line(line: &str, lineno: usize) -> Result<Option<(f32, Vec<(u32, f32)>)>> {
+/// comment lines. Public: the serve protocol and the model format both
+/// speak libsvm rows.
+pub fn parse_row(line: &str, lineno: usize) -> Result<Option<(f32, Vec<(u32, f32)>)>> {
     let line = line.trim();
     if line.is_empty() || line.starts_with('#') {
         return Ok(None);
@@ -45,7 +46,7 @@ fn parse_line(line: &str, lineno: usize) -> Result<Option<(f32, Vec<(u32, f32)>)
 fn parse_block(text: &str, first_lineno: usize) -> Result<Vec<(f32, Vec<(u32, f32)>)>> {
     let mut rows = Vec::new();
     for (off, line) in text.lines().enumerate() {
-        if let Some(r) = parse_line(line, first_lineno + off)? {
+        if let Some(r) = parse_row(line, first_lineno + off)? {
             rows.push(r);
         }
     }

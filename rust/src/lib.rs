@@ -64,4 +64,5 @@ pub mod model;
 pub mod rng;
 #[cfg(feature = "xla")]
 pub mod runtime;
+pub mod serve;
 pub mod solver;

@@ -73,6 +73,19 @@ impl Mat {
         self.data.fill(v);
     }
 
+    /// The transposed matrix ([cols, rows]). The serving scorer keeps
+    /// per-class weights `[m, k]` transposed to `[k, m]` so a sparse
+    /// row's nonzero `(j, v)` touches one contiguous row slice.
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        out
+    }
+
     /// Max |a_ij - b_ij|.
     pub fn max_abs_diff(&self, other: &Mat) -> f32 {
         self.data
@@ -128,6 +141,16 @@ mod tests {
         assert_eq!(a[(0, 0)], 2.5);
         assert_eq!(a[(1, 1)], 2.5);
         assert_eq!(a[(0, 1)], 0.0);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let m = Mat::from_rows(&[&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]]);
+        let t = m.transpose();
+        assert_eq!((t.rows, t.cols), (3, 2));
+        assert_eq!(t[(0, 1)], 4.0);
+        assert_eq!(t[(2, 0)], 3.0);
+        assert_eq!(t.transpose(), m);
     }
 
     #[test]

@@ -4,24 +4,31 @@
 //!   train <data.svm>  --options LIN-EM-CLS --workers 8 --lambda 1.0 ...
 //!   sweep <data.svm>  --lambdas 10,1,0.1,0.01 [--warm-start] ...
 //!   datagen <out.svm> --dataset alpha --n 10000 --k 64 --seed 0
-//!   eval <data.svm> <model.txt>
+//!   predict <data.svm> <model>  batch scoring via the serve scorer
+//!   serve <model...> --port N   TCP serving with micro-batching
+//!   eval <data.svm> <model>
 //!   info
 //!
-//! `train` writes the learned weights to `--model-out` (default
-//! `model.txt`, one weight per line; M blocks for multiclass). `sweep`
-//! builds one persistent `engine::Cluster` and runs one training
-//! session per lambda on it — threads stay up and shards stay resident
-//! across solves, optionally warm-starting each session from the
-//! previous solution.
+//! `train` writes the learned model to `--model-out` (default
+//! `model.txt`) in the versioned `pemsvm-model v1` format
+//! (`serve::format`) — linear weights or, for KRN runs, the kernel
+//! dual model with its support vectors. `sweep` builds one persistent
+//! `engine::Cluster` and runs one training session per lambda on it —
+//! threads stay up and shards stay resident across solves, optionally
+//! warm-starting each session from the previous solution. `predict`
+//! and `serve` are the inference side (DESIGN.md §9): both load models
+//! through `serve::Registry` and score through the batched
+//! `serve::Scorer` pool.
 
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
 use pemsvm::cli::Args;
 use pemsvm::config::{TaskKind, TrainConfig};
 use pemsvm::data::{libsvm, synth, Dataset, Task};
-use pemsvm::model::Weights;
+use pemsvm::serve::{self, ModelBody, SavedModel, Scorer};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -41,6 +48,8 @@ fn run(argv: Vec<String>) -> Result<()> {
         "train" => cmd_train(&args),
         "sweep" => cmd_sweep(&args),
         "datagen" => cmd_datagen(&args),
+        "predict" => cmd_predict(&args),
+        "serve" => cmd_serve(&args),
         "eval" => cmd_eval(&args),
         "info" => cmd_info(&args),
         "help" | "--help" | "-h" => {
@@ -65,7 +74,16 @@ USAGE:
                [--test test.svm] [train flags...]
   pemsvm datagen <out.svm> --dataset alpha|dna|year|mnist|news20
                [--n N] [--k K] [--m M] [--seed S]
-  pemsvm eval <data.svm> <model.txt> [--task cls|svr|mlt] [--num-classes M]
+  pemsvm predict <data.svm> <model> [--workers P] [--out preds.txt]
+               predictions one per line (stdout unless --out); `#` lines
+               carry the metric and throughput
+  pemsvm serve <model...> [--port N] [--workers P] [--max-batch B]
+               [--max-wait-us U]
+               newline-delimited libsvm rows over TCP; --port 0 picks an
+               ephemeral port (printed on stdout). `#model <name>` and
+               `#stats` are in-band control lines
+  pemsvm eval <data.svm> <model> [--task cls|svr|mlt] [--num-classes M]
+               [--workers P]
   pemsvm info [--artifacts-dir artifacts]"
     );
 }
@@ -80,10 +98,13 @@ fn build_config(args: &Args) -> Result<TrainConfig> {
         let k = key.replace('-', "_");
         match k.as_str() {
             "config" | "model_out" | "test" | "lambdas" => continue,
+            "simulate_cluster" => {
+                bail!("--simulate-cluster was removed; use --topology threads|simulate")
+            }
             "max_iters" | "options" | "lambda" | "workers" | "seed" | "tol" | "backend"
             | "reduce" | "burn_in" | "num_classes" | "eps_clamp" | "eps_insensitive"
             | "artifacts_dir" | "verbose" | "kernel" | "kernel_sigma" | "algo" | "task"
-            | "model" | "topology" | "simulate_cluster" | "warm_start" => cfg.set(&k, val)?,
+            | "model" | "topology" | "warm_start" => cfg.set(&k, val)?,
             other => bail!("unknown flag --{other}"),
         }
     }
@@ -141,7 +162,12 @@ fn cmd_train(args: &Args) -> Result<()> {
     println!("# load {load_secs:.2}s  train {train_secs:.2}s  iters {}", out.iterations);
     println!("# phases: {}", out.metrics.report());
     println!("# final objective {:.4}", out.objective);
-    let train_metric = pemsvm::model::evaluate(&ds, &out.weights);
+    // for KRN, out.weights holds the dual omega (length N, not K) —
+    // the training metric must go through the kernel model
+    let train_metric = match (&out.kernel_model, cfg.model) {
+        (Some(km), pemsvm::config::ModelKind::Kernel) => km.accuracy(&ds),
+        _ => pemsvm::model::evaluate(&ds, &out.weights),
+    };
     println!(
         "# train {} = {:.4}",
         if cfg.task == TaskKind::Svr { "rmse" } else { "accuracy" },
@@ -159,8 +185,18 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
 
     let model_out = PathBuf::from(args.get("model-out").unwrap_or("model.txt"));
-    save_weights(&out.weights, &model_out)?;
-    println!("# model written to {}", model_out.display());
+    let saved = SavedModel::from_training(&cfg, ds.k, out);
+    serve::save(&saved, &model_out)?;
+    println!(
+        "# model written to {} ({})",
+        model_out.display(),
+        match &saved.body {
+            ModelBody::Kernel(km) => format!("kernel, {} support vectors", {
+                km.omega.iter().filter(|&&o| o != 0.0).count()
+            }),
+            ModelBody::Linear(_) => "linear".to_string(),
+        }
+    );
     Ok(())
 }
 
@@ -248,70 +284,140 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn save_weights(w: &Weights, path: &Path) -> Result<()> {
-    use std::io::Write;
-    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-    match w {
-        Weights::Single(v) => {
-            writeln!(f, "# pemsvm single {}", v.len())?;
-            for x in v {
-                writeln!(f, "{x}")?;
-            }
+/// Load a model for the inference subcommands, letting `--task` /
+/// `--num-classes` override the header of a legacy `model.txt` (the
+/// old format carried neither).
+fn load_model_for(args: &Args) -> Result<SavedModel> {
+    let Some(model_path) = args.positional.get(1) else {
+        bail!("need <data.svm> <model>");
+    };
+    let mut model = serve::load(Path::new(model_path))?;
+    if model.meta.legacy {
+        if let Some(t) = args.get("task") {
+            model.meta.task = match t {
+                "cls" => TaskKind::Cls,
+                "svr" => TaskKind::Svr,
+                "mlt" => TaskKind::Mlt,
+                t => bail!("bad task {t}"),
+            };
         }
-        Weights::PerClass(m) => {
-            writeln!(f, "# pemsvm perclass {} {}", m.rows, m.cols)?;
-            for c in 0..m.rows {
-                for x in m.row(c) {
-                    writeln!(f, "{x}")?;
-                }
-            }
+        if model.meta.task == TaskKind::Mlt {
+            model.meta.m = args.get_usize("num-classes", model.meta.m)?;
+        }
+    }
+    Ok(model)
+}
+
+fn metric_name(task: TaskKind) -> &'static str {
+    if task == TaskKind::Svr {
+        "rmse"
+    } else {
+        "accuracy"
+    }
+}
+
+/// Batch scoring through the serve scorer: predictions one per line
+/// (stdout or --out), metric + throughput as trailing `#` lines.
+fn cmd_predict(args: &Args) -> Result<()> {
+    let Some(data_path) = args.positional.first() else {
+        bail!("predict: need <data.svm> <model>");
+    };
+    let model = Arc::new(load_model_for(args)?);
+    let workers = args.get_usize("workers", 4)?;
+    let ds = Arc::new(
+        libsvm::load(Path::new(data_path), model.data_task(), workers)
+            .with_context(|| format!("loading {data_path}"))?,
+    );
+    let mut scorer = Scorer::new(workers);
+    let out = scorer.score_batch(&model, &ds)?;
+    let task = model.meta.task;
+
+    let mut text = String::new();
+    for &s in &out.scores {
+        text.push_str(&serve::format_prediction(task, s));
+        text.push('\n');
+    }
+    let metric = serve::metric_of(task, &ds.labels, &out.scores);
+    let secs = out.wall.as_secs_f64();
+    let summary = format!(
+        "# {} = {metric:.4}\n# rows {} in {:.3}s ({:.0} rows/s, {} workers, compute max {:.3}s)\n",
+        metric_name(task),
+        ds.n,
+        secs,
+        ds.n as f64 / secs.max(1e-12),
+        workers,
+        out.compute_max.as_secs_f64(),
+    );
+    match args.get("out") {
+        Some(p) => {
+            std::fs::write(p, &text).with_context(|| format!("writing {p}"))?;
+            print!("{summary}");
+            println!("# predictions written to {p}");
+        }
+        None => {
+            print!("{text}{summary}");
         }
     }
     Ok(())
 }
 
-fn load_weights(path: &Path) -> Result<Weights> {
-    let text = std::fs::read_to_string(path)?;
-    let mut lines = text.lines();
-    let header = lines.next().context("empty model file")?;
-    let parts: Vec<&str> = header.split_whitespace().collect();
-    let vals: Vec<f32> = lines.filter_map(|l| l.trim().parse().ok()).collect();
-    match parts.get(2) {
-        Some(&"single") => Ok(Weights::Single(vals)),
-        Some(&"perclass") => {
-            let rows: usize = parts[3].parse()?;
-            let cols: usize = parts[4].parse()?;
-            if vals.len() != rows * cols {
-                bail!("model file: expected {} values, got {}", rows * cols, vals.len());
-            }
-            let mut m = pemsvm::linalg::Mat::zeros(rows, cols);
-            m.data.copy_from_slice(&vals);
-            Ok(Weights::PerClass(m))
-        }
-        _ => bail!("bad model header `{header}`"),
+/// TCP serving front-end over the registry + scorer.
+fn cmd_serve(args: &Args) -> Result<()> {
+    if args.positional.is_empty() {
+        bail!("serve: need at least one <model> path");
     }
+    let registry = Arc::new(pemsvm::serve::Registry::new());
+    let mut default_model = String::new();
+    for p in &args.positional {
+        let path = Path::new(p);
+        let name = path
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .with_context(|| format!("bad model path {p}"))?
+            .to_string();
+        if registry.get(&name).is_some() {
+            bail!(
+                "duplicate model name `{name}` (from {p}); registry names come from file \
+                 stems, so serve files with distinct stems"
+            );
+        }
+        registry.load_file(&name, path)?;
+        if default_model.is_empty() {
+            default_model = name;
+        }
+    }
+    let opts = pemsvm::serve::ServeOpts {
+        max_batch: args.get_usize("max-batch", 256)?,
+        max_wait: std::time::Duration::from_micros(args.get_u64("max-wait-us", 1000)?),
+        workers: args.get_usize("workers", 4)?,
+    };
+    let port = args.get_u16("port", 7878)?;
+    let listener = std::net::TcpListener::bind(("127.0.0.1", port))
+        .with_context(|| format!("binding 127.0.0.1:{port}"))?;
+    let addr = listener.local_addr()?;
+    println!(
+        "# serving {:?} (default `{default_model}`), workers={} max_batch={} max_wait_us={}",
+        registry.names(),
+        opts.workers,
+        opts.max_batch,
+        opts.max_wait.as_micros()
+    );
+    // scripts parse this line for the ephemeral port (--port 0)
+    println!("# listening on {addr}");
+    pemsvm::serve::serve(listener, registry, default_model, opts)
 }
 
 fn cmd_eval(args: &Args) -> Result<()> {
-    let (Some(data_path), Some(model_path)) =
-        (args.positional.first(), args.positional.get(1))
-    else {
-        bail!("eval: need <data.svm> <model.txt>");
+    let Some(data_path) = args.positional.first() else {
+        bail!("eval: need <data.svm> <model>");
     };
-    let m: usize = args.get_usize("num-classes", 10)?;
-    let task = match args.get("task").unwrap_or("cls") {
-        "cls" => Task::Binary,
-        "svr" => Task::Regression,
-        "mlt" => Task::Multiclass(m),
-        t => bail!("bad task {t}"),
-    };
-    let ds = libsvm::load(Path::new(data_path), task, 4)?;
-    let w = load_weights(Path::new(model_path))?;
-    let metric = pemsvm::model::evaluate(&ds, &w);
-    println!(
-        "{} = {metric:.4}",
-        if task == Task::Regression { "rmse" } else { "accuracy" }
-    );
+    let model = Arc::new(load_model_for(args)?);
+    let workers = args.get_usize("workers", 4)?;
+    let ds = Arc::new(libsvm::load(Path::new(data_path), model.data_task(), workers)?);
+    let mut scorer = Scorer::new(workers);
+    let out = scorer.score_batch(&model, &ds)?;
+    let metric = serve::metric_of(model.meta.task, &ds.labels, &out.scores);
+    println!("{} = {metric:.4}", metric_name(model.meta.task));
     Ok(())
 }
 

@@ -3,6 +3,7 @@
 //! Draw mu / Broadcast mu) so the itertime bench can print an empirical
 //! version of the asymptotic table.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
 /// Per-iteration phases, in Table-1 order.
@@ -128,6 +129,79 @@ impl Metrics {
     }
 }
 
+/// Lock-free serving counters: one per registry entry, shared by every
+/// thread that scores against that model. All counters are monotonic;
+/// a [`ServeSnapshot`] reads them at one instant for reporting.
+#[derive(Debug, Default)]
+pub struct ServeStats {
+    batches: AtomicU64,
+    rows: AtomicU64,
+    busy_nanos: AtomicU64,
+    max_batch_nanos: AtomicU64,
+}
+
+impl ServeStats {
+    /// Record one scored batch of `rows` rows that took `elapsed`.
+    pub fn record(&self, rows: usize, elapsed: Duration) {
+        let nanos = elapsed.as_nanos() as u64;
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.rows.fetch_add(rows as u64, Ordering::Relaxed);
+        self.busy_nanos.fetch_add(nanos, Ordering::Relaxed);
+        self.max_batch_nanos.fetch_max(nanos, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> ServeSnapshot {
+        ServeSnapshot {
+            batches: self.batches.load(Ordering::Relaxed),
+            rows: self.rows.load(Ordering::Relaxed),
+            busy: Duration::from_nanos(self.busy_nanos.load(Ordering::Relaxed)),
+            max_batch: Duration::from_nanos(self.max_batch_nanos.load(Ordering::Relaxed)),
+        }
+    }
+}
+
+/// A point-in-time read of [`ServeStats`].
+#[derive(Clone, Copy, Debug)]
+pub struct ServeSnapshot {
+    pub batches: u64,
+    pub rows: u64,
+    /// total wall-clock spent inside the scorer
+    pub busy: Duration,
+    /// worst single-batch latency
+    pub max_batch: Duration,
+}
+
+impl ServeSnapshot {
+    /// Rows per second of scorer busy time (0 when idle).
+    pub fn rows_per_sec(&self) -> f64 {
+        let secs = self.busy.as_secs_f64();
+        if secs > 0.0 {
+            self.rows as f64 / secs
+        } else {
+            0.0
+        }
+    }
+
+    /// One-line report for the `#stats` protocol verb and CLI prints.
+    pub fn report(&self) -> String {
+        let mean_us = if self.batches > 0 {
+            self.busy.as_secs_f64() * 1e6 / self.batches as f64
+        } else {
+            0.0
+        };
+        format!(
+            "batches={} rows={} busy={:.1}ms mean_batch={:.0}us max_batch={:.0}us \
+             rows_per_sec={:.0}",
+            self.batches,
+            self.rows,
+            self.busy.as_secs_f64() * 1e3,
+            mean_us,
+            self.max_batch.as_secs_f64() * 1e6,
+            self.rows_per_sec()
+        )
+    }
+}
+
 /// Simple stopwatch for benches.
 pub struct Stopwatch(Instant);
 
@@ -157,6 +231,20 @@ mod tests {
         m.merge(&o);
         assert_eq!(m.total(Phase::Reduce), Duration::from_millis(13));
         assert_eq!(m.iterations, 3);
+    }
+
+    #[test]
+    fn serve_stats_accumulate() {
+        let s = ServeStats::default();
+        s.record(10, Duration::from_micros(100));
+        s.record(30, Duration::from_micros(300));
+        let snap = s.snapshot();
+        assert_eq!(snap.batches, 2);
+        assert_eq!(snap.rows, 40);
+        assert_eq!(snap.busy, Duration::from_micros(400));
+        assert_eq!(snap.max_batch, Duration::from_micros(300));
+        assert!((snap.rows_per_sec() - 100_000.0).abs() < 1.0);
+        assert!(snap.report().contains("rows=40"));
     }
 
     #[test]

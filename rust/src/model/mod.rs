@@ -97,6 +97,45 @@ pub fn class_scores(ds: &Dataset, d: usize, w: &Mat, out: &mut [f32]) {
     });
 }
 
+/// Blockwise [`class_scores`] for the serving scorer: fills the
+/// `[rows.len(), m]` block `out` with `out[(r, c)] = w_c . x_{rows[r]}`
+/// against the *transposed* weights `wt` (`[k, m]`, see
+/// [`Mat::transpose`]). Each nonzero `(j, v)` of a row becomes one
+/// contiguous axpy over `wt.row(j)` instead of `m` strided loads — the
+/// `[rows x K]` block hits row-major multiplies rather than the
+/// per-row per-class scalar loop. Feature indices `>= wt.rows` (rows
+/// wider than the model) contribute zero weight and are skipped.
+///
+/// Per class the additions run in the same nonzero order as
+/// [`class_scores`], so the two produce bit-identical f32 scores.
+pub fn class_scores_block(ds: &Dataset, rows: std::ops::Range<usize>, wt: &Mat, out: &mut Mat) {
+    debug_assert_eq!(out.rows, rows.len());
+    debug_assert_eq!(out.cols, wt.cols);
+    out.fill(0.0);
+    for (r, d) in rows.enumerate() {
+        let row = out.row_mut(r);
+        ds.for_nonzero(d, |j, v| {
+            if (j as usize) < wt.rows {
+                crate::linalg::axpy(v, wt.row(j as usize), row);
+            }
+        });
+    }
+}
+
+/// Argmax over a score slice with [`accuracy_mlt`]'s tie-breaking
+/// (ties go to the highest class index, matching `Iterator::max_by`).
+pub fn argmax(scores: &[f32]) -> usize {
+    let mut best = f32::NEG_INFINITY;
+    let mut idx = 0;
+    for (c, &s) in scores.iter().enumerate() {
+        if s >= best {
+            best = s;
+            idx = c;
+        }
+    }
+    idx
+}
+
 /// Binary accuracy of w on ds.
 pub fn accuracy_cls(ds: &Dataset, w: &[f32]) -> f64 {
     let correct = (0..ds.n)
@@ -199,6 +238,32 @@ mod tests {
             }
         }
         assert!(accuracy_mlt(&ds, &w) > 0.7);
+    }
+
+    #[test]
+    fn block_scores_match_per_row_exactly() {
+        let ds = synth::mnist_like(120, 17, 5, 9);
+        let mut w = Mat::zeros(5, 17);
+        let mut g = crate::rng::Pcg64::new(11);
+        for x in w.data.iter_mut() {
+            *x = g.next_f32() - 0.5;
+        }
+        let wt = w.transpose();
+        let mut block = Mat::zeros(40, 5);
+        class_scores_block(&ds, 30..70, &wt, &mut block);
+        let mut per_row = vec![0f32; 5];
+        for d in 30..70 {
+            class_scores(&ds, d, &w, &mut per_row);
+            assert_eq!(block.row(d - 30), &per_row[..], "row {d}");
+            assert_eq!(argmax(block.row(d - 30)), {
+                per_row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.total_cmp(b.1))
+                    .map(|(c, _)| c)
+                    .unwrap()
+            });
+        }
     }
 
     #[test]

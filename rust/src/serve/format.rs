@@ -1,0 +1,500 @@
+//! The versioned on-disk model format.
+//!
+//! `pemsvm-model v1` is a line-oriented text format with a typed header
+//! (task, K, M, lambda, the training options string) followed by one
+//! body block — linear weights or a kernel model (kernel config, dual
+//! coefficients, support vectors as libsvm rows). It replaces the
+//! untyped `model.txt` dump: every count in the header is validated on
+//! load, non-finite values are rejected, and a trailing `end` sentinel
+//! guards against truncated files. The pre-v1 headers
+//! (`# pemsvm single N` / `# pemsvm perclass R C`) keep a read-path so
+//! existing model files still load.
+//!
+//! f32 values are written with Rust's shortest-roundtrip `Display`, so
+//! save -> load -> predict is bit-identical to the in-memory model.
+
+use std::path::Path;
+use std::sync::OnceLock;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{KernelCfg, TaskKind, TrainConfig};
+use crate::data::{libsvm, Dataset, Task};
+use crate::linalg::Mat;
+use crate::model::Weights;
+use crate::solver::KernelModel;
+
+/// Format version written by [`save`].
+pub const FORMAT_VERSION: u32 = 1;
+
+/// Typed header: everything the serving path needs to interpret the
+/// body without side-channel flags.
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub task: TaskKind,
+    /// feature dimension the model was trained on
+    pub k: usize,
+    /// number of classes (1 for CLS/SVR)
+    pub m: usize,
+    pub lambda: f32,
+    /// the paper's option string, e.g. "LIN-EM-CLS"
+    pub options: String,
+    /// true when loaded through the pre-v1 `model.txt` read-path (the
+    /// old header carries no task, so callers may override it)
+    pub legacy: bool,
+}
+
+/// The learned parameters behind the header.
+#[derive(Debug)]
+pub enum ModelBody {
+    Linear(Weights),
+    Kernel(KernelModel),
+}
+
+/// A model as it exists on disk / in the registry.
+#[derive(Debug)]
+pub struct SavedModel {
+    pub meta: ModelMeta,
+    pub body: ModelBody,
+    /// per-class weights transposed to `[k, m]`, built lazily once per
+    /// model (the scorer's hot path; the model is immutable behind its
+    /// registry `Arc`, so per-batch recomputation would be pure waste)
+    wt: OnceLock<Mat>,
+}
+
+impl SavedModel {
+    pub fn new(meta: ModelMeta, body: ModelBody) -> SavedModel {
+        SavedModel { meta, body, wt: OnceLock::new() }
+    }
+
+    /// The transposed `[k, m]` Crammer-Singer weights for blockwise
+    /// scoring, or `None` for single-vector and kernel bodies.
+    pub fn transposed_weights(&self) -> Option<&Mat> {
+        match &self.body {
+            ModelBody::Linear(Weights::PerClass(w)) => {
+                Some(self.wt.get_or_init(|| w.transpose()))
+            }
+            _ => None,
+        }
+    }
+
+    /// Wrap a training output for saving: the kernel model when the run
+    /// produced one, the linear weights otherwise.
+    pub fn from_training(
+        cfg: &TrainConfig,
+        k: usize,
+        out: crate::engine::TrainOutput,
+    ) -> SavedModel {
+        let m = match cfg.task {
+            TaskKind::Mlt => cfg.num_classes,
+            _ => 1,
+        };
+        let meta = ModelMeta {
+            task: cfg.task,
+            k,
+            m,
+            lambda: cfg.lambda,
+            options: cfg.options_string(),
+            legacy: false,
+        };
+        let body = match out.kernel_model {
+            Some(km) => ModelBody::Kernel(km),
+            None => ModelBody::Linear(out.weights),
+        };
+        SavedModel::new(meta, body)
+    }
+
+    /// The dataset task this model predicts for.
+    pub fn data_task(&self) -> Task {
+        match self.meta.task {
+            TaskKind::Cls => Task::Binary,
+            TaskKind::Svr => Task::Regression,
+            TaskKind::Mlt => Task::Multiclass(self.meta.m),
+        }
+    }
+}
+
+fn task_name(t: TaskKind) -> &'static str {
+    match t {
+        TaskKind::Cls => "cls",
+        TaskKind::Svr => "svr",
+        TaskKind::Mlt => "mlt",
+    }
+}
+
+fn parse_task(s: &str) -> Result<TaskKind> {
+    Ok(match s {
+        "cls" => TaskKind::Cls,
+        "svr" => TaskKind::Svr,
+        "mlt" => TaskKind::Mlt,
+        other => bail!("bad task `{other}` in model header"),
+    })
+}
+
+/// Write `model` to `path` in the v1 format.
+pub fn save(model: &SavedModel, path: &Path) -> Result<()> {
+    use std::io::Write;
+    let f = std::fs::File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    let mut w = std::io::BufWriter::new(f);
+    let meta = &model.meta;
+    writeln!(w, "pemsvm-model v{FORMAT_VERSION}")?;
+    writeln!(w, "task {}", task_name(meta.task))?;
+    writeln!(w, "k {}", meta.k)?;
+    writeln!(w, "m {}", meta.m)?;
+    writeln!(w, "lambda {}", meta.lambda)?;
+    writeln!(w, "options {}", meta.options)?;
+    match &model.body {
+        ModelBody::Linear(Weights::Single(v)) => {
+            writeln!(w, "weights single {}", v.len())?;
+            for x in v {
+                writeln!(w, "{x}")?;
+            }
+        }
+        ModelBody::Linear(Weights::PerClass(mat)) => {
+            writeln!(w, "weights perclass {} {}", mat.rows, mat.cols)?;
+            for x in &mat.data {
+                writeln!(w, "{x}")?;
+            }
+        }
+        ModelBody::Kernel(km) => {
+            match km.cfg {
+                KernelCfg::Gaussian { sigma } => writeln!(w, "kernel gaussian {sigma}")?,
+                KernelCfg::LinearK => writeln!(w, "kernel linear")?,
+            }
+            // only rows with nonzero dual coefficient are support
+            // vectors; decision() skips the rest, so pruning them is
+            // prediction-identical and shrinks the file
+            let sv: Vec<usize> = (0..km.train.n).filter(|&d| km.omega[d] != 0.0).collect();
+            writeln!(w, "support {} {}", sv.len(), km.train.k)?;
+            writeln!(w, "omega {}", sv.len())?;
+            for &d in &sv {
+                writeln!(w, "{}", km.omega[d])?;
+            }
+            let mut io_err = None;
+            for &d in &sv {
+                write!(w, "{}", km.train.labels[d])?;
+                km.train.for_nonzero(d, |j, v| {
+                    if let Err(e) = write!(w, " {}:{v}", j + 1) {
+                        io_err = Some(e);
+                    }
+                });
+                if let Some(e) = io_err.take() {
+                    return Err(e.into());
+                }
+                writeln!(w)?;
+            }
+        }
+    }
+    writeln!(w, "end")?;
+    Ok(())
+}
+
+/// Line cursor over the model file.
+struct Lines<'a> {
+    it: std::str::Lines<'a>,
+    lineno: usize,
+}
+
+impl<'a> Lines<'a> {
+    fn line(&mut self, what: &str) -> Result<&'a str> {
+        self.lineno += 1;
+        self.it.next().with_context(|| format!("model file truncated: expected {what}"))
+    }
+
+    /// Read `n` finite f32 values, one per line. The capacity hint is
+    /// capped: `n` comes from an untrusted header, and a corrupt count
+    /// should surface as a truncation error, not an allocation abort.
+    fn values(&mut self, n: usize, what: &str) -> Result<Vec<f32>> {
+        let mut out = Vec::with_capacity(n.min(1 << 16));
+        for i in 0..n {
+            let line = self.line(what)?;
+            let x: f32 = line
+                .trim()
+                .parse()
+                .with_context(|| format!("line {}: bad {what} value `{line}`", self.lineno))?;
+            if !x.is_finite() {
+                bail!("line {}: non-finite {what} value `{x}` (index {i})", self.lineno);
+            }
+            out.push(x);
+        }
+        Ok(out)
+    }
+}
+
+/// Load a model in either the v1 format or the legacy `model.txt`
+/// format (auto-detected from the first line).
+pub fn load(path: &Path) -> Result<SavedModel> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("read model {}", path.display()))?;
+    let first = text.lines().next().unwrap_or("");
+    if first.starts_with("# pemsvm ") {
+        return load_legacy(&text);
+    }
+    if !first.starts_with("pemsvm-model ") {
+        bail!("not a pemsvm model file (header `{first}`)");
+    }
+    let version: u32 = first
+        .trim_start_matches("pemsvm-model ")
+        .trim_start_matches('v')
+        .trim()
+        .parse()
+        .with_context(|| format!("bad model version in `{first}`"))?;
+    if version > FORMAT_VERSION {
+        bail!("model format v{version} is newer than this binary (max v{FORMAT_VERSION})");
+    }
+
+    let mut ls = Lines { it: text.lines(), lineno: 0 };
+    ls.line("header")?; // skip the version line we already parsed
+
+    // fixed header fields, in order
+    let mut field = |name: &str| -> Result<String> {
+        let line = ls.line(name)?;
+        let (key, val) = line
+            .split_once(' ')
+            .with_context(|| format!("line {}: expected `{name} <value>`", ls.lineno))?;
+        if key != name {
+            bail!("line {}: expected `{name}`, found `{key}`", ls.lineno);
+        }
+        Ok(val.trim().to_string())
+    };
+    let task = parse_task(&field("task")?)?;
+    let k: usize = field("k")?.parse().context("bad k")?;
+    let m: usize = field("m")?.parse().context("bad m")?;
+    let lambda: f32 = field("lambda")?.parse().context("bad lambda")?;
+    let options = field("options")?;
+    let meta = ModelMeta { task, k, m, lambda, options, legacy: false };
+
+    let body_line = ls.line("weights/kernel block")?;
+    let parts: Vec<&str> = body_line.split_whitespace().collect();
+    let body = match parts.as_slice() {
+        ["weights", "single", n] => {
+            let n: usize = n.parse().context("bad single length")?;
+            let vals = ls.values(n, "weight")?;
+            ModelBody::Linear(Weights::Single(vals))
+        }
+        ["weights", "perclass", r, c] => {
+            let rows: usize = r.parse().context("bad perclass rows")?;
+            let cols: usize = c.parse().context("bad perclass cols")?;
+            let count = rows
+                .checked_mul(cols)
+                .with_context(|| format!("perclass shape {rows}x{cols} overflows"))?;
+            let vals = ls.values(count, "weight")?;
+            let mut mat = Mat::zeros(rows, cols);
+            mat.data.copy_from_slice(&vals);
+            ModelBody::Linear(Weights::PerClass(mat))
+        }
+        ["kernel", rest @ ..] => {
+            let cfg = match rest {
+                ["gaussian", s] => {
+                    let sigma: f32 = s.parse().context("bad kernel sigma")?;
+                    if !(sigma.is_finite() && sigma > 0.0) {
+                        bail!("bad kernel sigma {sigma}");
+                    }
+                    KernelCfg::Gaussian { sigma }
+                }
+                ["linear"] => KernelCfg::LinearK,
+                other => bail!("bad kernel line `kernel {}`", other.join(" ")),
+            };
+            let sup = ls.line("support header")?;
+            let (n_sv, sv_k) = match sup.split_whitespace().collect::<Vec<_>>().as_slice() {
+                ["support", n, kk] => (
+                    n.parse::<usize>().context("bad support count")?,
+                    kk.parse::<usize>().context("bad support k")?,
+                ),
+                _ => bail!("line {}: expected `support <n> <k>`", ls.lineno),
+            };
+            let om = ls.line("omega header")?;
+            match om.split_whitespace().collect::<Vec<_>>().as_slice() {
+                ["omega", n] if n.parse::<usize>().ok() == Some(n_sv) => {}
+                _ => bail!("line {}: expected `omega {n_sv}`", ls.lineno),
+            }
+            let omega = ls.values(n_sv, "omega")?;
+            let mut indptr = vec![0usize];
+            let (mut indices, mut values, mut labels) = (Vec::new(), Vec::new(), Vec::new());
+            for _ in 0..n_sv {
+                let line = ls.line("support vector row")?;
+                let (label, pairs) = libsvm::parse_row(line, ls.lineno)?
+                    .with_context(|| format!("line {}: empty support vector row", ls.lineno))?;
+                labels.push(label);
+                for (j, v) in pairs {
+                    if j as usize >= sv_k {
+                        bail!(
+                            "line {}: support vector index {} out of range (k={sv_k})",
+                            ls.lineno,
+                            j + 1
+                        );
+                    }
+                    if !v.is_finite() {
+                        bail!("line {}: non-finite support vector value", ls.lineno);
+                    }
+                    indices.push(j);
+                    values.push(v);
+                }
+                indptr.push(indices.len());
+            }
+            let train = Dataset::sparse(indptr, indices, values, labels, sv_k, Task::Binary);
+            ModelBody::Kernel(KernelModel { train, omega, cfg })
+        }
+        _ => bail!("bad body header `{body_line}`"),
+    };
+    let tail = ls.line("`end` sentinel")?;
+    if tail.trim() != "end" {
+        bail!("line {}: expected `end`, found `{tail}` (corrupt model?)", ls.lineno);
+    }
+
+    // cross-check the body against the header
+    match &body {
+        ModelBody::Linear(Weights::Single(v)) => {
+            if v.len() != meta.k {
+                bail!("header says k={}, single weights have {} values", meta.k, v.len());
+            }
+        }
+        ModelBody::Linear(Weights::PerClass(w)) => {
+            if w.rows != meta.m || w.cols != meta.k {
+                bail!(
+                    "header says m={} k={}, perclass weights are {}x{}",
+                    meta.m,
+                    meta.k,
+                    w.rows,
+                    w.cols
+                );
+            }
+        }
+        ModelBody::Kernel(km) => {
+            if km.train.k != meta.k {
+                bail!("header says k={}, support vectors have k={}", meta.k, km.train.k);
+            }
+        }
+    }
+    Ok(SavedModel::new(meta, body))
+}
+
+/// The pre-v1 `model.txt` read-path: `# pemsvm single N` /
+/// `# pemsvm perclass R C`, values one per line. Unlike the old
+/// `load_weights` in `main.rs`, the declared count is validated for
+/// *both* layouts (the old code only checked `perclass`).
+fn load_legacy(text: &str) -> Result<SavedModel> {
+    let mut lines = text.lines();
+    let header = lines.next().context("empty model file")?;
+    let parts: Vec<&str> = header.split_whitespace().collect();
+    let mut vals = Vec::new();
+    for (off, line) in lines.enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let x: f32 = line
+            .parse()
+            .with_context(|| format!("line {}: bad weight `{line}`", off + 2))?;
+        if !x.is_finite() {
+            bail!("line {}: non-finite weight `{x}`", off + 2);
+        }
+        vals.push(x);
+    }
+    let (weights, k, m) = match parts.get(2) {
+        Some(&"single") => {
+            let n: usize = parts
+                .get(3)
+                .context("legacy single header missing length")?
+                .parse()
+                .context("bad length in legacy header")?;
+            if vals.len() != n {
+                bail!("model file: header declares {n} values, got {}", vals.len());
+            }
+            (Weights::Single(vals), n, 1)
+        }
+        Some(&"perclass") => {
+            let rows: usize = parts.get(3).context("legacy perclass header missing rows")?.parse()?;
+            let cols: usize = parts.get(4).context("legacy perclass header missing cols")?.parse()?;
+            if vals.len() != rows * cols {
+                bail!("model file: expected {} values, got {}", rows * cols, vals.len());
+            }
+            let mut mat = Mat::zeros(rows, cols);
+            mat.data.copy_from_slice(&vals);
+            (Weights::PerClass(mat), cols, rows)
+        }
+        _ => bail!("bad model header `{header}`"),
+    };
+    let task = if m > 1 { TaskKind::Mlt } else { TaskKind::Cls };
+    Ok(SavedModel::new(
+        ModelMeta { task, k, m, lambda: f32::NAN, options: String::new(), legacy: true },
+        ModelBody::Linear(weights),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("pemsvm_format_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn legacy_single_count_validated() {
+        let p = tmp("legacy_bad.txt");
+        std::fs::write(&p, "# pemsvm single 3\n1.0\n2.0\n").unwrap();
+        let err = load(&p).unwrap_err().to_string();
+        assert!(err.contains("declares 3"), "{err}");
+        std::fs::write(&p, "# pemsvm single 2\n1.0\n2.0\n").unwrap();
+        let m = load(&p).unwrap();
+        assert!(m.meta.legacy);
+        match m.body {
+            ModelBody::Linear(Weights::Single(v)) => assert_eq!(v, vec![1.0, 2.0]),
+            _ => panic!("wrong body"),
+        }
+    }
+
+    #[test]
+    fn legacy_perclass_count_validated() {
+        let p = tmp("legacy_pc.txt");
+        std::fs::write(&p, "# pemsvm perclass 2 2\n1\n2\n3\n").unwrap();
+        assert!(load(&p).is_err());
+        std::fs::write(&p, "# pemsvm perclass 2 2\n1\n2\n3\n4\n").unwrap();
+        let m = load(&p).unwrap();
+        assert_eq!(m.meta.m, 2);
+        assert_eq!(m.meta.k, 2);
+    }
+
+    #[test]
+    fn rejects_foreign_and_truncated_files() {
+        let p = tmp("foreign.txt");
+        std::fs::write(&p, "hello world\n").unwrap();
+        assert!(load(&p).is_err());
+        std::fs::write(
+            &p,
+            concat!(
+                "pemsvm-model v1\ntask cls\nk 2\nm 1\nlambda 1\n",
+                "options LIN-EM-CLS\nweights single 2\n0.5\n"
+            ),
+        )
+        .unwrap();
+        let err = load(&p).unwrap_err().to_string();
+        assert!(err.contains("truncated"), "{err}");
+    }
+
+    #[test]
+    fn rejects_nan_weight() {
+        let p = tmp("nan.txt");
+        std::fs::write(
+            &p,
+            concat!(
+                "pemsvm-model v1\ntask cls\nk 2\nm 1\nlambda 1\n",
+                "options LIN-EM-CLS\nweights single 2\nNaN\n1.0\nend\n"
+            ),
+        )
+        .unwrap();
+        let err = load(&p).unwrap_err().to_string();
+        assert!(err.contains("non-finite"), "{err}");
+    }
+
+    #[test]
+    fn rejects_newer_version() {
+        let p = tmp("v99.txt");
+        std::fs::write(&p, "pemsvm-model v99\n").unwrap();
+        assert!(load(&p).unwrap_err().to_string().contains("newer"));
+    }
+}

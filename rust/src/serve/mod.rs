@@ -1,0 +1,30 @@
+//! The online serving subsystem (DESIGN.md §9) — the inference side of
+//! the crate, the layer the ROADMAP's "serve heavy traffic" north star
+//! plugs into.
+//!
+//! Three parts:
+//!
+//! * [`format`] — the versioned on-disk model format (`pemsvm-model
+//!   v1`): typed header, linear *and* kernel bodies, validated counts,
+//!   plus the legacy `model.txt` read-path.
+//! * [`registry`] — named models in memory behind an `Arc` swap:
+//!   publish/hot-reload without dropping in-flight requests, with
+//!   per-model [`crate::metrics::ServeStats`] counters.
+//! * [`scorer`] — the persistent batched scoring pool (patterned on
+//!   `engine::pool::Pool`): shards a batch of rows across worker
+//!   threads and scores CLS margins, SVR values, MLT argmaxes
+//!   (blockwise, against transposed weights) and kernel decisions.
+//!
+//! [`server`] wires them to a TCP front-end speaking newline-delimited
+//! libsvm rows with micro-batching; `main.rs` adds the `predict` batch
+//! subcommand on the same scorer.
+
+pub mod format;
+pub mod registry;
+pub mod scorer;
+pub mod server;
+
+pub use format::{load, save, ModelBody, ModelMeta, SavedModel};
+pub use registry::{ModelEntry, Registry};
+pub use scorer::{format_prediction, metric_of, predicted_value, ScoredBatch, Scorer};
+pub use server::{serve, ServeOpts};

@@ -1,0 +1,171 @@
+//! The model registry: many named models in memory, hot-reloadable.
+//!
+//! Each name maps to a long-lived [`ModelEntry`]; the entry holds the
+//! current [`SavedModel`] behind an `Arc` that is *swapped*, never
+//! mutated. A scoring request clones the `Arc` once at dispatch time
+//! ([`ModelEntry::current`]) and keeps scoring against that snapshot
+//! even if [`Registry::publish`] replaces the model mid-flight — the
+//! old version is freed when the last in-flight request drops its
+//! clone. Per-model serving counters live on the entry (not the model)
+//! so they survive hot reloads.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use anyhow::{Context, Result};
+
+use crate::metrics::ServeStats;
+
+use super::format::{self, SavedModel};
+
+/// A named registry slot: the swappable model + its lifetime counters.
+pub struct ModelEntry {
+    name: String,
+    model: RwLock<Arc<SavedModel>>,
+    /// requests/rows/latency counters, accumulated across reloads
+    pub stats: ServeStats,
+    /// how many times this slot has been (re)published
+    versions: AtomicU64,
+}
+
+impl ModelEntry {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Snapshot the current model. The returned `Arc` stays valid (and
+    /// unchanged) for as long as the caller holds it, regardless of
+    /// concurrent publishes.
+    pub fn current(&self) -> Arc<SavedModel> {
+        self.model.read().expect("model lock poisoned").clone()
+    }
+
+    /// Number of publishes into this slot (1 for a freshly loaded model).
+    pub fn version(&self) -> u64 {
+        self.versions.load(Ordering::Acquire)
+    }
+
+    fn swap(&self, next: Arc<SavedModel>) {
+        *self.model.write().expect("model lock poisoned") = next;
+        self.versions.fetch_add(1, Ordering::AcqRel);
+    }
+}
+
+/// Named model slots behind one lock. The map lock is held only for
+/// lookup/insert; scoring holds no registry lock at all.
+#[derive(Default)]
+pub struct Registry {
+    inner: RwLock<BTreeMap<String, Arc<ModelEntry>>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Publish `model` under `name`: a new slot if the name is unknown,
+    /// an `Arc` swap on the existing slot (hot reload) otherwise.
+    pub fn publish(&self, name: &str, model: SavedModel) -> Arc<ModelEntry> {
+        let model = Arc::new(model);
+        let mut map = self.inner.write().expect("registry lock poisoned");
+        if let Some(entry) = map.get(name) {
+            entry.swap(model);
+            return entry.clone();
+        }
+        let entry = Arc::new(ModelEntry {
+            name: name.to_string(),
+            model: RwLock::new(model),
+            stats: ServeStats::default(),
+            versions: AtomicU64::new(1),
+        });
+        map.insert(name.to_string(), entry.clone());
+        entry
+    }
+
+    /// Load a model file and publish it under `name`.
+    pub fn load_file(&self, name: &str, path: &Path) -> Result<Arc<ModelEntry>> {
+        let model = format::load(path)
+            .with_context(|| format!("loading model `{name}` from {}", path.display()))?;
+        Ok(self.publish(name, model))
+    }
+
+    pub fn get(&self, name: &str) -> Option<Arc<ModelEntry>> {
+        self.inner.read().expect("registry lock poisoned").get(name).cloned()
+    }
+
+    /// Remove a slot; in-flight requests holding the entry finish
+    /// against their snapshot.
+    pub fn unload(&self, name: &str) -> bool {
+        self.inner.write().expect("registry lock poisoned").remove(name).is_some()
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.inner.read().expect("registry lock poisoned").keys().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.read().expect("registry lock poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TaskKind;
+    use crate::model::Weights;
+    use crate::serve::format::{ModelBody, ModelMeta};
+
+    fn linear(w: Vec<f32>) -> SavedModel {
+        SavedModel::new(
+            ModelMeta {
+                task: TaskKind::Cls,
+                k: w.len(),
+                m: 1,
+                lambda: 1.0,
+                options: "LIN-EM-CLS".into(),
+                legacy: false,
+            },
+            ModelBody::Linear(Weights::Single(w)),
+        )
+    }
+
+    #[test]
+    fn publish_get_unload() {
+        let reg = Registry::new();
+        assert!(reg.is_empty());
+        reg.publish("a", linear(vec![1.0]));
+        reg.publish("b", linear(vec![2.0]));
+        assert_eq!(reg.names(), vec!["a".to_string(), "b".to_string()]);
+        assert!(reg.get("a").is_some());
+        assert!(reg.get("c").is_none());
+        assert!(reg.unload("a"));
+        assert!(!reg.unload("a"));
+        assert_eq!(reg.len(), 1);
+    }
+
+    #[test]
+    fn hot_swap_preserves_in_flight_snapshot() {
+        let reg = Registry::new();
+        let entry = reg.publish("m", linear(vec![1.0, 2.0]));
+        assert_eq!(entry.version(), 1);
+        let in_flight = entry.current();
+        // hot reload under the same name: same entry, new model Arc
+        let entry2 = reg.publish("m", linear(vec![9.0, 9.0]));
+        assert!(Arc::ptr_eq(&entry, &entry2));
+        assert_eq!(entry.version(), 2);
+        // the in-flight snapshot is untouched; new requests see v2
+        match (&in_flight.body, &entry.current().body) {
+            (ModelBody::Linear(Weights::Single(old)), ModelBody::Linear(Weights::Single(new))) => {
+                assert_eq!(old, &vec![1.0, 2.0]);
+                assert_eq!(new, &vec![9.0, 9.0]);
+            }
+            _ => panic!("wrong bodies"),
+        }
+    }
+}

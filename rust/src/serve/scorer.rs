@@ -1,0 +1,355 @@
+//! The batched scoring pool: persistent worker threads that shard an
+//! incoming batch of rows and score them against a [`SavedModel`].
+//!
+//! Patterned on `engine::pool::Pool` (persistent threads, `Arc`-shared
+//! request blocks, no per-call spawn): `score_batch` wraps the batch in
+//! one `Arc<ScoreReq>`, sends each worker a row range, and splices the
+//! per-range score vectors back in order. For Crammer-Singer models the
+//! `[m, k]` weights are transposed **once per model** to `[k, m]`
+//! (cached on the immutable [`SavedModel`]) and the workers run
+//! [`crate::model::class_scores_block`] — a `[rows x K]`
+//! block of contiguous row-major multiplies instead of the per-row
+//! per-class scalar loop of `model::class_scores`.
+//!
+//! Every scoring path reproduces its one-shot twin bit-for-bit:
+//! CLS/SVR margins match `Dataset::dot_row`, MLT scores match
+//! `class_scores`, kernel decisions match `KernelModel::decision` —
+//! the serve round-trip tests pin this down.
+
+use std::ops::Range;
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::TaskKind;
+use crate::data::{shard_ranges, Dataset};
+use crate::linalg::Mat;
+use crate::model::{self, Weights};
+
+use super::format::{ModelBody, SavedModel};
+
+/// One in-flight batch, shared by all workers through a single `Arc`.
+struct ScoreReq {
+    model: Arc<SavedModel>,
+    batch: Arc<Dataset>,
+}
+
+enum Cmd {
+    Score { req: Arc<ScoreReq>, range: Range<usize>, slot: usize },
+    Stop,
+}
+
+struct Reply {
+    slot: usize,
+    scores: Result<Vec<f32>>,
+    elapsed: Duration,
+}
+
+/// Raw scores for one batch, plus timing for the serving counters.
+pub struct ScoredBatch {
+    /// one score per row: signed margin (CLS), predicted value (SVR),
+    /// argmax class index (MLT), kernel decision value (KRN)
+    pub scores: Vec<f32>,
+    /// wall-clock of the whole dispatch
+    pub wall: Duration,
+    /// max per-worker compute time (the §4.1-style parallel cost)
+    pub compute_max: Duration,
+}
+
+/// A persistent pool of scoring threads.
+pub struct Scorer {
+    cmd_txs: Vec<Sender<Cmd>>,
+    res_rx: Receiver<Reply>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl Scorer {
+    /// Spawn `workers` scoring threads (at least one).
+    pub fn new(workers: usize) -> Scorer {
+        let p = workers.max(1);
+        let (res_tx, res_rx) = mpsc::channel::<Reply>();
+        let mut cmd_txs = Vec::with_capacity(p);
+        let mut handles = Vec::with_capacity(p);
+        for _ in 0..p {
+            let (tx, rx) = mpsc::channel::<Cmd>();
+            cmd_txs.push(tx);
+            let res_tx = res_tx.clone();
+            handles.push(std::thread::spawn(move || {
+                while let Ok(cmd) = rx.recv() {
+                    match cmd {
+                        Cmd::Stop => break,
+                        Cmd::Score { req, range, slot } => {
+                            let t0 = Instant::now();
+                            let mut out = vec![0f32; range.len()];
+                            let scores = score_range(&req, range, &mut out).map(|()| out);
+                            let elapsed = t0.elapsed();
+                            drop(req);
+                            if res_tx.send(Reply { slot, scores, elapsed }).is_err() {
+                                break;
+                            }
+                        }
+                    }
+                }
+            }));
+        }
+        Scorer { cmd_txs, res_rx, handles }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.cmd_txs.len()
+    }
+
+    /// Score every row of `batch` against `model`. Rows are sharded
+    /// contiguously across the pool; the result is ordered like the
+    /// batch.
+    pub fn score_batch(
+        &mut self,
+        model: &Arc<SavedModel>,
+        batch: &Arc<Dataset>,
+    ) -> Result<ScoredBatch> {
+        let t0 = Instant::now();
+        let n = batch.n;
+        // materialize the model's cached [k, m] transpose before the
+        // fan-out so the workers don't race to build it
+        let _ = model.transposed_weights();
+        let req = Arc::new(ScoreReq { model: model.clone(), batch: batch.clone() });
+        let shards: Vec<Range<usize>> = shard_ranges(n, self.workers())
+            .into_iter()
+            .map(|s| s.range)
+            .filter(|r| !r.is_empty())
+            .collect();
+        for (slot, range) in shards.iter().enumerate() {
+            self.cmd_txs[slot % self.cmd_txs.len()]
+                .send(Cmd::Score { req: req.clone(), range: range.clone(), slot })
+                .map_err(|_| anyhow!("scorer worker hung up"))?;
+        }
+        drop(req);
+        let mut parts: Vec<Option<Vec<f32>>> = (0..shards.len()).map(|_| None).collect();
+        let mut compute_max = Duration::ZERO;
+        let mut first_err: Option<anyhow::Error> = None;
+        // drain every reply even on error: a queued reply would leak
+        // into the next batch on this persistent pool
+        for _ in 0..shards.len() {
+            let reply = self.res_rx.recv().context("scorer worker died")?;
+            compute_max = compute_max.max(reply.elapsed);
+            match reply.scores {
+                Ok(s) => parts[reply.slot] = Some(s),
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        let mut scores = Vec::with_capacity(n);
+        for p in parts {
+            scores.extend(p.expect("scorer slot not filled"));
+        }
+        Ok(ScoredBatch { scores, wall: t0.elapsed(), compute_max })
+    }
+}
+
+impl Drop for Scorer {
+    fn drop(&mut self) {
+        for tx in &self.cmd_txs {
+            let _ = tx.send(Cmd::Stop);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Score `range` of the request's batch into `out` (len == range.len()).
+fn score_range(req: &ScoreReq, range: Range<usize>, out: &mut [f32]) -> Result<()> {
+    let ds = &*req.batch;
+    match &req.model.body {
+        ModelBody::Linear(Weights::Single(w)) => {
+            if ds.k <= w.len() {
+                // same code path as evaluate/dot_row: bit-identical sums
+                for (o, d) in out.iter_mut().zip(range) {
+                    *o = ds.dot_row(d, w);
+                }
+            } else {
+                // rows wider than the model: extra features carry zero weight
+                for (o, d) in out.iter_mut().zip(range) {
+                    let mut s = 0f32;
+                    ds.for_nonzero(d, |j, v| {
+                        if (j as usize) < w.len() {
+                            s += v * w[j as usize];
+                        }
+                    });
+                    *o = s;
+                }
+            }
+        }
+        ModelBody::Linear(Weights::PerClass(_)) => {
+            let wt = req
+                .model
+                .transposed_weights()
+                .context("per-class model missing transposed weights")?;
+            const BLOCK: usize = 128;
+            let mut block = Mat::zeros(BLOCK.min(range.len().max(1)), wt.cols);
+            let mut start = range.start;
+            while start < range.end {
+                let end = (start + BLOCK).min(range.end);
+                let b = end - start;
+                if block.rows != b {
+                    block = Mat::zeros(b, wt.cols);
+                }
+                model::class_scores_block(ds, start..end, wt, &mut block);
+                for r in 0..b {
+                    out[start - range.start + r] = model::argmax(block.row(r)) as f32;
+                }
+                start = end;
+            }
+        }
+        ModelBody::Kernel(km) => {
+            let (mut bi, mut bj) = km.scratch(ds.k);
+            for (o, d) in out.iter_mut().zip(range) {
+                *o = km.decision_with(ds, d, &mut bi, &mut bj);
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Map a raw score to the predicted label value for `task`:
+/// CLS/KRN margin -> ±1, MLT argmax index, SVR value unchanged.
+pub fn predicted_value(task: TaskKind, score: f32) -> f32 {
+    match task {
+        TaskKind::Cls => {
+            if score > 0.0 {
+                1.0
+            } else {
+                -1.0
+            }
+        }
+        TaskKind::Svr | TaskKind::Mlt => score,
+    }
+}
+
+/// Format one prediction for the `predict` output file and the TCP
+/// protocol (integers print without a trailing `.0`).
+pub fn format_prediction(task: TaskKind, score: f32) -> String {
+    let v = predicted_value(task, score);
+    if v == v.trunc() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// The evaluation metric of raw scores against ground-truth labels:
+/// accuracy for CLS/MLT (the CLS rule `label * margin > 0` matches
+/// `accuracy_cls` and `KernelModel::accuracy` exactly), RMSE for SVR
+/// (same residual order as `model::rmse`).
+pub fn metric_of(task: TaskKind, labels: &[f32], scores: &[f32]) -> f64 {
+    debug_assert_eq!(labels.len(), scores.len());
+    let n = labels.len().max(1) as f64;
+    match task {
+        TaskKind::Cls => {
+            labels.iter().zip(scores).filter(|(&y, &s)| y * s > 0.0).count() as f64 / n
+        }
+        TaskKind::Mlt => {
+            labels.iter().zip(scores).filter(|(&y, &s)| s == y).count() as f64 / n
+        }
+        TaskKind::Svr => {
+            let mut acc = 0f64;
+            for (&y, &s) in labels.iter().zip(scores) {
+                let r = (y - s) as f64;
+                acc += r * r;
+            }
+            (acc / n).sqrt()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TaskKind;
+    use crate::data::synth;
+    use crate::serve::format::{ModelBody, ModelMeta};
+
+    fn linear_model(task: TaskKind, w: Weights, k: usize, m: usize) -> Arc<SavedModel> {
+        Arc::new(SavedModel::new(
+            ModelMeta { task, k, m, lambda: 1.0, options: String::new(), legacy: false },
+            ModelBody::Linear(w),
+        ))
+    }
+
+    #[test]
+    fn cls_scores_match_dot_row_for_any_worker_count() {
+        let ds = Arc::new(synth::alpha_like(503, 12, 5));
+        let mut g = crate::rng::Pcg64::new(3);
+        let w: Vec<f32> = (0..12).map(|_| g.next_f32() - 0.5).collect();
+        let model = linear_model(TaskKind::Cls, Weights::Single(w.clone()), 12, 1);
+        for workers in [1usize, 3, 8] {
+            let mut sc = Scorer::new(workers);
+            let out = sc.score_batch(&model, &ds).unwrap();
+            assert_eq!(out.scores.len(), ds.n);
+            for d in 0..ds.n {
+                assert_eq!(out.scores[d], ds.dot_row(d, &w), "worker={workers} row {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn mlt_argmax_matches_evaluate() {
+        let ds = Arc::new(synth::mnist_like(400, 20, 6, 2));
+        let mut g = crate::rng::Pcg64::new(4);
+        let mut w = Mat::zeros(6, 20);
+        for x in w.data.iter_mut() {
+            *x = g.next_f32() - 0.5;
+        }
+        let weights = Weights::PerClass(w);
+        let acc_ref = crate::model::evaluate(&ds, &weights);
+        let model = linear_model(TaskKind::Mlt, weights, 20, 6);
+        let mut sc = Scorer::new(4);
+        let out = sc.score_batch(&model, &ds).unwrap();
+        assert_eq!(metric_of(TaskKind::Mlt, &ds.labels, &out.scores), acc_ref);
+    }
+
+    #[test]
+    fn empty_batch_and_wide_rows() {
+        let empty = Arc::new(Dataset::sparse(
+            vec![0],
+            vec![],
+            vec![],
+            vec![],
+            4,
+            crate::data::Task::Binary,
+        ));
+        let model = linear_model(TaskKind::Cls, Weights::Single(vec![1.0, -1.0]), 2, 1);
+        let mut sc = Scorer::new(2);
+        assert!(sc.score_batch(&model, &empty).unwrap().scores.is_empty());
+        // a batch wider than the model: extra features score zero
+        let wide = Arc::new(Dataset::sparse(
+            vec![0, 2],
+            vec![0, 3],
+            vec![2.0, 5.0],
+            vec![1.0],
+            4,
+            crate::data::Task::Binary,
+        ));
+        let out = sc.score_batch(&model, &wide).unwrap();
+        assert_eq!(out.scores, vec![2.0]);
+    }
+
+    #[test]
+    fn prediction_formatting() {
+        assert_eq!(format_prediction(TaskKind::Cls, 0.37), "1");
+        assert_eq!(format_prediction(TaskKind::Cls, -2.0), "-1");
+        assert_eq!(format_prediction(TaskKind::Cls, 0.0), "-1");
+        assert_eq!(format_prediction(TaskKind::Mlt, 7.0), "7");
+        assert_eq!(format_prediction(TaskKind::Svr, 1.5), "1.5");
+        assert_eq!(format_prediction(TaskKind::Svr, 2.0), "2");
+    }
+}

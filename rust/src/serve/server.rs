@@ -1,0 +1,265 @@
+//! The `pemsvm serve` TCP front-end: a newline-delimited libsvm-row
+//! protocol over `std::net::TcpListener` (no external deps, offline-
+//! friendly).
+//!
+//! Protocol, one line per message:
+//!
+//! * `<label> idx:val idx:val ...` — a libsvm row; the label field is
+//!   required by the format but ignored for scoring. The server replies
+//!   with one line holding the prediction (`1`/`-1` for CLS/KRN, class
+//!   index for MLT, value for SVR), in row order per connection.
+//! * `#model <name>` — switch this connection to another registry model.
+//! * `#stats` — reply with the current model's serving counters.
+//! * blank lines / other `#...` lines — ignored, no reply.
+//! * a malformed row — replies `error: <why>`, the connection stays up.
+//!
+//! Malformed-row errors and `#stats` replies travel through the same
+//! dispatcher queue as predictions, so the one-reply-per-line ordering
+//! holds even for pipelined clients; only errors with no model context
+//! (unknown `#model`, no model selected) are answered immediately.
+//!
+//! Micro-batching: connection readers feed one dispatcher channel; the
+//! dispatcher coalesces up to `max_batch` rows or `max_wait` (whichever
+//! first) before handing the block to the [`Scorer`], so concurrent
+//! clients share batched row-major multiplies instead of per-row calls.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::data::{libsvm, Dataset};
+
+use super::registry::{ModelEntry, Registry};
+use super::scorer::{format_prediction, Scorer};
+
+/// Serving knobs (see `pemsvm serve --help` text in `main.rs`).
+#[derive(Clone, Debug)]
+pub struct ServeOpts {
+    /// dispatch a batch once this many rows are pending
+    pub max_batch: usize,
+    /// ... or once the oldest pending row has waited this long
+    pub max_wait: Duration,
+    /// scoring threads
+    pub workers: usize,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        ServeOpts { max_batch: 256, max_wait: Duration::from_micros(1000), workers: 4 }
+    }
+}
+
+/// What a protocol line asks for, queued in arrival order.
+enum Payload {
+    /// a parsed libsvm row to score
+    Row(Vec<(u32, f32)>),
+    /// a parse failure whose error reply must keep its queue position
+    BadRow(String),
+    /// the `#stats` verb, answered in order against the row stream
+    Stats,
+}
+
+/// One protocol message en route to the dispatcher.
+struct RowMsg {
+    payload: Payload,
+    entry: Arc<ModelEntry>,
+    reply: Sender<String>,
+}
+
+/// Serve forever on `listener`. `default_model` names the registry
+/// entry connections start on. Blocks the calling thread; tests run it
+/// on a spawned thread and connect via `TcpStream`.
+pub fn serve(
+    listener: TcpListener,
+    registry: Arc<Registry>,
+    default_model: String,
+    opts: ServeOpts,
+) -> Result<()> {
+    let (row_tx, row_rx) = mpsc::channel::<RowMsg>();
+    let dispatcher_opts = opts.clone();
+    let dispatcher = std::thread::spawn(move || dispatch_loop(row_rx, dispatcher_opts));
+
+    for stream in listener.incoming() {
+        let Ok(stream) = stream else { continue };
+        let registry = registry.clone();
+        let default_model = default_model.clone();
+        let row_tx = row_tx.clone();
+        std::thread::spawn(move || {
+            let _ = handle_conn(stream, &registry, &default_model, &row_tx);
+        });
+    }
+    drop(row_tx);
+    let _ = dispatcher.join();
+    Ok(())
+}
+
+/// Read rows off one connection, forwarding them to the dispatcher and
+/// pumping replies back through a per-connection writer thread (so slow
+/// clients don't stall scoring).
+fn handle_conn(
+    stream: TcpStream,
+    registry: &Registry,
+    default_model: &str,
+    row_tx: &Sender<RowMsg>,
+) -> Result<()> {
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    let (reply_tx, reply_rx) = mpsc::channel::<String>();
+    let writer_thread = std::thread::spawn(move || {
+        while let Ok(line) = reply_rx.recv() {
+            if writer.write_all(line.as_bytes()).is_err() || writer.write_all(b"\n").is_err() {
+                break;
+            }
+            let _ = writer.flush();
+        }
+    });
+
+    let mut entry = registry.get(default_model);
+    for (lineno, line) in reader.lines().enumerate() {
+        let Ok(line) = line else { break };
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        if let Some(ctl) = trimmed.strip_prefix('#') {
+            let mut it = ctl.split_whitespace();
+            match it.next() {
+                Some("model") => match it.next().and_then(|n| registry.get(n)) {
+                    Some(e) => entry = Some(e),
+                    None => {
+                        let _ = reply_tx.send("error: unknown model".into());
+                    }
+                },
+                Some("stats") => match entry.clone() {
+                    // ordered behind any rows already queued, so the
+                    // counters reflect everything sent before the verb
+                    Some(entry) => {
+                        let msg =
+                            RowMsg { payload: Payload::Stats, entry, reply: reply_tx.clone() };
+                        if row_tx.send(msg).is_err() {
+                            break;
+                        }
+                    }
+                    None => {
+                        let _ = reply_tx.send("error: no model selected".into());
+                    }
+                },
+                _ => {} // comment; ignore
+            }
+            continue;
+        }
+        let Some(entry) = entry.clone() else {
+            let _ = reply_tx.send("error: no model selected".into());
+            continue;
+        };
+        let payload = match libsvm::parse_row(trimmed, lineno + 1) {
+            Ok(Some((_label, pairs))) => Payload::Row(pairs),
+            Ok(None) => continue,
+            Err(e) => Payload::BadRow(format!("error: {e:#}")),
+        };
+        if row_tx.send(RowMsg { payload, entry, reply: reply_tx.clone() }).is_err() {
+            break; // dispatcher gone: server shutting down
+        }
+    }
+    drop(reply_tx);
+    let _ = writer_thread.join();
+    Ok(())
+}
+
+/// The micro-batching loop: block for the first row, then drain until
+/// `max_batch` rows or `max_wait` elapsed, score, reply, repeat.
+fn dispatch_loop(rx: Receiver<RowMsg>, opts: ServeOpts) {
+    let mut scorer = Scorer::new(opts.workers);
+    while let Ok(first) = rx.recv() {
+        let deadline = Instant::now() + opts.max_wait;
+        let mut rows = vec![first];
+        while rows.len() < opts.max_batch {
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                break;
+            }
+            match rx.recv_timeout(left) {
+                Ok(msg) => rows.push(msg),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        score_and_reply(&mut scorer, rows);
+    }
+}
+
+/// Score one drained block: group rows by target model entry, score
+/// each group as one batch, then emit every reply in the block's
+/// arrival order — so a connection that interleaves `#model` switches
+/// within one micro-batch still gets its replies line-for-line.
+fn score_and_reply(scorer: &mut Scorer, rows: Vec<RowMsg>) {
+    let mut groups: Vec<(Arc<ModelEntry>, Vec<(usize, RowMsg)>)> = Vec::new();
+    for (pos, row) in rows.into_iter().enumerate() {
+        let idx = groups.iter().position(|(e, _)| Arc::ptr_eq(e, &row.entry));
+        match idx {
+            Some(i) => groups[i].1.push((pos, row)),
+            None => {
+                let entry = row.entry.clone();
+                groups.push((entry, vec![(pos, row)]));
+            }
+        }
+    }
+    let mut replies: Vec<(usize, String, Sender<String>)> = Vec::new();
+    for (entry, group) in groups {
+        let model = entry.current();
+        // assemble the scorable rows into one CSR batch, wide enough
+        // for the model and for any stray larger feature index
+        let mut kmax = model.meta.k;
+        let mut indptr = vec![0usize];
+        let (mut indices, mut values) = (Vec::new(), Vec::new());
+        let mut n_rows = 0usize;
+        for (_, row) in &group {
+            let Payload::Row(pairs) = &row.payload else { continue };
+            for &(j, v) in pairs {
+                kmax = kmax.max(j as usize + 1);
+                indices.push(j);
+                values.push(v);
+            }
+            indptr.push(indices.len());
+            n_rows += 1;
+        }
+        let labels = vec![0f32; n_rows];
+        let batch =
+            Arc::new(Dataset::sparse(indptr, indices, values, labels, kmax, model.data_task()));
+        let scored = scorer.score_batch(&model, &batch);
+        if let Ok(out) = &scored {
+            if batch.n > 0 {
+                entry.stats.record(batch.n, out.wall);
+            }
+        }
+        let empty: [f32; 0] = [];
+        let mut scores = match &scored {
+            Ok(out) => out.scores.iter(),
+            Err(_) => empty.iter(),
+        };
+        for (pos, row) in group {
+            let msg = match (&row.payload, &scored) {
+                (Payload::Row(_), Ok(_)) => {
+                    let &s = scores.next().expect("one score per scored row");
+                    format_prediction(model.meta.task, s)
+                }
+                (Payload::Row(_), Err(e)) => format!("error: {e:#}"),
+                (Payload::BadRow(e), _) => e.clone(),
+                (Payload::Stats, _) => {
+                    format!("stats {}: {}", entry.name(), entry.stats.snapshot().report())
+                }
+            };
+            replies.push((pos, msg, row.reply));
+        }
+    }
+    // predictions, queued parse errors, and stats snapshots interleave
+    // exactly as the clients sent them
+    replies.sort_unstable_by_key(|(pos, ..)| *pos);
+    for (_, msg, reply) in replies {
+        let _ = reply.send(msg);
+    }
+}

@@ -9,20 +9,41 @@ use crate::config::KernelCfg;
 use crate::data::Dataset;
 use crate::linalg::Mat;
 
-/// k(x_i, x_j) for the rows i of `a` and j of `b`.
+/// k(x_i, x_j) for the rows i of `a` and j of `b`. The scratch buffers
+/// must satisfy `bi.len() >= a.k` and `bj.len() >= b.k`; mismatched
+/// widths zero-pad the shorter side (when `a.k == b.k` the computation
+/// and summation order are unchanged).
 pub(crate) fn kval(a: &Dataset, i: usize, b: &Dataset, j: usize, cfg: &KernelCfg, bi: &mut [f32], bj: &mut [f32]) -> f32 {
     match cfg {
         KernelCfg::LinearK => {
-            a.densify_row(i, bi);
-            b.dot_row(j, bi)
+            a.densify_row(i, &mut bi[..a.k]);
+            if b.k <= a.k {
+                b.dot_row(j, &bi[..a.k])
+            } else {
+                // features beyond a's width carry zero weight
+                let mut s = 0f32;
+                b.for_nonzero(j, |t, v| {
+                    if (t as usize) < a.k {
+                        s += v * bi[t as usize];
+                    }
+                });
+                s
+            }
         }
         KernelCfg::Gaussian { sigma } => {
-            a.densify_row(i, bi);
-            b.densify_row(j, bj);
+            a.densify_row(i, &mut bi[..a.k]);
+            b.densify_row(j, &mut bj[..b.k]);
+            let k0 = a.k.min(b.k);
             let mut d2 = 0f32;
-            for (x, z) in bi.iter().zip(bj.iter()) {
+            for (x, z) in bi[..k0].iter().zip(&bj[..k0]) {
                 let d = x - z;
                 d2 += d * d;
+            }
+            for &x in &bi[k0..a.k] {
+                d2 += x * x;
+            }
+            for &z in &bj[k0..b.k] {
+                d2 += z * z;
             }
             (-d2 / (2.0 * sigma * sigma)).exp()
         }
@@ -58,6 +79,7 @@ pub fn gram_dataset(ds: &Dataset, cfg: &KernelCfg) -> (Dataset, Mat) {
 }
 
 /// A trained kernel SVM: support data + dual coefficients omega.
+#[derive(Clone, Debug)]
 pub struct KernelModel {
     pub train: Dataset,
     pub omega: Vec<f32>,
@@ -65,16 +87,30 @@ pub struct KernelModel {
 }
 
 impl KernelModel {
-    /// f(x_j of `test`) = sum_d omega_d k(x_d, x_j)
-    pub fn decision(&self, test: &Dataset, j: usize) -> f32 {
-        let (mut bi, mut bj) = (vec![0f32; self.train.k], vec![0f32; self.train.k]);
+    /// Scratch buffers for [`decision_with`](Self::decision_with),
+    /// sized for this model against `test_k`-wide rows.
+    pub fn scratch(&self, test_k: usize) -> (Vec<f32>, Vec<f32>) {
+        (vec![0f32; self.train.k], vec![0f32; self.train.k.max(test_k)])
+    }
+
+    /// [`decision`](Self::decision) with caller-owned scratch buffers
+    /// (from [`scratch`](Self::scratch)) — the batched scorer calls
+    /// this per row without reallocating. The f32 summation order is
+    /// identical to `decision`, so the two agree bit-for-bit.
+    pub fn decision_with(&self, test: &Dataset, j: usize, bi: &mut [f32], bj: &mut [f32]) -> f32 {
         let mut s = 0f32;
         for d in 0..self.train.n {
             if self.omega[d] != 0.0 {
-                s += self.omega[d] * kval(&self.train, d, test, j, &self.cfg, &mut bi, &mut bj);
+                s += self.omega[d] * kval(&self.train, d, test, j, &self.cfg, bi, bj);
             }
         }
         s
+    }
+
+    /// f(x_j of `test`) = sum_d omega_d k(x_d, x_j)
+    pub fn decision(&self, test: &Dataset, j: usize) -> f32 {
+        let (mut bi, mut bj) = self.scratch(test.k);
+        self.decision_with(test, j, &mut bi, &mut bj)
     }
 
     pub fn accuracy(&self, test: &Dataset) -> f64 {

@@ -1,0 +1,272 @@
+//! Serving-subsystem integration tests: model persistence round-trips
+//! (save -> load -> identical predictions) for Single, PerClass and
+//! kernel models including the awkward cases, registry hot-reload, and
+//! the TCP protocol end to end against the batched scorer.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use pemsvm::config::{KernelCfg, TaskKind, TrainConfig};
+use pemsvm::data::{synth, Dataset, Task};
+use pemsvm::linalg::Mat;
+use pemsvm::model::Weights;
+use pemsvm::serve::{self, ModelBody, ModelMeta, Registry, SavedModel, ServeOpts, Scorer};
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("pemsvm_serve_roundtrip");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+fn linear_model(task: TaskKind, body: Weights, k: usize, m: usize) -> SavedModel {
+    SavedModel::new(
+        ModelMeta { task, k, m, lambda: 0.5, options: "LIN-EM-CLS".into(), legacy: false },
+        ModelBody::Linear(body),
+    )
+}
+
+/// Scores from a one-shot scorer run.
+fn scores_of(model: &Arc<SavedModel>, ds: &Arc<Dataset>, workers: usize) -> Vec<f32> {
+    Scorer::new(workers).score_batch(model, ds).unwrap().scores
+}
+
+#[test]
+fn single_roundtrip_identical_predictions() {
+    // awkward case included: the dataset's row 0 is empty (K=0 row)
+    let ds = Arc::new(Dataset::sparse(
+        vec![0, 0, 2, 3],
+        vec![0, 2, 1],
+        vec![0.25, -1.5, 3.0],
+        vec![1.0, -1.0, 1.0],
+        4,
+        Task::Binary,
+    ));
+    let w = vec![0.1f32, -0.7, 1.0 / 3.0, 2.5e-8];
+    let model = Arc::new(linear_model(TaskKind::Cls, Weights::Single(w), 4, 1));
+    let p = tmp("single.model");
+    serve::save(&model, &p).unwrap();
+    let back = Arc::new(serve::load(&p).unwrap());
+    assert_eq!(back.meta.k, 4);
+    assert!(!back.meta.legacy);
+    assert_eq!(back.meta.options, "LIN-EM-CLS");
+    assert_eq!(scores_of(&model, &ds, 3), scores_of(&back, &ds, 3));
+    // empty row scores exactly zero
+    assert_eq!(scores_of(&back, &ds, 1)[0], 0.0);
+}
+
+#[test]
+fn perclass_roundtrip_including_empty_class_block() {
+    let ds = Arc::new(synth::mnist_like(150, 9, 4, 7));
+    let mut w = Mat::zeros(4, 9);
+    let mut g = pemsvm::rng::Pcg64::new(21);
+    for x in w.data.iter_mut() {
+        *x = g.next_f32() - 0.5;
+    }
+    // awkward case: one class block entirely zero
+    w.row_mut(2).fill(0.0);
+    let weights = Weights::PerClass(w);
+    let acc_ref = pemsvm::model::evaluate(&ds, &weights);
+    let model = Arc::new(linear_model(TaskKind::Mlt, weights, 9, 4));
+    let p = tmp("perclass.model");
+    serve::save(&model, &p).unwrap();
+    let back = Arc::new(serve::load(&p).unwrap());
+    assert_eq!((back.meta.m, back.meta.k), (4, 9));
+    let scores = scores_of(&back, &ds, 4);
+    assert_eq!(scores, scores_of(&model, &ds, 4));
+    assert_eq!(serve::metric_of(TaskKind::Mlt, &ds.labels, &scores), acc_ref);
+}
+
+#[test]
+fn zero_width_perclass_roundtrips() {
+    // degenerate shape: m classes over zero features
+    let model = linear_model(TaskKind::Mlt, Weights::PerClass(Mat::zeros(3, 0)), 0, 3);
+    let p = tmp("zero_width.model");
+    serve::save(&model, &p).unwrap();
+    let back = serve::load(&p).unwrap();
+    match &back.body {
+        ModelBody::Linear(Weights::PerClass(w)) => assert_eq!((w.rows, w.cols), (3, 0)),
+        _ => panic!("wrong body"),
+    }
+}
+
+/// Train a tiny KRN model end to end, save it, and check the loaded
+/// model reproduces `KernelModel::accuracy` exactly through the scorer
+/// (the acceptance criterion for `pemsvm predict`).
+#[test]
+fn kernel_roundtrip_reproduces_accuracy_exactly() {
+    let full = synth::news20_like(240, 40, 5);
+    let (train, test) = synth::split(&full, 4);
+    let mut cfg = TrainConfig::default().with_options("KRN-EM-CLS").unwrap();
+    cfg.lambda = 1e-2;
+    cfg.kernel = KernelCfg::Gaussian { sigma: 1.0 };
+    cfg.workers = 2;
+    cfg.max_iters = 15;
+    let out = pemsvm::coordinator::train_full(&train, None, &cfg).unwrap();
+    let saved = SavedModel::from_training(&cfg, train.k, out);
+    let p = tmp("kernel.model");
+    serve::save(&saved, &p).unwrap();
+    let back = Arc::new(serve::load(&p).unwrap());
+    let km = match &saved.body {
+        ModelBody::Kernel(km) => km,
+        _ => panic!("expected kernel body"),
+    };
+    let acc_ref = km.accuracy(&test);
+    let test = Arc::new(test);
+    let scores = scores_of(&back, &test, 4);
+    // per-row decisions are bit-identical, not merely close
+    for (j, &s) in scores.iter().enumerate() {
+        assert_eq!(s, km.decision(&test, j), "row {j}");
+    }
+    assert_eq!(serve::metric_of(TaskKind::Cls, &test.labels, &scores), acc_ref);
+    // and the scorer is deterministic across worker counts
+    assert_eq!(scores, scores_of(&back, &test, 1));
+}
+
+#[test]
+fn legacy_model_txt_still_loads() {
+    let p = tmp("legacy.model");
+    std::fs::write(&p, "# pemsvm single 3\n0.5\n-1.25\n2\n").unwrap();
+    let back = serve::load(&p).unwrap();
+    assert!(back.meta.legacy);
+    match &back.body {
+        ModelBody::Linear(Weights::Single(v)) => assert_eq!(v, &vec![0.5, -1.25, 2.0]),
+        _ => panic!("wrong body"),
+    }
+    // count mismatch now rejected for `single` too (the old loader
+    // only validated `perclass`)
+    std::fs::write(&p, "# pemsvm single 5\n0.5\n-1.25\n2\n").unwrap();
+    assert!(serve::load(&p).is_err());
+}
+
+#[test]
+fn nan_rejected_at_load_for_every_body() {
+    let p = tmp("nan_single.model");
+    std::fs::write(
+        &p,
+        concat!(
+            "pemsvm-model v1\ntask cls\nk 2\nm 1\nlambda 1\n",
+            "options LIN-EM-CLS\nweights single 2\n1.0\nNaN\nend\n"
+        ),
+    )
+    .unwrap();
+    assert!(serve::load(&p).is_err());
+    let p = tmp("nan_legacy.model");
+    std::fs::write(&p, "# pemsvm single 2\n1.0\nNaN\n").unwrap();
+    assert!(serve::load(&p).is_err());
+    let p = tmp("inf_omega.model");
+    std::fs::write(
+        &p,
+        concat!(
+            "pemsvm-model v1\ntask cls\nk 2\nm 1\nlambda 1\noptions KRN-EM-CLS\n",
+            "kernel gaussian 1\nsupport 1 2\nomega 1\ninf\n1 1:1\nend\n"
+        ),
+    )
+    .unwrap();
+    assert!(serve::load(&p).is_err());
+}
+
+#[test]
+fn registry_hot_reload_keeps_in_flight_snapshot() {
+    let reg = Registry::new();
+    let p = tmp("reload.model");
+    serve::save(&linear_model(TaskKind::Cls, Weights::Single(vec![1.0, 0.0]), 2, 1), &p).unwrap();
+    let entry = reg.load_file("m", &p).unwrap();
+    let snapshot = entry.current();
+    serve::save(&linear_model(TaskKind::Cls, Weights::Single(vec![0.0, 1.0]), 2, 1), &p).unwrap();
+    reg.load_file("m", &p).unwrap();
+    assert_eq!(entry.version(), 2);
+    let ds = Arc::new(Dataset::sparse(
+        vec![0, 1],
+        vec![0],
+        vec![2.0],
+        vec![1.0],
+        2,
+        Task::Binary,
+    ));
+    // old snapshot still scores with the old weights; fresh lookups see v2
+    assert_eq!(scores_of(&snapshot, &ds, 1), vec![2.0]);
+    assert_eq!(scores_of(&entry.current(), &ds, 1), vec![0.0]);
+}
+
+/// End-to-end TCP smoke: serve a trained model on an ephemeral port,
+/// push rows through the newline protocol, and require byte-equal
+/// agreement with the batch scorer path (what `pemsvm predict` runs).
+#[test]
+fn tcp_protocol_matches_batch_scorer() {
+    let ds = synth::alpha_like(300, 12, 2);
+    let mut cfg = TrainConfig::default().with_options("LIN-EM-CLS").unwrap();
+    cfg.workers = 2;
+    cfg.max_iters = 20;
+    let out = pemsvm::coordinator::train_full(&ds, None, &cfg).unwrap();
+    let saved = SavedModel::from_training(&cfg, ds.k, out);
+
+    let registry = Arc::new(Registry::new());
+    let entry = registry.publish("m", saved);
+
+    // the rows exactly as they will travel over the wire; the expected
+    // predictions come from the batch scorer on the same libsvm
+    // round-trip the server performs, so agreement is bit-exact even
+    // for dense-stored synthetic data
+    let mut block = String::new();
+    for d in 0..ds.n {
+        block.push('1');
+        ds.for_nonzero(d, |j, v| {
+            block.push_str(&format!(" {}:{v}", j + 1));
+        });
+        block.push('\n');
+    }
+    let rows_path = tmp("tcp_rows.svm");
+    std::fs::write(&rows_path, &block).unwrap();
+    let rows_ds = Arc::new(pemsvm::data::libsvm::load(&rows_path, Task::Binary, 2).unwrap());
+    let batch_scores = scores_of(&entry.current(), &rows_ds, 2);
+    let expected: Vec<String> = batch_scores
+        .iter()
+        .map(|&s| serve::format_prediction(TaskKind::Cls, s))
+        .collect();
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let reg = registry.clone();
+    std::thread::spawn(move || {
+        let opts = ServeOpts {
+            max_batch: 64,
+            max_wait: Duration::from_micros(500),
+            workers: 2,
+        };
+        let _ = serve::serve(listener, reg, "m".into(), opts);
+    });
+
+    let stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+
+    // a malformed row first: the connection must survive it
+    writer.write_all(b"1 notafeature\n").unwrap();
+    writer.flush().unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("error:"), "got `{line}`");
+
+    // then every dataset row as a libsvm line
+    writer.write_all(block.as_bytes()).unwrap();
+    writer.flush().unwrap();
+    let mut got = Vec::with_capacity(ds.n);
+    for _ in 0..ds.n {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        got.push(line.trim().to_string());
+    }
+    assert_eq!(got, expected);
+
+    // the stats verb reports the traffic we just pushed
+    writer.write_all(b"#stats\n").unwrap();
+    writer.flush().unwrap();
+    let mut stats = String::new();
+    reader.read_line(&mut stats).unwrap();
+    assert!(stats.starts_with("stats m:"), "got `{stats}`");
+    assert!(stats.contains(" rows=300 "), "got `{stats}`");
+}
