@@ -20,7 +20,8 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::config::{BackendKind, TrainConfig};
-use crate::data::Dataset;
+use crate::data::stream::ParsedChunk;
+use crate::data::{Dataset, Task};
 use crate::linalg::Mat;
 use crate::solver::PartialStats;
 
@@ -43,6 +44,19 @@ pub trait WorkerBackend: Send {
 
     /// Feature dimensionality of the returned statistics.
     fn stat_dim(&self) -> usize;
+
+    /// Streaming ingestion (DESIGN.md §10): append the rows of `chunk`
+    /// that fall inside this worker's shard window. Only workers built
+    /// by [`make_stream_workers`] accept chunks.
+    fn ingest(&mut self, _chunk: &ParsedChunk) -> Result<()> {
+        anyhow::bail!("this backend does not support streaming ingestion")
+    }
+
+    /// Finalize streaming ingestion (validate that the shard window is
+    /// complete). A no-op for eagerly built workers.
+    fn seal(&mut self) -> Result<()> {
+        Ok(())
+    }
 }
 
 /// The master solve (Eq. 6): `w = (lam R + Sigma)^-1 b`, or the MC
@@ -84,6 +98,39 @@ pub fn make_workers(
         }
     }
     Ok(out)
+}
+
+/// Build one *streaming* worker per shard window: each starts empty and
+/// fills via [`WorkerBackend::ingest`] as chunks arrive, so no full
+/// dataset is ever materialized. Native backend only — the XLA path
+/// uploads whole chunk literals at construction and stays eager.
+pub fn make_stream_workers(
+    cfg: &TrainConfig,
+    k: usize,
+    task: Task,
+    shards: &[Range<usize>],
+) -> Result<Vec<Box<dyn WorkerBackend>>> {
+    match cfg.backend {
+        BackendKind::Native => Ok(shards
+            .iter()
+            .enumerate()
+            .map(|(wid, r)| {
+                Box::new(native::NativeWorker::new_streaming(
+                    r.clone(),
+                    k,
+                    task,
+                    cfg.algo,
+                    cfg.eps_clamp,
+                    cfg.seed,
+                    wid as u64,
+                )) as Box<dyn WorkerBackend>
+            })
+            .collect()),
+        BackendKind::Xla => anyhow::bail!(
+            "streamed ingestion is implemented for the native backend; load eagerly for \
+             --backend xla"
+        ),
+    }
 }
 
 /// Build the master backend. `gram` supplies the KRN regularizer.

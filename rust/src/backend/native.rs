@@ -4,10 +4,11 @@
 use std::ops::Range;
 use std::sync::Arc;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::config::Algo;
-use crate::data::Dataset;
+use crate::data::stream::{ParsedChunk, ShardBuilder};
+use crate::data::{Dataset, Task};
 use crate::linalg::Mat;
 use crate::rng::{worker_stream, NormalSource, Pcg64};
 use crate::solver::local;
@@ -17,9 +18,19 @@ use crate::solver::{GammaMode, PartialStats};
 use super::{MasterBackend, StepInput, WorkerBackend};
 
 /// One worker's native compute state.
+///
+/// Built either eagerly ([`NativeWorker::new`]: a shared `Arc<Dataset>`
+/// plus this worker's row range) or empty for streaming ingestion
+/// ([`NativeWorker::new_streaming`]: a [`ShardBuilder`] accumulates the
+/// shard chunk by chunk until `seal` swaps the finished shard in).
+/// Either way the worker steps over the same rows in the same order, so
+/// the two construction paths produce bit-identical statistics.
 pub struct NativeWorker {
     ds: Arc<Dataset>,
     range: Range<usize>,
+    /// `Some` while streaming ingestion is in flight; `None` once sealed
+    /// (and always for eagerly built workers)
+    builder: Option<ShardBuilder>,
     algo: Algo,
     eps: f32,
     rng: Pcg64,
@@ -40,6 +51,31 @@ impl NativeWorker {
         NativeWorker {
             ds,
             range,
+            builder: None,
+            algo,
+            eps,
+            rng: worker_stream(seed, worker_id),
+            normals: NormalSource::new(),
+            stats: PartialStats::zeros(k),
+        }
+    }
+
+    /// An empty worker owning the global row window `window` of an
+    /// `N x k` corpus; rows arrive through `ingest` and `seal` makes the
+    /// worker steppable (DESIGN.md §10).
+    pub fn new_streaming(
+        window: Range<usize>,
+        k: usize,
+        task: Task,
+        algo: Algo,
+        eps: f32,
+        seed: u64,
+        worker_id: u64,
+    ) -> Self {
+        NativeWorker {
+            ds: Arc::new(Dataset::sparse(vec![0], Vec::new(), Vec::new(), Vec::new(), k, task)),
+            range: 0..window.len(),
+            builder: Some(ShardBuilder::new(window, k, task)),
             algo,
             eps,
             rng: worker_stream(seed, worker_id),
@@ -58,6 +94,9 @@ impl NativeWorker {
 
 impl WorkerBackend for NativeWorker {
     fn step(&mut self, input: &StepInput) -> Result<PartialStats> {
+        if self.builder.is_some() {
+            bail!("streamed worker stepped before seal");
+        }
         self.stats.reset();
         // split borrows: move stats out, run, move back
         let mut stats = std::mem::replace(&mut self.stats, PartialStats::zeros(0));
@@ -85,6 +124,22 @@ impl WorkerBackend for NativeWorker {
 
     fn stat_dim(&self) -> usize {
         self.ds.k
+    }
+
+    fn ingest(&mut self, chunk: &ParsedChunk) -> Result<()> {
+        match self.builder.as_mut() {
+            Some(b) => b.ingest(chunk),
+            None => bail!("worker is sealed; streaming ingestion is over"),
+        }
+    }
+
+    fn seal(&mut self) -> Result<()> {
+        if let Some(b) = self.builder.take() {
+            let ds = b.build()?;
+            self.range = 0..ds.n;
+            self.ds = Arc::new(ds);
+        }
+        Ok(())
     }
 }
 

@@ -1,6 +1,15 @@
 //! Hand-rolled CLI argument parsing (no `clap` in the offline registry).
 //!
 //! Grammar: `pemsvm <subcommand> [positional ...] [--key value | --key=value | --flag]`.
+//!
+//! [`Args`] only tokenizes: subcommand, positionals, and a flat
+//! `--key value` map (a flag followed by another `--flag` or by
+//! nothing parses as boolean `"true"`). Interpretation — which keys
+//! exist, their types and defaults — lives with each subcommand in
+//! `main.rs`, and training-relevant keys are forwarded to
+//! [`TrainConfig::set`](crate::config::TrainConfig::set) so the CLI,
+//! TOML config files, and programmatic use all share one
+//! string-keyed surface.
 
 use std::collections::BTreeMap;
 

@@ -43,6 +43,31 @@ pub fn parse_row(line: &str, lineno: usize) -> Result<Option<(f32, Vec<(u32, f32
     Ok(Some((label, pairs)))
 }
 
+/// Per-row label mapping shared by the eager loader and the streaming
+/// reader (`data::stream`) — one definition, so the two paths cannot
+/// drift: Binary maps {0,1}/{-1,+1} to ±1, Regression keeps values,
+/// Multiclass subtracts the 1-based-id offset `class_off` and
+/// range-checks the result.
+pub(crate) fn map_label(label: f32, task: Task, class_off: f32) -> Result<f32> {
+    Ok(match task {
+        Task::Binary => {
+            if label > 0.0 {
+                1.0
+            } else {
+                -1.0
+            }
+        }
+        Task::Regression => label,
+        Task::Multiclass(m) => {
+            let l = label - class_off;
+            if l < 0.0 || l >= m as f32 {
+                bail!("class id {l} out of range 0..{m}");
+            }
+            l
+        }
+    })
+}
+
 fn parse_block(text: &str, first_lineno: usize) -> Result<Vec<(f32, Vec<(u32, f32)>)>> {
     let mut rows = Vec::new();
     for (off, line) in text.lines().enumerate() {
@@ -103,22 +128,22 @@ pub fn load(path: &Path, task: Task, threads: usize) -> Result<Dataset> {
         }
     }
 
-    let labels = match task {
-        Task::Binary => labels.iter().map(|&l| if l > 0.0 { 1.0 } else { -1.0 }).collect(),
-        Task::Regression => labels,
-        Task::Multiclass(m) => {
-            // accept 1-based class ids
+    // accept 1-based multiclass ids: the offset follows the label minimum
+    let class_off = match task {
+        Task::Multiclass(_) => {
             let min = labels.iter().cloned().fold(f32::INFINITY, f32::min);
-            let off = if min >= 1.0 { 1.0 } else { 0.0 };
-            let out: Vec<f32> = labels.iter().map(|&l| l - off).collect();
-            for &l in &out {
-                if l < 0.0 || l >= m as f32 {
-                    bail!("class id {l} out of range 0..{m}");
-                }
+            if min >= 1.0 {
+                1.0
+            } else {
+                0.0
             }
-            out
         }
+        _ => 0.0,
     };
+    let labels = labels
+        .into_iter()
+        .map(|l| map_label(l, task, class_off))
+        .collect::<Result<Vec<f32>>>()?;
     Ok(Dataset::sparse(indptr, indices, values, labels, kmax as usize, task))
 }
 
@@ -197,6 +222,44 @@ mod tests {
         for d in 0..a.n {
             assert_eq!(a.sparse_row(d), b.sparse_row(d), "row {d}");
         }
+    }
+
+    #[test]
+    fn parse_row_skips_comments_and_blanks() {
+        assert!(parse_row("", 1).unwrap().is_none());
+        assert!(parse_row("   \t  ", 2).unwrap().is_none());
+        assert!(parse_row("# a comment", 3).unwrap().is_none());
+        assert!(parse_row("  # indented comment", 4).unwrap().is_none());
+    }
+
+    #[test]
+    fn parse_row_sorts_out_of_order_indices() {
+        let (label, pairs) = parse_row("1 7:0.5 2:1.0 5:-3.0", 1).unwrap().unwrap();
+        assert_eq!(label, 1.0);
+        // 1-based in the file, 0-based sorted in memory
+        assert_eq!(pairs, vec![(1, 1.0), (4, -3.0), (6, 0.5)]);
+    }
+
+    #[test]
+    fn parse_row_label_only_row_is_empty() {
+        let (label, pairs) = parse_row("-1", 1).unwrap().unwrap();
+        assert_eq!(label, -1.0);
+        assert!(pairs.is_empty());
+    }
+
+    #[test]
+    fn parse_row_rejects_malformed_tokens() {
+        // 0-based index
+        assert!(parse_row("1 0:3.0", 1).is_err());
+        // missing colon
+        assert!(parse_row("1 5", 1).is_err());
+        // non-numeric index / value / label
+        assert!(parse_row("1 x:1.0", 1).is_err());
+        assert!(parse_row("1 2:abc", 1).is_err());
+        assert!(parse_row("spam 2:1.0", 1).is_err());
+        // error message carries the line number
+        let err = parse_row("1 5", 41).unwrap_err();
+        assert!(format!("{err:#}").contains("line 41"), "{err:#}");
     }
 
     #[test]

@@ -1,9 +1,11 @@
-//! Datasets: dense + CSR storage, libsvm-format I/O, sharding, and the
-//! seeded synthetic generators that stand in for the paper's corpora
-//! (DESIGN.md §6 substitutions).
+//! Datasets: dense + CSR storage, libsvm-format I/O (eager and
+//! out-of-core streaming), sharding, and the seeded synthetic
+//! generators that stand in for the paper's corpora (DESIGN.md §6
+//! substitutions).
 
 pub mod libsvm;
 pub mod shard;
+pub mod stream;
 pub mod synth;
 
 pub use shard::{shard_ranges, Shard};

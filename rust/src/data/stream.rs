@@ -1,0 +1,718 @@
+//! Out-of-core libsvm ingestion (DESIGN.md §10).
+//!
+//! [`StreamReader`] walks a libsvm file in line-aligned windows of
+//! `chunk_rows` data rows. A prefetch thread reads **and parses** chunk
+//! `i + 1` while chunk `i` is consumed; the two sides meet on a
+//! rendezvous channel, so at most two chunks of parsed rows are ever
+//! resident (the double-buffering contract — [`Gauge`] tracks the
+//! high-water mark and the equivalence tests pin the `2 x chunk`
+//! bound). Row and feature counts are fixed **up front**, either by a
+//! cheap counting pass over the file or by an explicit
+//! [`StreamOpts::dims`] declaration, so shard boundaries can be
+//! computed before the first row arrives.
+//!
+//! [`ShardBuilder`] is the receiving side: one per worker, each owning
+//! a contiguous global row window. Feeding every chunk to every
+//! builder in file order reassembles exactly the shards the eager
+//! loader + [`shard_ranges`] would produce — same rows, same order,
+//! same f32 values — which is why a streamed
+//! [`Cluster::from_stream`](crate::engine::Cluster::from_stream) trains
+//! bit-identically to an eager [`Cluster::new`](crate::engine::Cluster::new)
+//! for a fixed seed (`tests/stream_equivalence.rs`).
+//!
+//! [`shard_ranges`]: super::shard_ranges
+
+use std::fs::File;
+use std::io::{BufRead, BufReader};
+use std::ops::Range;
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, SyncSender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::{libsvm, Dataset, Task};
+use crate::linalg::Mat;
+use crate::model::Weights;
+
+/// Streaming-ingestion knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct StreamOpts {
+    /// Data rows per chunk (the unit of prefetch; resident parsed rows
+    /// are bounded by `2 * chunk_rows`).
+    pub chunk_rows: usize,
+    /// Declared `(rows, features)`. When given, the counting pass is
+    /// skipped and the stream is validated against the declaration
+    /// instead (more rows, fewer rows, or a feature index `>=
+    /// features` all fail). Multiclass files are still scanned unless
+    /// [`class_off`](StreamOpts::class_off) is also declared: the
+    /// 0-based/1-based class-id offset needs the label minimum.
+    pub dims: Option<(usize, usize)>,
+    /// Known multiclass class-id offset (1.0 for 1-based files, 0.0
+    /// for 0-based). Together with `dims` this skips the counting pass
+    /// for MLT too — callers re-streaming a file they already scanned
+    /// (metric passes, sweeps) carry it from
+    /// [`StreamReader::class_off`]. Ignored for CLS/SVR.
+    pub class_off: Option<f32>,
+}
+
+impl StreamOpts {
+    /// Options with nothing declared: one counting pass fixes the dims.
+    pub fn rows(chunk_rows: usize) -> Self {
+        StreamOpts { chunk_rows, dims: None, class_off: None }
+    }
+}
+
+/// Resident-row gauge shared by every [`ParsedChunk`] of one stream:
+/// rows are counted in as they are parsed and counted out when the
+/// chunk drops. `peak()` is the bench's peak-RSS proxy and the
+/// equivalence test's `<= 2 x chunk` bound.
+#[derive(Debug, Default)]
+pub struct Gauge {
+    cur: AtomicUsize,
+    peak: AtomicUsize,
+}
+
+impl Gauge {
+    fn add(&self, n: usize) {
+        let now = self.cur.fetch_add(n, Ordering::SeqCst) + n;
+        self.peak.fetch_max(now, Ordering::SeqCst);
+    }
+
+    fn sub(&self, n: usize) {
+        self.cur.fetch_sub(n, Ordering::SeqCst);
+    }
+
+    /// Parsed rows currently resident.
+    pub fn resident(&self) -> usize {
+        self.cur.load(Ordering::SeqCst)
+    }
+
+    /// High-water mark of resident parsed rows.
+    pub fn peak(&self) -> usize {
+        self.peak.load(Ordering::SeqCst)
+    }
+}
+
+/// One parsed window of the file: a CSR block of `len()` rows starting
+/// at global row `start()`, labels already task-mapped (the same
+/// mapping `libsvm::load` applies). Dropping the chunk releases its
+/// rows from the stream's [`Gauge`].
+pub struct ParsedChunk {
+    start: usize,
+    labels: Vec<f32>,
+    indptr: Vec<usize>,
+    indices: Vec<u32>,
+    values: Vec<f32>,
+    gauge: Arc<Gauge>,
+}
+
+impl ParsedChunk {
+    fn new(start: usize, gauge: Arc<Gauge>) -> Self {
+        ParsedChunk {
+            start,
+            labels: Vec::new(),
+            indptr: vec![0],
+            indices: Vec::new(),
+            values: Vec::new(),
+            gauge,
+        }
+    }
+
+    fn push_row(&mut self, label: f32, pairs: &[(u32, f32)]) {
+        self.labels.push(label);
+        for &(i, v) in pairs {
+            self.indices.push(i);
+            self.values.push(v);
+        }
+        self.indptr.push(self.indices.len());
+        self.gauge.add(1);
+    }
+
+    /// Global row index of the first row in this chunk.
+    pub fn start(&self) -> usize {
+        self.start
+    }
+
+    /// Number of data rows in this chunk.
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    /// Label of chunk-local row `r` (already task-mapped).
+    pub fn label(&self, r: usize) -> f32 {
+        self.labels[r]
+    }
+
+    /// `x_r . w` over the chunk-local CSR row `r` — the same
+    /// accumulation order as [`Dataset::dot_row`]'s sparse arm, so
+    /// streamed scores match eager ones bit for bit.
+    pub fn dot_row(&self, r: usize, w: &[f32]) -> f32 {
+        let mut s = 0.0;
+        for p in self.indptr[r]..self.indptr[r + 1] {
+            s += self.values[p] * w[self.indices[p] as usize];
+        }
+        s
+    }
+
+    /// `scores[c] = w_c . x_r`, mirroring [`crate::model::class_scores`]
+    /// nonzero by nonzero (bit-identical scores).
+    pub fn class_scores(&self, r: usize, w: &Mat, out: &mut [f32]) {
+        out.fill(0.0);
+        for p in self.indptr[r]..self.indptr[r + 1] {
+            let (j, v) = (self.indices[p] as usize, self.values[p]);
+            for (c, o) in out.iter_mut().enumerate() {
+                *o += v * w[(c, j)];
+            }
+        }
+    }
+}
+
+impl Drop for ParsedChunk {
+    fn drop(&mut self) {
+        self.gauge.sub(self.labels.len());
+    }
+}
+
+/// Accumulates one worker's shard from the chunk stream: the rows of
+/// each arriving chunk that fall inside `window` are appended in file
+/// order. [`build`](ShardBuilder::build) seals the shard into a
+/// [`Dataset`] once every window row has arrived.
+pub struct ShardBuilder {
+    window: Range<usize>,
+    k: usize,
+    task: Task,
+    labels: Vec<f32>,
+    indptr: Vec<usize>,
+    indices: Vec<u32>,
+    values: Vec<f32>,
+}
+
+impl ShardBuilder {
+    /// A builder for the global row window `window` of an `N x k`
+    /// corpus.
+    pub fn new(window: Range<usize>, k: usize, task: Task) -> Self {
+        ShardBuilder {
+            window,
+            k,
+            task,
+            labels: Vec::new(),
+            indptr: vec![0],
+            indices: Vec::new(),
+            values: Vec::new(),
+        }
+    }
+
+    /// Rows ingested so far.
+    pub fn rows(&self) -> usize {
+        self.labels.len()
+    }
+
+    /// Append the intersection of `chunk` with this builder's window.
+    /// Chunks must arrive in file order (the reader emits them so).
+    pub fn ingest(&mut self, chunk: &ParsedChunk) -> Result<()> {
+        let lo = self.window.start.max(chunk.start);
+        let hi = self.window.end.min(chunk.start + chunk.len());
+        if lo >= hi {
+            return Ok(());
+        }
+        let expected = self.window.start + self.labels.len();
+        if lo != expected {
+            bail!(
+                "stream chunk out of order: shard {:?} expected global row {expected}, \
+                 chunk covers {}..{}",
+                self.window,
+                chunk.start,
+                chunk.start + chunk.len()
+            );
+        }
+        for r in (lo - chunk.start)..(hi - chunk.start) {
+            self.labels.push(chunk.labels[r]);
+            let (a, b) = (chunk.indptr[r], chunk.indptr[r + 1]);
+            self.indices.extend_from_slice(&chunk.indices[a..b]);
+            self.values.extend_from_slice(&chunk.values[a..b]);
+            self.indptr.push(self.indices.len());
+        }
+        Ok(())
+    }
+
+    /// Seal the shard. Fails if any window row never arrived.
+    pub fn build(self) -> Result<Dataset> {
+        if self.labels.len() != self.window.len() {
+            bail!(
+                "shard {:?} incomplete: ingested {} of {} rows",
+                self.window,
+                self.labels.len(),
+                self.window.len()
+            );
+        }
+        Ok(Dataset::sparse(self.indptr, self.indices, self.values, self.labels, self.k, self.task))
+    }
+}
+
+/// Dimensions discovered by the counting pass.
+struct ScanDims {
+    rows: usize,
+    k: usize,
+    /// 1.0 when a multiclass file uses 1-based class ids (same
+    /// detection rule as `libsvm::load`), else 0.0.
+    class_off: f32,
+}
+
+/// Cheap first pass: count data rows, track the max feature index and
+/// the label minimum. Parses index substrings only — no values, no
+/// per-row allocation.
+fn scan_dims(path: &Path, task: Task) -> Result<ScanDims> {
+    let file = File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut rd = BufReader::with_capacity(1 << 20, file);
+    let mut line = String::new();
+    let (mut rows, mut kmax) = (0usize, 0u32);
+    let mut min_label = f32::INFINITY;
+    let mut lineno = 0usize;
+    loop {
+        line.clear();
+        if rd.read_line(&mut line)? == 0 {
+            break;
+        }
+        lineno += 1;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') {
+            continue;
+        }
+        let mut it = t.split_ascii_whitespace();
+        let label: f32 = it
+            .next()
+            .unwrap()
+            .parse()
+            .with_context(|| format!("line {lineno}: bad label"))?;
+        min_label = min_label.min(label);
+        for tok in it {
+            let Some((i, _)) = tok.split_once(':') else {
+                bail!("line {lineno}: token `{tok}` is not idx:val");
+            };
+            let i: u32 = i.parse().with_context(|| format!("line {lineno}: bad index"))?;
+            if i == 0 {
+                bail!("line {lineno}: libsvm indices are 1-based, got 0");
+            }
+            kmax = kmax.max(i);
+        }
+        rows += 1;
+    }
+    let class_off = match task {
+        Task::Multiclass(_) if min_label >= 1.0 => 1.0,
+        _ => 0.0,
+    };
+    Ok(ScanDims { rows, k: kmax as usize, class_off })
+}
+
+/// Chunked, double-buffered libsvm reader. Iterating yields
+/// [`ParsedChunk`]s in file order; the prefetch thread keeps exactly one
+/// chunk ahead of the consumer.
+pub struct StreamReader {
+    rx: Option<Receiver<Result<ParsedChunk>>>,
+    handle: Option<JoinHandle<()>>,
+    n: usize,
+    k: usize,
+    task: Task,
+    class_off: f32,
+    chunk_rows: usize,
+    gauge: Arc<Gauge>,
+    done: bool,
+}
+
+impl StreamReader {
+    /// Fix `(n, k)` (counting pass or declared dims), then spawn the
+    /// prefetch thread. Errors in the file surface through the chunk
+    /// iterator as they are reached.
+    pub fn open(path: &Path, task: Task, opts: &StreamOpts) -> Result<StreamReader> {
+        if opts.chunk_rows == 0 {
+            bail!("stream chunk size must be at least 1 row");
+        }
+        let (n, k, off) = match (opts.dims, opts.class_off, task) {
+            (Some((n, k)), _, Task::Binary | Task::Regression) => (n, k, 0.0f32),
+            (Some((n, k)), Some(off), Task::Multiclass(_)) => (n, k, off),
+            (dims, _, _) => {
+                // without a declared offset, multiclass must scan (the
+                // class-id offset needs the label minimum); declared
+                // dims then become a cross-check
+                let scan = scan_dims(path, task)?;
+                if let Some((dn, dk)) = dims {
+                    if dn != scan.rows {
+                        bail!("--dims declares {dn} rows but the file has {}", scan.rows);
+                    }
+                    if dk < scan.k {
+                        bail!("--dims declares {dk} features but the file uses index {}", scan.k);
+                    }
+                    (dn, dk, scan.class_off)
+                } else {
+                    (scan.rows, scan.k, scan.class_off)
+                }
+            }
+        };
+        let file = File::open(path).with_context(|| format!("open {}", path.display()))?;
+        let gauge = Arc::new(Gauge::default());
+        // rendezvous channel: the producer finishes chunk i+1 and then
+        // blocks until the consumer asks for it, so live parsed rows
+        // never exceed (chunk being consumed) + (chunk handed over)
+        let (tx, rx) = mpsc::sync_channel::<Result<ParsedChunk>>(0);
+        let chunk_rows = opts.chunk_rows;
+        let g = gauge.clone();
+        let handle =
+            std::thread::spawn(move || producer(file, task, n, k, off, chunk_rows, g, tx));
+        Ok(StreamReader {
+            rx: Some(rx),
+            handle: Some(handle),
+            n,
+            k,
+            task,
+            class_off: off,
+            chunk_rows,
+            gauge,
+            done: false,
+        })
+    }
+
+    /// Total data rows (fixed before streaming starts).
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Feature count (max index seen by the scan, or the declared K).
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn task(&self) -> Task {
+        self.task
+    }
+
+    /// Multiclass class-id offset in effect (1.0 for 1-based files).
+    /// Carry it into [`StreamOpts::class_off`] when re-streaming the
+    /// same file, so the second pass skips the counting scan.
+    pub fn class_off(&self) -> f32 {
+        self.class_off
+    }
+
+    pub fn chunk_rows(&self) -> usize {
+        self.chunk_rows
+    }
+
+    /// The stream's resident-row gauge (survives the reader: clone it
+    /// before handing the reader to `Cluster::from_stream`).
+    pub fn gauge(&self) -> Arc<Gauge> {
+        self.gauge.clone()
+    }
+}
+
+impl Iterator for StreamReader {
+    type Item = Result<ParsedChunk>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.done {
+            return None;
+        }
+        match self.rx.as_ref()?.recv() {
+            Ok(Ok(chunk)) => Some(Ok(chunk)),
+            Ok(Err(e)) => {
+                self.done = true;
+                Some(Err(e))
+            }
+            // producer dropped its sender: end of stream
+            Err(_) => {
+                self.done = true;
+                None
+            }
+        }
+    }
+}
+
+impl Drop for StreamReader {
+    fn drop(&mut self) {
+        // unblock a producer parked on send, then reap the thread
+        drop(self.rx.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The prefetch thread: read + parse the next window while the consumer
+/// works on the previous one. All errors are sent down the channel.
+#[allow(clippy::too_many_arguments)]
+fn producer(
+    file: File,
+    task: Task,
+    n: usize,
+    k: usize,
+    off: f32,
+    chunk_rows: usize,
+    gauge: Arc<Gauge>,
+    tx: SyncSender<Result<ParsedChunk>>,
+) {
+    let mut rd = BufReader::with_capacity(1 << 20, file);
+    let mut line = String::new();
+    let mut lineno = 0usize;
+    let mut start = 0usize;
+    loop {
+        let mut chunk = ParsedChunk::new(start, gauge.clone());
+        let mut eof = false;
+        while chunk.len() < chunk_rows {
+            line.clear();
+            match rd.read_line(&mut line) {
+                Ok(0) => {
+                    eof = true;
+                    break;
+                }
+                Ok(_) => {}
+                Err(e) => {
+                    let _ = tx.send(Err(e.into()));
+                    return;
+                }
+            }
+            lineno += 1;
+            let parsed = match libsvm::parse_row(&line, lineno) {
+                Ok(p) => p,
+                Err(e) => {
+                    let _ = tx.send(Err(e));
+                    return;
+                }
+            };
+            let Some((label, pairs)) = parsed else { continue };
+            if start + chunk.len() >= n {
+                let _ = tx.send(Err(anyhow!(
+                    "line {lineno}: more than the declared {n} data rows"
+                )));
+                return;
+            }
+            // parse_row sorts pairs, so the last index is the max
+            if let Some(&(i, _)) = pairs.last() {
+                if i as usize >= k {
+                    let _ = tx.send(Err(anyhow!(
+                        "line {lineno}: feature index {} exceeds the declared K={k}",
+                        i + 1
+                    )));
+                    return;
+                }
+            }
+            let label = match libsvm::map_label(label, task, off) {
+                Ok(l) => l,
+                Err(e) => {
+                    let _ = tx.send(Err(e.context(format!("line {lineno}"))));
+                    return;
+                }
+            };
+            chunk.push_row(label, &pairs);
+        }
+        let end = start + chunk.len();
+        if !chunk.is_empty() && tx.send(Ok(chunk)).is_err() {
+            return;
+        }
+        if eof {
+            if end != n {
+                let _ = tx.send(Err(anyhow!("file has {end} data rows, expected {n}")));
+            }
+            return;
+        }
+        start = end;
+    }
+}
+
+/// Out-of-core evaluation: stream the file a second time and score it
+/// chunk by chunk — accuracy for CLS/MLT, RMSE for SVR. Accumulation
+/// runs in file order with one f64 accumulator, so the result equals
+/// [`crate::model::evaluate`] on the eagerly loaded dataset.
+pub fn evaluate_streamed(path: &Path, task: Task, opts: &StreamOpts, w: &Weights) -> Result<f64> {
+    let reader = StreamReader::open(path, task, opts)?;
+    let task = reader.task();
+    let mut acc = 0f64; // correct count (CLS/MLT) or squared-residual sum (SVR)
+    let mut rows = 0usize;
+    for chunk in reader {
+        let chunk = chunk?;
+        rows += chunk.len();
+        match (task, w) {
+            (Task::Binary, Weights::Single(wv)) => {
+                for r in 0..chunk.len() {
+                    if chunk.label(r) * chunk.dot_row(r, wv) > 0.0 {
+                        acc += 1.0;
+                    }
+                }
+            }
+            (Task::Regression, Weights::Single(wv)) => {
+                for r in 0..chunk.len() {
+                    let d = (chunk.label(r) - chunk.dot_row(r, wv)) as f64;
+                    acc += d * d;
+                }
+            }
+            (Task::Multiclass(_), Weights::PerClass(m)) => {
+                let mut scores = vec![0f32; m.rows];
+                for r in 0..chunk.len() {
+                    chunk.class_scores(r, m, &mut scores);
+                    let pred = scores
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.total_cmp(b.1))
+                        .map(|(c, _)| c)
+                        .unwrap();
+                    if pred == chunk.label(r) as usize {
+                        acc += 1.0;
+                    }
+                }
+            }
+            _ => bail!("weights/task mismatch"),
+        }
+    }
+    Ok(match task {
+        Task::Regression => (acc / rows.max(1) as f64).sqrt(),
+        _ => acc / rows.max(1) as f64,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{shard_ranges, synth};
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("pemsvm_stream_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn scan_counts_rows_and_features() {
+        let p = tmpfile("scan.svm");
+        std::fs::write(&p, "# header\n1 3:1.5\n\n-1 1:2.0 7:0.5\n1\n").unwrap();
+        let s = scan_dims(&p, Task::Binary).unwrap();
+        assert_eq!(s.rows, 3);
+        assert_eq!(s.k, 7);
+        assert_eq!(s.class_off, 0.0);
+    }
+
+    #[test]
+    fn chunks_cover_file_in_order() {
+        let p = tmpfile("chunks.svm");
+        let ds = synth::dna_like(100, 50, 3);
+        libsvm::save(&ds, &p).unwrap();
+        let opts = StreamOpts::rows(7);
+        let reader = StreamReader::open(&p, Task::Binary, &opts).unwrap();
+        assert_eq!(reader.n(), 100);
+        let mut next = 0usize;
+        let mut rows = 0usize;
+        for chunk in reader {
+            let c = chunk.unwrap();
+            assert_eq!(c.start(), next);
+            assert!(c.len() <= 7);
+            next = c.start() + c.len();
+            rows += c.len();
+        }
+        assert_eq!(rows, 100);
+    }
+
+    #[test]
+    fn resident_rows_bounded_by_two_chunks() {
+        let p = tmpfile("bound.svm");
+        let ds = synth::dna_like(400, 40, 5);
+        libsvm::save(&ds, &p).unwrap();
+        let opts = StreamOpts::rows(32);
+        let reader = StreamReader::open(&p, Task::Binary, &opts).unwrap();
+        let gauge = reader.gauge();
+        for chunk in reader {
+            chunk.unwrap();
+        }
+        assert!(gauge.peak() <= 64, "peak {} > 2 x chunk", gauge.peak());
+        assert_eq!(gauge.resident(), 0);
+    }
+
+    #[test]
+    fn shard_builders_reassemble_the_eager_shards() {
+        let p = tmpfile("shards.svm");
+        let ds = synth::dna_like(91, 30, 9);
+        libsvm::save(&ds, &p).unwrap();
+        let eager = libsvm::load(&p, Task::Binary, 3).unwrap();
+
+        let opts = StreamOpts::rows(8);
+        let reader = StreamReader::open(&p, Task::Binary, &opts).unwrap();
+        let k = reader.k();
+        assert_eq!(k, eager.k);
+        let mut builders: Vec<ShardBuilder> = shard_ranges(91, 4)
+            .into_iter()
+            .map(|s| ShardBuilder::new(s.range, k, Task::Binary))
+            .collect();
+        for chunk in reader {
+            let c = chunk.unwrap();
+            for b in builders.iter_mut() {
+                b.ingest(&c).unwrap();
+            }
+        }
+        for (shard, b) in shard_ranges(91, 4).into_iter().zip(builders) {
+            let got = b.build().unwrap();
+            assert_eq!(got.n, shard.range.len());
+            for (local, global) in shard.range.enumerate() {
+                assert_eq!(got.labels[local], eager.labels[global]);
+                assert_eq!(got.sparse_row(local), eager.sparse_row(global));
+            }
+        }
+    }
+
+    #[test]
+    fn dims_declaration_is_validated() {
+        let p = tmpfile("dims.svm");
+        std::fs::write(&p, "1 2:1.0\n-1 5:1.0\n").unwrap();
+        // too few declared rows: third row never comes, stream errors
+        let opts = StreamOpts { chunk_rows: 4, dims: Some((3, 5)), class_off: None };
+        let reader = StreamReader::open(&p, Task::Binary, &opts).unwrap();
+        assert!(reader.map(|c| c.map(|_| ())).collect::<Result<Vec<_>>>().is_err());
+        // feature index beyond declared K
+        let opts = StreamOpts { chunk_rows: 4, dims: Some((2, 4)), class_off: None };
+        let reader = StreamReader::open(&p, Task::Binary, &opts).unwrap();
+        assert!(reader.map(|c| c.map(|_| ())).collect::<Result<Vec<_>>>().is_err());
+        // exact declaration passes
+        let opts = StreamOpts { chunk_rows: 4, dims: Some((2, 5)), class_off: None };
+        let reader = StreamReader::open(&p, Task::Binary, &opts).unwrap();
+        assert!(reader.map(|c| c.map(|_| ())).collect::<Result<Vec<_>>>().is_ok());
+    }
+
+    #[test]
+    fn multiclass_one_based_matches_eager() {
+        let p = tmpfile("mc.svm");
+        std::fs::write(&p, "1 1:1\n2 1:1\n3 1:1\n").unwrap();
+        let eager = libsvm::load(&p, Task::Multiclass(3), 1).unwrap();
+        let opts = StreamOpts::rows(2);
+        let reader = StreamReader::open(&p, Task::Multiclass(3), &opts).unwrap();
+        assert_eq!(reader.class_off(), 1.0);
+        let mut labels = Vec::new();
+        for chunk in reader {
+            let c = chunk.unwrap();
+            labels.extend_from_slice(&c.labels);
+        }
+        assert_eq!(labels, eager.labels);
+
+        // declared dims + offset skip the scan entirely and must agree
+        let opts = StreamOpts { chunk_rows: 2, dims: Some((3, 1)), class_off: Some(1.0) };
+        let reader = StreamReader::open(&p, Task::Multiclass(3), &opts).unwrap();
+        let mut declared = Vec::new();
+        for chunk in reader {
+            declared.extend_from_slice(&chunk.unwrap().labels);
+        }
+        assert_eq!(declared, eager.labels);
+    }
+
+    #[test]
+    fn evaluate_streamed_matches_eager_evaluate() {
+        let p = tmpfile("eval.svm");
+        let ds = synth::dna_like(200, 40, 1);
+        libsvm::save(&ds, &p).unwrap();
+        let w = Weights::Single((0..40).map(|j| (j as f32 * 0.37).sin()).collect());
+        let eager = libsvm::load(&p, Task::Binary, 2).unwrap();
+        let want = crate::model::evaluate(&eager, &w);
+        let opts = StreamOpts::rows(33);
+        let got = evaluate_streamed(&p, Task::Binary, &opts, &w).unwrap();
+        assert_eq!(got, want);
+    }
+}

@@ -171,6 +171,42 @@ pub fn news20_like(n: usize, k: usize, seed: u64) -> Dataset {
     Dataset::sparse(indptr, indices, values, labels, k, Task::Binary)
 }
 
+/// Stream a seeded sparse binary corpus straight to `path` in libsvm
+/// format, row by row — the whole corpus never exists in memory, which
+/// is what lets `benches/ingest.rs` generate a file larger than any
+/// ingestion chunk without cheating on its own memory bound.
+/// Deterministic in `(n, k, seed)`; ~20 nonzeros per row with
+/// class-separated values so short training runs are meaningful.
+pub fn write_libsvm_streaming(
+    path: &std::path::Path,
+    n: usize,
+    k: usize,
+    seed: u64,
+) -> anyhow::Result<()> {
+    use std::io::Write;
+    let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+    let mut g = Pcg64::new_stream(seed, 0x57e3);
+    let nnz = 20.min(k.max(1));
+    let mut scratch: Vec<u32> = Vec::with_capacity(nnz);
+    for _ in 0..n {
+        let y: i32 = if g.next_f64() < 0.5 { -1 } else { 1 };
+        write!(w, "{y}")?;
+        scratch.clear();
+        for _ in 0..nnz {
+            scratch.push(g.next_below(k as u64) as u32);
+        }
+        scratch.sort_unstable();
+        scratch.dedup();
+        for &j in &scratch {
+            let v = if y > 0 { 0.5 + g.next_f32() } else { -0.5 - g.next_f32() };
+            write!(w, " {}:{v:.3}", j + 1)?;
+        }
+        writeln!(w)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
 /// Deterministic train/test split: every `holdout`-th row goes to test.
 /// Storage kind (dense/CSR) is preserved.
 pub fn split(ds: &Dataset, holdout: usize) -> (Dataset, Dataset) {
@@ -272,6 +308,21 @@ mod tests {
             seen[l as usize] = true;
         }
         assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn write_libsvm_streaming_is_deterministic_and_loadable() {
+        let dir = std::env::temp_dir().join("pemsvm_synth_stream");
+        std::fs::create_dir_all(&dir).unwrap();
+        let (p1, p2) = (dir.join("a.svm"), dir.join("b.svm"));
+        write_libsvm_streaming(&p1, 50, 30, 4).unwrap();
+        write_libsvm_streaming(&p2, 50, 30, 4).unwrap();
+        assert_eq!(std::fs::read(&p1).unwrap(), std::fs::read(&p2).unwrap());
+        let ds = super::super::libsvm::load(&p1, Task::Binary, 2).unwrap();
+        assert_eq!(ds.n, 50);
+        assert!(ds.k <= 30);
+        assert!(ds.is_sparse());
+        assert!(ds.labels.iter().all(|&y| y == 1.0 || y == -1.0));
     }
 
     #[test]

@@ -14,7 +14,8 @@
 //!
 //! Three pieces (see DESIGN.md §2):
 //!
-//! * [`pool::Pool`] — the worker runtime behind a [`Topology`]: real
+//! * [`pool::Pool`] — the worker runtime behind a
+//!   [`Topology`](crate::config::Topology): real
 //!   threads or the sequential cluster cost model, plus the in-pool
 //!   tree reduce (pair merges on worker threads).
 //! * [`driver::IterDriver`] — per-task iteration logic:
@@ -38,6 +39,7 @@ pub use pool::Pool;
 
 use crate::backend::{self, MasterBackend, StepInput};
 use crate::config::{Algo, ModelKind, TaskKind, TrainConfig};
+use crate::data::stream::StreamReader;
 use crate::data::{shard_ranges, Dataset, Task};
 use crate::linalg::Mat;
 use crate::metrics::{Metrics, Phase};
@@ -177,10 +179,13 @@ impl StopRule {
 /// [`run_session`](Cluster::run_session) reuses all of it.
 pub struct Cluster {
     cfg: TrainConfig,
-    ds: Arc<Dataset>,
+    /// dataset shape; the rows themselves live only in the workers'
+    /// shards (which is what lets `from_stream` ingest out-of-core)
+    n: usize,
+    k: usize,
     gram: Option<Arc<Mat>>,
     pool: Pool,
-    /// statistics width: `ds.k`, or the padded width on the XLA backend
+    /// statistics width: `k`, or the padded width on the XLA backend
     dim: usize,
     m_classes: usize,
     sessions: usize,
@@ -220,8 +225,61 @@ impl Cluster {
         };
         Ok(Cluster {
             cfg: cfg.clone(),
-            ds: ds_arc,
+            n: ds.n,
+            k: ds.k,
             gram,
+            pool,
+            dim,
+            m_classes,
+            sessions: 0,
+            last: None,
+        })
+    }
+
+    /// Build a cluster by **streaming** the corpus through a
+    /// [`StreamReader`] instead of pinning a materialized dataset
+    /// (DESIGN.md §10): shard windows are computed from the reader's
+    /// fixed row count, each arriving chunk is broadcast to the pool and
+    /// appended into the owning workers' shard buffers (the append runs
+    /// on the worker threads, overlapping the prefetch thread's
+    /// read+parse of the next chunk), and at end of stream every shard
+    /// is validated and sealed. The resulting cluster holds exactly the
+    /// shards [`Cluster::new`] would have built from the eager loader —
+    /// same rows, same order, same f32 values — so training trajectories
+    /// are bit-identical for a fixed seed (`tests/stream_equivalence.rs`).
+    pub fn from_stream(reader: StreamReader, cfg: &TrainConfig) -> Result<Cluster> {
+        let task = reader.task();
+        match (cfg.task, task) {
+            (TaskKind::Cls, Task::Binary)
+            | (TaskKind::Svr, Task::Regression)
+            | (TaskKind::Mlt, Task::Multiclass(_)) => {}
+            (t, d) => bail!("config task {t:?} does not match stream task {d:?}"),
+        }
+        if cfg.model == ModelKind::Kernel {
+            bail!(
+                "streamed construction supports linear models; KRN materializes the Gram \
+                 dataset (use Cluster::with_gram on the eager loader)"
+            );
+        }
+        let p = cfg.workers.max(1);
+        let (n, k) = (reader.n(), reader.k());
+        let shards: Vec<_> = shard_ranges(n, p).into_iter().map(|s| s.range).collect();
+        let workers = backend::make_stream_workers(cfg, k, task, &shards)?;
+        let dim = workers.iter().map(|w| w.stat_dim()).max().unwrap_or(k);
+        let mut pool = Pool::spawn(workers, cfg.topology);
+        for chunk in reader {
+            pool.ingest_all(chunk?)?;
+        }
+        pool.seal_all()?;
+        let m_classes = match task {
+            Task::Multiclass(m) => m,
+            _ => 1,
+        };
+        Ok(Cluster {
+            cfg: cfg.clone(),
+            n,
+            k,
+            gram: None,
             pool,
             dim,
             m_classes,
@@ -326,7 +384,7 @@ impl Cluster {
         let mut avg: Option<Vec<f32>> = None;
         let mut avg_count = 0usize;
 
-        let n = self.ds.n;
+        let n = self.n;
         let mut stop = StopRule::new(cfg, n);
         for iter in 0..cfg.max_iters {
             let mut cx = EngineCtx {
@@ -360,7 +418,7 @@ impl Cluster {
             }
 
             // held-out metric for the history (Figure 6)
-            let k = self.ds.k;
+            let k = self.k;
             let test_metric = metrics.time(Phase::Other, || {
                 test.filter(|_| cfg.model == ModelKind::Linear).map(|te| {
                     let weights = drv.snapshot(k, avg.as_deref());
@@ -381,7 +439,7 @@ impl Cluster {
             }
         }
 
-        let weights = drv.snapshot(self.ds.k, avg.as_deref());
+        let weights = drv.snapshot(self.k, avg.as_deref());
         let objective = history.last().map(|h| h.objective).unwrap_or(f64::INFINITY);
         let iterations = history.len();
         metrics.sessions = 1;

@@ -25,6 +25,7 @@ use anyhow::{anyhow, Context, Result};
 use crate::backend::{StepInput, WorkerBackend};
 use crate::config::{ReduceKind, Topology};
 use crate::coordinator::reduce;
+use crate::data::stream::ParsedChunk;
 use crate::metrics::{Metrics, Phase};
 use crate::solver::PartialStats;
 
@@ -36,12 +37,20 @@ enum Cmd {
     Step(Arc<StepInput>),
     /// Merge `src` into the partial at tree slot `.0` and hand it back.
     Merge(usize, Box<PartialStats>, Box<PartialStats>),
+    /// Streaming ingestion (DESIGN.md §10): every worker appends its
+    /// slice of the shared parsed chunk to its shard buffer. Like
+    /// `Step`, the `Arc` is the broadcast — the chunk's memory is
+    /// released once the last worker drops its share.
+    Ingest(Arc<ParsedChunk>),
+    /// End of the chunk stream: each worker validates + seals its shard.
+    Seal,
     Stop,
 }
 
 enum Reply {
     Stepped { wid: usize, stats: Result<PartialStats>, step_time: Duration },
     Merged { slot: usize, stats: Box<PartialStats> },
+    Ingested { wid: usize, res: Result<()> },
 }
 
 enum Mode {
@@ -99,6 +108,22 @@ impl Pool {
                                 Cmd::Merge(slot, mut dst, src) => {
                                     dst.merge(&src);
                                     if res_tx.send(Reply::Merged { slot, stats: dst }).is_err() {
+                                        break;
+                                    }
+                                }
+                                Cmd::Ingest(chunk) => {
+                                    let res = wk.ingest(&chunk);
+                                    // release our share before replying so
+                                    // the chunk frees as soon as the last
+                                    // worker is done with it
+                                    drop(chunk);
+                                    if res_tx.send(Reply::Ingested { wid, res }).is_err() {
+                                        break;
+                                    }
+                                }
+                                Cmd::Seal => {
+                                    let res = wk.seal();
+                                    if res_tx.send(Reply::Ingested { wid, res }).is_err() {
                                         break;
                                     }
                                 }
@@ -172,9 +197,7 @@ impl Pool {
                                 }
                             }
                         },
-                        Reply::Merged { .. } => {
-                            return Err(anyhow!("protocol error: merge reply during step"))
-                        }
+                        _ => return Err(anyhow!("protocol error: unexpected reply during step")),
                     }
                 }
                 if let Some(e) = first_err {
@@ -182,6 +205,52 @@ impl Pool {
                 }
                 metrics.add(Phase::LocalStats, max_step);
                 Ok(slots.into_iter().map(Option::unwrap).collect())
+            }
+        }
+    }
+
+    /// Broadcast one parsed chunk to every worker: each appends its
+    /// slice to its shard buffer (DESIGN.md §10). In the threaded
+    /// topology the append runs on the worker threads, overlapping with
+    /// the stream reader's parse of the next chunk; waiting for all P
+    /// replies before the next chunk keeps per-worker ingestion in file
+    /// order. All replies are consumed even on error (a queued reply
+    /// would otherwise leak into the next command round).
+    pub fn ingest_all(&mut self, chunk: ParsedChunk) -> Result<()> {
+        match &mut self.mode {
+            Mode::Simulate { workers } => {
+                for wk in workers.iter_mut() {
+                    wk.ingest(&chunk)?;
+                }
+                Ok(())
+            }
+            Mode::Threads { cmd_txs, res_rx, .. } => {
+                let chunk = Arc::new(chunk);
+                for tx in cmd_txs.iter() {
+                    tx.send(Cmd::Ingest(chunk.clone()))
+                        .map_err(|_| anyhow!("worker hung up during ingest"))?;
+                }
+                drop(chunk);
+                collect_ingest_replies(cmd_txs.len(), res_rx, "ingest")
+            }
+        }
+    }
+
+    /// End of stream: every worker validates and seals its shard, making
+    /// the pool steppable.
+    pub fn seal_all(&mut self) -> Result<()> {
+        match &mut self.mode {
+            Mode::Simulate { workers } => {
+                for wk in workers.iter_mut() {
+                    wk.seal()?;
+                }
+                Ok(())
+            }
+            Mode::Threads { cmd_txs, res_rx, .. } => {
+                for tx in cmd_txs.iter() {
+                    tx.send(Cmd::Seal).map_err(|_| anyhow!("worker hung up during seal"))?;
+                }
+                collect_ingest_replies(cmd_txs.len(), res_rx, "seal")
             }
         }
     }
@@ -222,6 +291,28 @@ impl Drop for Pool {
     }
 }
 
+/// Collect the P `Ingested` replies of one ingest/seal round,
+/// propagating the first worker error after draining all replies.
+fn collect_ingest_replies(p: usize, res_rx: &Receiver<Reply>, what: &str) -> Result<()> {
+    let mut first_err: Option<anyhow::Error> = None;
+    for _ in 0..p {
+        match res_rx.recv().with_context(|| format!("worker died during {what}"))? {
+            Reply::Ingested { wid, res } => {
+                if let Err(e) = res {
+                    if first_err.is_none() {
+                        first_err = Some(e.context(format!("worker {wid} {what}")));
+                    }
+                }
+            }
+            _ => return Err(anyhow!("protocol error: unexpected reply during {what}")),
+        }
+    }
+    match first_err {
+        Some(e) => Err(e),
+        None => Ok(()),
+    }
+}
+
 /// Binary-tree reduce whose pair merges run on the pool's worker
 /// threads: each round's merges are dispatched round-robin and collected
 /// before the stride doubles (the merges of one round overlap, matching
@@ -253,9 +344,7 @@ fn in_pool_tree(
         for _ in 0..inflight {
             match res_rx.recv().context("worker died during reduce")? {
                 Reply::Merged { slot, stats } => slots[slot] = Some(stats),
-                Reply::Stepped { .. } => {
-                    return Err(anyhow!("protocol error: step reply during reduce"))
-                }
+                _ => return Err(anyhow!("protocol error: unexpected reply during reduce")),
             }
         }
         stride *= 2;

@@ -16,8 +16,15 @@
 //! Python never runs at training time: with the `xla` cargo feature the
 //! Rust binary loads the pre-compiled artifacts through PJRT and drives
 //! everything (the default build is the pure-native backend and
-//! compiles fully offline). See `DESIGN.md` for the system inventory
-//! and architecture, `EXPERIMENTS.md` for the paper-vs-measured index.
+//! compiles fully offline). See the repo-level `README.md` for a CLI
+//! tour, `DESIGN.md` for the system inventory and architecture, and
+//! `EXPERIMENTS.md` for the paper-vs-measured index.
+//!
+//! Large corpora stream into the engine chunk by chunk instead of
+//! being materialized several times over (no file-sized text buffer,
+//! no duplicate dataset copy — just the sharded training data): see
+//! [`data::stream`] and [`engine::Cluster::from_stream`]
+//! (DESIGN.md §10).
 //!
 //! Quick start:
 //!

@@ -1,13 +1,17 @@
 //! `pemsvm` — CLI for the parallel data-augmentation SVM.
 //!
 //! Subcommands:
-//!   train <data.svm>  --options LIN-EM-CLS --workers 8 --lambda 1.0 ...
-//!   sweep <data.svm>  --lambdas 10,1,0.1,0.01 [--warm-start] ...
-//!   datagen <out.svm> --dataset alpha --n 10000 --k 64 --seed 0
-//!   predict <data.svm> <model>  batch scoring via the serve scorer
-//!   serve <model...> --port N   TCP serving with micro-batching
-//!   eval <data.svm> <model>
-//!   info
+//!
+//! ```text
+//! train <data.svm>  --options LIN-EM-CLS --workers 8 --lambda 1.0 ...
+//!                   [--stream-chunk-rows R] out-of-core ingestion
+//! sweep <data.svm>  --lambdas 10,1,0.1,0.01 [--warm-start] ...
+//! datagen <out.svm> --dataset alpha --n 10000 --k 64 --seed 0
+//! predict <data.svm> <model>  batch scoring via the serve scorer
+//! serve <model...> --port N   TCP serving with micro-batching
+//! eval <data.svm> <model>
+//! info
+//! ```
 //!
 //! `train` writes the learned model to `--model-out` (default
 //! `model.txt`) in the versioned `pemsvm-model v1` format
@@ -26,8 +30,10 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use pemsvm::cli::Args;
-use pemsvm::config::{TaskKind, TrainConfig};
+use pemsvm::config::{ModelKind, TaskKind, TrainConfig};
+use pemsvm::data::stream::{self, StreamOpts, StreamReader};
 use pemsvm::data::{libsvm, synth, Dataset, Task};
+use pemsvm::engine::{Cluster, WarmStart};
 use pemsvm::serve::{self, ModelBody, SavedModel, Scorer};
 
 fn main() {
@@ -70,8 +76,17 @@ USAGE:
                [--tol T] [--seed S] [--num-classes M] [--model-out model.txt]
                [--config file.toml] [--test test.svm] [--verbose]
                [--topology threads|simulate]
+               [--stream-chunk-rows R] [--dims N,K]
+               --stream-chunk-rows streams ingestion in R-row chunks:
+               no file-sized text buffer or duplicate dataset copy,
+               loader buffers bounded at 2R parsed rows, and trained
+               weights bit-identical to the eager path. --dims declares
+               rows,features up front, skipping the counting pass for
+               CLS/SVR (MLT still scans once to detect 0/1-based class
+               ids). LIN models, native backend
   pemsvm sweep <data.svm> [--lambdas 10,1,0.1,0.01] [--warm-start]
-               [--test test.svm] [train flags...]
+               [--test test.svm] [--stream-chunk-rows R] [--dims N,K]
+               [train flags...]
   pemsvm datagen <out.svm> --dataset alpha|dna|year|mnist|news20
                [--n N] [--k K] [--m M] [--seed S]
   pemsvm predict <data.svm> <model> [--workers P] [--out preds.txt]
@@ -97,7 +112,9 @@ fn build_config(args: &Args) -> Result<TrainConfig> {
     for (key, val) in &args.flags {
         let k = key.replace('-', "_");
         match k.as_str() {
-            "config" | "model_out" | "test" | "lambdas" => continue,
+            "config" | "model_out" | "test" | "lambdas" | "stream_chunk_rows" | "dims" => {
+                continue
+            }
             "simulate_cluster" => {
                 bail!("--simulate-cluster was removed; use --topology threads|simulate")
             }
@@ -119,11 +136,85 @@ fn task_of(cfg: &TrainConfig) -> Task {
     }
 }
 
+/// `--stream-chunk-rows R` (+ optional `--dims N,K`) parsed into the
+/// streaming-ingestion options; `None` when the eager loader should run.
+fn stream_opts_of(args: &Args) -> Result<Option<StreamOpts>> {
+    let chunk_rows = args.get_usize("stream-chunk-rows", 0)?;
+    let dims: Option<(usize, usize)> = match args.get("dims") {
+        None => None,
+        Some(s) => {
+            let Some((n, k)) = s.split_once(',') else {
+                bail!("--dims expects N,K (rows,features)");
+            };
+            Some((n.trim().parse()?, k.trim().parse()?))
+        }
+    };
+    if chunk_rows == 0 {
+        if dims.is_some() {
+            bail!("--dims only applies with --stream-chunk-rows");
+        }
+        return Ok(None);
+    }
+    Ok(Some(StreamOpts { chunk_rows, dims, class_off: None }))
+}
+
+fn reject_kernel_streaming(cfg: &TrainConfig) -> Result<()> {
+    if cfg.model == ModelKind::Kernel {
+        bail!("--stream-chunk-rows supports LIN models (KRN materializes the Gram matrix)");
+    }
+    Ok(())
+}
+
+/// Per-iteration history lines shared by the eager and streamed train
+/// paths.
+fn print_history(out: &pemsvm::engine::TrainOutput, verbose: bool) {
+    if !verbose {
+        return;
+    }
+    for h in &out.history {
+        println!(
+            "iter {:>4}  J = {:<14.4} loss = {:<12.4} err = {:.4}{}",
+            h.iter,
+            h.objective,
+            h.train_loss,
+            h.train_err,
+            h.test_metric.map(|m| format!("  test = {m:.4}")).unwrap_or_default()
+        );
+    }
+}
+
+/// Write the trained model to `--model-out` and report what was written
+/// (shared tail of the eager and streamed train paths).
+fn save_trained_model(
+    args: &Args,
+    cfg: &TrainConfig,
+    k: usize,
+    out: pemsvm::engine::TrainOutput,
+) -> Result<()> {
+    let model_out = PathBuf::from(args.get("model-out").unwrap_or("model.txt"));
+    let saved = SavedModel::from_training(cfg, k, out);
+    serve::save(&saved, &model_out)?;
+    println!(
+        "# model written to {} ({})",
+        model_out.display(),
+        match &saved.body {
+            ModelBody::Kernel(km) => format!("kernel, {} support vectors", {
+                km.omega.iter().filter(|&&o| o != 0.0).count()
+            }),
+            ModelBody::Linear(_) => "linear".to_string(),
+        }
+    );
+    Ok(())
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
     let Some(data_path) = args.positional.first() else {
         bail!("train: missing <data.svm>");
     };
     let cfg = build_config(args)?;
+    if let Some(opts) = stream_opts_of(args)? {
+        return cmd_train_streamed(args, &cfg, data_path, &opts);
+    }
     let t_load = std::time::Instant::now();
     let ds = libsvm::load(Path::new(data_path), task_of(&cfg), cfg.workers)
         .with_context(|| format!("loading {data_path}"))?;
@@ -147,18 +238,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let out = pemsvm::coordinator::train_full(&ds, test.as_ref(), &cfg)?;
     let train_secs = t_train.elapsed().as_secs_f64();
 
-    if cfg.verbose {
-        for h in &out.history {
-            println!(
-                "iter {:>4}  J = {:<14.4} loss = {:<12.4} err = {:.4}{}",
-                h.iter,
-                h.objective,
-                h.train_loss,
-                h.train_err,
-                h.test_metric.map(|m| format!("  test = {m:.4}")).unwrap_or_default()
-            );
-        }
-    }
+    print_history(&out, cfg.verbose);
     println!("# load {load_secs:.2}s  train {train_secs:.2}s  iters {}", out.iterations);
     println!("# phases: {}", out.metrics.report());
     println!("# final objective {:.4}", out.objective);
@@ -184,20 +264,64 @@ fn cmd_train(args: &Args) -> Result<()> {
         );
     }
 
-    let model_out = PathBuf::from(args.get("model-out").unwrap_or("model.txt"));
-    let saved = SavedModel::from_training(&cfg, ds.k, out);
-    serve::save(&saved, &model_out)?;
+    save_trained_model(args, &cfg, ds.k, out)
+}
+
+/// `train --stream-chunk-rows`: out-of-core ingestion through
+/// `Cluster::from_stream` (DESIGN.md §10). Parsed rows in flight are
+/// bounded by two chunks, the trained weights are bit-identical to the
+/// eager path for a fixed seed, and the training-set metric runs as a
+/// second streamed pass so the corpus is never materialized.
+fn cmd_train_streamed(
+    args: &Args,
+    cfg: &TrainConfig,
+    data_path: &str,
+    opts: &StreamOpts,
+) -> Result<()> {
+    reject_kernel_streaming(cfg)?;
+    let test = args
+        .get("test")
+        .map(|p| libsvm::load(Path::new(p), task_of(cfg), cfg.workers))
+        .transpose()?;
+    let t_ingest = std::time::Instant::now();
+    let reader = StreamReader::open(Path::new(data_path), task_of(cfg), opts)
+        .with_context(|| format!("streaming {data_path}"))?;
+    let (n, k, class_off) = (reader.n(), reader.k(), reader.class_off());
     println!(
-        "# model written to {} ({})",
-        model_out.display(),
-        match &saved.body {
-            ModelBody::Kernel(km) => format!("kernel, {} support vectors", {
-                km.omega.iter().filter(|&&o| o != 0.0).count()
-            }),
-            ModelBody::Linear(_) => "linear".to_string(),
-        }
+        "# {} on {} (streamed: N={} K={} chunk={} rows) workers={} backend={:?}",
+        cfg.options_string(),
+        data_path,
+        n,
+        k,
+        opts.chunk_rows,
+        cfg.workers,
+        cfg.backend
     );
-    Ok(())
+    let mut cluster = Cluster::from_stream(reader, cfg)?;
+    let ingest_secs = t_ingest.elapsed().as_secs_f64();
+    let t_train = std::time::Instant::now();
+    let out = cluster.run_session(cfg, test.as_ref(), WarmStart::Cold)?;
+    let train_secs = t_train.elapsed().as_secs_f64();
+
+    print_history(&out, cfg.verbose);
+    println!("# ingest {ingest_secs:.2}s  train {train_secs:.2}s  iters {}", out.iterations);
+    println!("# phases: {}", out.metrics.report());
+    println!("# final objective {:.4}", out.objective);
+    // the metric pass reuses the known dims + offset: no second count scan
+    let eval_opts =
+        StreamOpts { chunk_rows: opts.chunk_rows, dims: Some((n, k)), class_off: Some(class_off) };
+    let train_metric =
+        stream::evaluate_streamed(Path::new(data_path), task_of(cfg), &eval_opts, &out.weights)?;
+    println!("# train {} = {train_metric:.4} (second streamed pass)", metric_name(cfg.task));
+    if let Some(te) = &test {
+        println!(
+            "# test {} = {:.4}",
+            metric_name(cfg.task),
+            pemsvm::model::evaluate(te, &out.weights)
+        );
+    }
+
+    save_trained_model(args, cfg, k, out)
 }
 
 /// Lambda sweep on one persistent cluster: the `engine::Cluster` is
@@ -226,27 +350,53 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     if lambdas.is_empty() {
         bail!("sweep: --lambdas is empty");
     }
+    let stream_opts = stream_opts_of(args)?;
+    if stream_opts.is_some() {
+        reject_kernel_streaming(&cfg)?;
+    }
 
-    let ds = libsvm::load(Path::new(data_path), task_of(&cfg), cfg.workers)
-        .with_context(|| format!("loading {data_path}"))?;
     let test = args
         .get("test")
         .map(|p| libsvm::load(Path::new(p), task_of(&cfg), cfg.workers))
         .transpose()?;
 
     let t_setup = std::time::Instant::now();
-    let mut cluster = pemsvm::engine::Cluster::new(&ds, &cfg)?;
+    // eager_ds is None in streaming mode: per-lambda train metrics then
+    // run as streamed passes instead of over a materialized dataset
+    let (mut cluster, n, k, class_off, eager_ds) = match &stream_opts {
+        Some(opts) => {
+            let reader = StreamReader::open(Path::new(data_path), task_of(&cfg), opts)
+                .with_context(|| format!("streaming {data_path}"))?;
+            let (n, k, off) = (reader.n(), reader.k(), reader.class_off());
+            (Cluster::from_stream(reader, &cfg)?, n, k, off, None)
+        }
+        None => {
+            let ds = libsvm::load(Path::new(data_path), task_of(&cfg), cfg.workers)
+                .with_context(|| format!("loading {data_path}"))?;
+            let (n, k) = (ds.n, ds.k);
+            (Cluster::new(&ds, &cfg)?, n, k, 0.0, Some(ds))
+        }
+    };
     println!(
-        "# sweep: {} lambdas on one cluster (N={} K={} P={} {:?}/{:?}), setup {:.2}s{}",
+        "# sweep: {} lambdas on one cluster (N={n} K={k} P={} {:?}/{:?}), setup {:.2}s{}{}",
         lambdas.len(),
-        ds.n,
-        ds.k,
         cluster.workers(),
         cfg.backend,
         cfg.topology,
         t_setup.elapsed().as_secs_f64(),
-        if cfg.warm_start { ", warm-started sessions" } else { "" }
+        if cfg.warm_start { ", warm-started sessions" } else { "" },
+        match &stream_opts {
+            Some(o) => format!(", streamed ingest ({} rows/chunk)", o.chunk_rows),
+            None => String::new(),
+        }
     );
+    // per-lambda streamed metric passes reuse the known dims + offset
+    // (no rescans of the corpus)
+    let eval_opts = stream_opts.as_ref().map(|o| StreamOpts {
+        chunk_rows: o.chunk_rows,
+        dims: Some((n, k)),
+        class_off: Some(class_off),
+    });
     let metric_name = if cfg.task == TaskKind::Svr { "rmse" } else { "acc" };
     println!(
         "# {:>10} {:>6} {:>14} {:>10} {:>10} {:>8}",
@@ -265,7 +415,15 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         // test set stays out of the session: the per-iteration held-out
         // history would be discarded here; one final evaluate suffices
         let out = cluster.run_session(&scfg, None, warm)?;
-        let train_metric = pemsvm::model::evaluate(&ds, &out.weights);
+        let train_metric = match &eager_ds {
+            Some(ds) => pemsvm::model::evaluate(ds, &out.weights),
+            None => stream::evaluate_streamed(
+                Path::new(data_path),
+                task_of(&cfg),
+                eval_opts.as_ref().unwrap(),
+                &out.weights,
+            )?,
+        };
         let test_metric = test.as_ref().map(|te| pemsvm::model::evaluate(te, &out.weights));
         println!(
             "  {:>10} {:>6} {:>14.4} {:>10.4} {:>10} {:>7.2}s",

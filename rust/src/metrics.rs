@@ -2,6 +2,13 @@
 //! paper's Table 1 (Draw gamma / Calculate mu_p, Sigma_p / Reduce /
 //! Draw mu / Broadcast mu) so the itertime bench can print an empirical
 //! version of the asymptotic table.
+//!
+//! Two families live here: [`Metrics`] is the per-session training
+//! record (phase wall-clock, iteration/reduce counts — accumulated by
+//! the engine, merged across sessions for cluster-lifetime reports),
+//! and [`ServeStats`]/[`ServeSnapshot`] are the lock-free monotonic
+//! counters the serving registry hangs off every model entry
+//! (DESIGN.md §9). [`Stopwatch`] is the shared bench timer.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};

@@ -1,5 +1,14 @@
 //! Model-level definitions: discriminant functions, losses, objectives,
 //! prediction, and evaluation metrics for the three tasks.
+//!
+//! [`Weights`] is the learned-parameter representation shared by the
+//! whole stack — a single vector for CLS/SVR (and the dual omega for
+//! KRN), a `[m, k]` matrix for the Crammer-Singer multiclass model.
+//! The objective functions here are the reference definitions the
+//! engine's per-iteration history reports against (Eq. 1 of the paper
+//! and its SVR/MLT analogues); [`evaluate`] dispatches to accuracy or
+//! RMSE on the dataset's task and is the single metric entrypoint used
+//! by training, sweeps, and the serve path.
 
 use crate::data::{Dataset, Task};
 use crate::linalg::Mat;

@@ -1,0 +1,148 @@
+//! The streamed-ingestion equivalence guarantee (DESIGN.md §10): for a
+//! fixed seed, `Cluster::from_stream` at ANY chunk size must reproduce
+//! the eager path bit for bit — same shard contents in the workers,
+//! same training trajectory, same final weights.
+
+use std::path::PathBuf;
+
+use pemsvm::config::{Topology, TrainConfig};
+use pemsvm::data::stream::{StreamOpts, StreamReader};
+use pemsvm::data::{libsvm, synth, Task};
+use pemsvm::engine::{Cluster, WarmStart};
+use pemsvm::model::Weights;
+
+fn tmpfile(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("pemsvm_stream_equiv");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+fn base_cfg(options: &str, workers: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::default().with_options(options).unwrap();
+    cfg.workers = workers;
+    cfg.max_iters = 8;
+    cfg.tol = 0.0; // run all 8 iterations in both paths
+    cfg.seed = 7;
+    cfg
+}
+
+fn weights_bits(w: &Weights) -> Vec<u32> {
+    match w {
+        Weights::Single(v) => v.iter().map(|x| x.to_bits()).collect(),
+        Weights::PerClass(m) => m.data.iter().map(|x| x.to_bits()).collect(),
+    }
+}
+
+/// Train eagerly and via the stream at several awkward chunk sizes; the
+/// weights must agree to the bit.
+#[test]
+fn streamed_training_is_bit_identical_to_eager() {
+    let p = tmpfile("cls.svm");
+    let ds = synth::dna_like(3_000, 120, 11);
+    libsvm::save(&ds, &p).unwrap();
+
+    let cfg = base_cfg("LIN-EM-CLS", 4);
+    let eager = libsvm::load(&p, Task::Binary, cfg.workers).unwrap();
+    let mut cluster = Cluster::new(&eager, &cfg).unwrap();
+    let want = cluster.run_session(&cfg, None, WarmStart::Cold).unwrap();
+
+    // 257 does not divide shard boundaries, 3000 is one whole-file
+    // chunk, 4096 exceeds the file
+    for chunk_rows in [257usize, 1_000, 3_000, 4_096] {
+        let opts = StreamOpts::rows(chunk_rows);
+        let reader = StreamReader::open(&p, Task::Binary, &opts).unwrap();
+        assert_eq!(reader.n(), eager.n);
+        assert_eq!(reader.k(), eager.k);
+        let gauge = reader.gauge();
+        let mut streamed = Cluster::from_stream(reader, &cfg).unwrap();
+        let got = streamed.run_session(&cfg, None, WarmStart::Cold).unwrap();
+        assert!(
+            gauge.peak() <= 2 * chunk_rows,
+            "chunk {chunk_rows}: peak resident rows {} > 2 x chunk",
+            gauge.peak()
+        );
+        assert_eq!(got.iterations, want.iterations, "chunk {chunk_rows}");
+        assert_eq!(
+            got.objective.to_bits(),
+            want.objective.to_bits(),
+            "chunk {chunk_rows}: objective diverged"
+        );
+        assert_eq!(
+            weights_bits(&got.weights),
+            weights_bits(&want.weights),
+            "chunk {chunk_rows}: weights diverged"
+        );
+    }
+}
+
+/// The MC sampler draws per-worker RNG streams; streamed construction
+/// must not perturb them.
+#[test]
+fn streamed_mc_matches_eager_mc() {
+    let p = tmpfile("mc.svm");
+    let ds = synth::dna_like(800, 60, 3);
+    libsvm::save(&ds, &p).unwrap();
+
+    let mut cfg = base_cfg("LIN-MC-CLS", 3);
+    cfg.burn_in = 2;
+    let eager = libsvm::load(&p, Task::Binary, cfg.workers).unwrap();
+    let mut cluster = Cluster::new(&eager, &cfg).unwrap();
+    let want = cluster.run_session(&cfg, None, WarmStart::Cold).unwrap();
+
+    let opts = StreamOpts::rows(111);
+    let reader = StreamReader::open(&p, Task::Binary, &opts).unwrap();
+    let mut streamed = Cluster::from_stream(reader, &cfg).unwrap();
+    let got = streamed.run_session(&cfg, None, WarmStart::Cold).unwrap();
+    assert_eq!(weights_bits(&got.weights), weights_bits(&want.weights));
+}
+
+/// Simulated topology ingests serially on the leader; it must build the
+/// same shards (and the declared --dims fast path must too).
+#[test]
+fn streamed_simulate_and_dims_match_eager() {
+    let p = tmpfile("sim.svm");
+    let ds = synth::dna_like(500, 40, 5);
+    libsvm::save(&ds, &p).unwrap();
+
+    let mut cfg = base_cfg("LIN-EM-CLS", 4);
+    cfg.topology = Topology::Simulate;
+    let eager = libsvm::load(&p, Task::Binary, cfg.workers).unwrap();
+    let mut cluster = Cluster::new(&eager, &cfg).unwrap();
+    let want = cluster.run_session(&cfg, None, WarmStart::Cold).unwrap();
+
+    for dims in [None, Some((500usize, 40usize))] {
+        let opts = StreamOpts { chunk_rows: 64, dims, class_off: None };
+        let reader = StreamReader::open(&p, Task::Binary, &opts).unwrap();
+        let mut streamed = Cluster::from_stream(reader, &cfg).unwrap();
+        let got = streamed.run_session(&cfg, None, WarmStart::Cold).unwrap();
+        assert_eq!(
+            weights_bits(&got.weights),
+            weights_bits(&want.weights),
+            "dims {dims:?}"
+        );
+    }
+}
+
+/// Multiclass end to end: streamed MLT training through the
+/// Crammer-Singer block driver (the scan pass also fixes the class-id
+/// offset; the 1-based-ids case is pinned in `data::stream`'s unit
+/// tests).
+#[test]
+fn streamed_multiclass_matches_eager() {
+    let p = tmpfile("mlt.svm");
+    let ds = synth::mnist_like(600, 24, 5, 2);
+    libsvm::save(&ds, &p).unwrap();
+
+    let mut cfg = base_cfg("LIN-EM-MLT", 3);
+    cfg.num_classes = 5;
+    cfg.max_iters = 4;
+    let eager = libsvm::load(&p, Task::Multiclass(5), cfg.workers).unwrap();
+    let mut cluster = Cluster::new(&eager, &cfg).unwrap();
+    let want = cluster.run_session(&cfg, None, WarmStart::Cold).unwrap();
+
+    let opts = StreamOpts::rows(97);
+    let reader = StreamReader::open(&p, Task::Multiclass(5), &opts).unwrap();
+    let mut streamed = Cluster::from_stream(reader, &cfg).unwrap();
+    let got = streamed.run_session(&cfg, None, WarmStart::Cold).unwrap();
+    assert_eq!(weights_bits(&got.weights), weights_bits(&want.weights));
+}
