@@ -1,29 +1,56 @@
 //! §Perf microbench: the native Sigma^p accumulation
 //! (rank_update_dense), the single hottest loop of the native backend.
-//! Prints GFLOP/s at several K so the EXPERIMENTS.md §Perf log has a
-//! stable number to track across optimization iterations.
+//! Prints GFLOP/s at several K for the runtime-dispatched kernel AND
+//! the scalar fallback side by side, so EXPERIMENTS.md §Perf has both
+//! the absolute number and the SIMD speedup to track across
+//! optimization iterations.
 
 use pemsvm::benchutil::time;
-use pemsvm::linalg::{rank_update_dense, Mat};
+use pemsvm::linalg::{active_isa, rank_update_dense, rank_update_dense_scalar, SymPacked};
 use pemsvm::rng::Pcg64;
 
 fn main() {
-    println!("rank_update_dense GFLOP/s (lower-triangle FLOPs = N*K*(K+1)/2 mul-adds x2)");
+    println!(
+        "rank_update_dense GFLOP/s (lower-triangle FLOPs = N*K*(K+1)/2 mul-adds x2); \
+         dispatched isa = {}",
+        active_isa().name()
+    );
+    println!(
+        "  {:<5} {:<8} {:>10} {:>10} {:>8}",
+        "K", "N", "scalar", "simd", "speedup"
+    );
     for k in [64usize, 128, 256, 512, 800] {
         let n = (40_000_000 / (k * k)).max(64); // ~40 MFLOP-ish per rep
         let mut g = Pcg64::new(1);
         let x: Vec<f32> = (0..n * k).map(|_| g.next_f32() - 0.5).collect();
         let a: Vec<f32> = (0..n).map(|_| g.next_f32() + 0.1).collect();
-        let mut s = Mat::zeros(k, k);
-        // warm
-        rank_update_dense(&mut s, &x, n, k, &a);
+        let mut s = SymPacked::zeros(k);
         let reps = 5;
-        let (t, _) = time(|| {
+        let flops = reps as f64 * n as f64 * (k * (k + 1)) as f64; // x2 mul-add /2 triangle
+
+        // warm, then time the scalar fallback
+        rank_update_dense_scalar(&mut s, &x, n, k, &a);
+        let (t_scalar, _) = time(|| {
+            for _ in 0..reps {
+                rank_update_dense_scalar(&mut s, &x, n, k, &a);
+            }
+        });
+
+        // warm, then time the dispatched kernel
+        rank_update_dense(&mut s, &x, n, k, &a);
+        let (t_simd, _) = time(|| {
             for _ in 0..reps {
                 rank_update_dense(&mut s, &x, n, k, &a);
             }
         });
-        let flops = reps as f64 * n as f64 * (k * (k + 1)) as f64; // x2 mul-add /2 triangle
-        println!("  K={k:<4} N={n:<7} {:>7.2} GFLOP/s   ({:.3}s)", flops / t / 1e9, t);
+
+        println!(
+            "  {:<5} {:<8} {:>10.2} {:>10.2} {:>7.2}x",
+            k,
+            n,
+            flops / t_scalar / 1e9,
+            flops / t_simd / 1e9,
+            t_scalar / t_simd
+        );
     }
 }

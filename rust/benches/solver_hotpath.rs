@@ -1,0 +1,142 @@
+//! §Perf bench: the solver hot path end to end.
+//!
+//! Two sections: (1) the Sigma^p rank-update kernel in GFLOP/s,
+//! dispatched-SIMD vs the scalar fallback (the PR-over-PR perf
+//! trajectory number); (2) per-iteration worker-step wall-clock for the
+//! three tasks (CLS / SVR / MLT) at a representative shape, using one
+//! reused [`StepWorkspace`] exactly like the engine loop does.
+//!
+//! Results are printed AND appended-as-snapshot to `BENCH_solver.json`
+//! at the repo root (one self-contained JSON object; later runs
+//! overwrite it — the git history is the trajectory).
+
+use pemsvm::benchutil::{header, scaled, time};
+use pemsvm::data::synth;
+use pemsvm::linalg::{active_isa, rank_update_dense, rank_update_dense_scalar, Mat, SymPacked};
+use pemsvm::rng::Pcg64;
+use pemsvm::solver::{local, GammaMode, PartialStats, StepWorkspace};
+
+fn gflops_pair(k: usize) -> (usize, f64, f64) {
+    let n = (40_000_000 / (k * k)).max(64);
+    let mut g = Pcg64::new(1);
+    let x: Vec<f32> = (0..n * k).map(|_| g.next_f32() - 0.5).collect();
+    let a: Vec<f32> = (0..n).map(|_| g.next_f32() + 0.1).collect();
+    let mut s = SymPacked::zeros(k);
+    let reps = 5;
+    let flops = reps as f64 * n as f64 * (k * (k + 1)) as f64;
+    rank_update_dense_scalar(&mut s, &x, n, k, &a); // warm
+    let (t_scalar, _) = time(|| {
+        for _ in 0..reps {
+            rank_update_dense_scalar(&mut s, &x, n, k, &a);
+        }
+    });
+    rank_update_dense(&mut s, &x, n, k, &a); // warm
+    let (t_simd, _) = time(|| {
+        for _ in 0..reps {
+            rank_update_dense(&mut s, &x, n, k, &a);
+        }
+    });
+    (n, flops / t_scalar / 1e9, flops / t_simd / 1e9)
+}
+
+fn main() {
+    header("solver_hotpath", "SIMD kernel GFLOP/s + per-iteration step time (CLS/SVR/MLT)");
+    let isa = active_isa().name();
+    println!("  dispatched isa: {isa}");
+
+    // --- section 1: rank-update kernel ---
+    let mut kernel_rows = Vec::new();
+    println!("  {:<5} {:<8} {:>10} {:>10} {:>8}", "K", "N", "scalar", "simd", "speedup");
+    for k in [128usize, 256, 512] {
+        let (n, gf_scalar, gf_simd) = gflops_pair(k);
+        println!(
+            "  {:<5} {:<8} {:>10.2} {:>10.2} {:>7.2}x",
+            k,
+            n,
+            gf_scalar,
+            gf_simd,
+            gf_simd / gf_scalar
+        );
+        kernel_rows.push((k, n, gf_scalar, gf_simd));
+    }
+
+    // --- section 2: per-iteration worker-step wall-clock ---
+    let (n, k) = (scaled(20_000, 2_000), 128usize);
+    let eps = 1e-5f32;
+    let reps = 5;
+    let mut ws = StepWorkspace::new();
+
+    let cls = synth::alpha_like(n, k, 2);
+    let w = vec![0.01f32; k];
+    let mut st = PartialStats::zeros(k);
+    local::lin_step(&cls, 0..n, &w, eps, &mut GammaMode::Em, &mut ws, &mut st); // warm
+    let (t_cls, _) = time(|| {
+        for _ in 0..reps {
+            st.reset();
+            local::lin_step(&cls, 0..n, &w, eps, &mut GammaMode::Em, &mut ws, &mut st);
+        }
+    });
+
+    let svr = synth::year_like(n, k, 3);
+    local::svr_step(&svr, 0..n, &w, eps, 0.1, &mut GammaMode::Em, &mut ws, &mut st); // warm
+    let (t_svr, _) = time(|| {
+        for _ in 0..reps {
+            st.reset();
+            local::svr_step(&svr, 0..n, &w, eps, 0.1, &mut GammaMode::Em, &mut ws, &mut st);
+        }
+    });
+
+    // MLT: one outer iteration = m per-class calls in Gauss-Seidel
+    // order (class 0 fills the score cache, classes 1..m reuse it)
+    let m = 10usize;
+    let mlt = synth::mnist_like(n, k, m, 4);
+    let mut w_all = Mat::zeros(m, k);
+    let mut g = Pcg64::new(7);
+    for x in w_all.data.iter_mut() {
+        *x = 0.01 * (g.next_f32() - 0.5);
+    }
+    for y in 0..m {
+        st.reset();
+        local::mlt_step(&mlt, 0..n, &w_all, y, eps, &mut GammaMode::Em, &mut ws, &mut st);
+    } // warm
+    let (t_mlt, _) = time(|| {
+        for _ in 0..reps {
+            for y in 0..m {
+                st.reset();
+                local::mlt_step(&mlt, 0..n, &w_all, y, eps, &mut GammaMode::Em, &mut ws, &mut st);
+            }
+        }
+    });
+
+    let (cls_it, svr_it, mlt_it) =
+        (t_cls / reps as f64, t_svr / reps as f64, t_mlt / reps as f64);
+    println!("  per-iteration step time at N={n} K={k} (MLT: m={m}, all classes):");
+    println!("    CLS {:>9.2} ms", cls_it * 1e3);
+    println!("    SVR {:>9.2} ms", svr_it * 1e3);
+    println!("    MLT {:>9.2} ms", mlt_it * 1e3);
+
+    // --- JSON snapshot ---
+    let mut rows = String::new();
+    for (i, (k, n, gs, gv)) in kernel_rows.iter().enumerate() {
+        if i > 0 {
+            rows.push(',');
+        }
+        rows.push_str(&format!(
+            "{{\"k\":{k},\"n\":{n},\"scalar_gflops\":{gs:.3},\"simd_gflops\":{gv:.3},\
+             \"speedup\":{:.3}}}",
+            gv / gs
+        ));
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"solver_hotpath\",\n  \"isa\": \"{isa}\",\n  \
+         \"scale\": {},\n  \"rank_update\": [{rows}],\n  \
+         \"iteration_secs\": {{\"n\": {n}, \"k\": {k}, \"m\": {m}, \
+         \"cls\": {cls_it:.6}, \"svr\": {svr_it:.6}, \"mlt\": {mlt_it:.6}}}\n}}\n",
+        pemsvm::benchutil::scale()
+    );
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_solver.json");
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("  wrote {}", path.display()),
+        Err(e) => println!("  could not write {}: {e}", path.display()),
+    }
+}

@@ -36,6 +36,9 @@ pub struct NativeWorker {
     rng: Pcg64,
     normals: NormalSource,
     stats: PartialStats,
+    /// reusable step scratch + MLT score cache (allocated once per
+    /// worker, not once per step call)
+    ws: local::StepWorkspace,
 }
 
 impl NativeWorker {
@@ -57,6 +60,7 @@ impl NativeWorker {
             rng: worker_stream(seed, worker_id),
             normals: NormalSource::new(),
             stats: PartialStats::zeros(k),
+            ws: local::StepWorkspace::new(),
         }
     }
 
@@ -81,15 +85,10 @@ impl NativeWorker {
             rng: worker_stream(seed, worker_id),
             normals: NormalSource::new(),
             stats: PartialStats::zeros(k),
+            ws: local::StepWorkspace::new(),
         }
     }
 
-    fn mode(&mut self) -> GammaMode<'_> {
-        match self.algo {
-            Algo::Em => GammaMode::Em,
-            Algo::Mc => GammaMode::Mc { rng: &mut self.rng, normals: &mut self.normals },
-        }
-    }
 }
 
 impl WorkerBackend for NativeWorker {
@@ -104,16 +103,23 @@ impl WorkerBackend for NativeWorker {
             let ds = self.ds.clone();
             let range = self.range.clone();
             let eps = self.eps;
-            let mut mode = self.mode();
+            // build the mode from disjoint fields so `ws` can borrow too
+            let ws = &mut self.ws;
+            let mut mode = match self.algo {
+                Algo::Em => GammaMode::Em,
+                Algo::Mc => {
+                    GammaMode::Mc { rng: &mut self.rng, normals: &mut self.normals }
+                }
+            };
             match input {
                 StepInput::Binary { w } => {
-                    local::lin_step(&ds, range, w, eps, &mut mode, &mut stats)
+                    local::lin_step(&ds, range, w, eps, &mut mode, ws, &mut stats)
                 }
                 StepInput::Svr { w, eps_ins } => {
-                    local::svr_step(&ds, range, w, eps, *eps_ins, &mut mode, &mut stats)
+                    local::svr_step(&ds, range, w, eps, *eps_ins, &mut mode, ws, &mut stats)
                 }
                 StepInput::Mlt { w_all, yidx } => {
-                    local::mlt_step(&ds, range, w_all, *yidx, eps, &mut mode, &mut stats)
+                    local::mlt_step(&ds, range, w_all, *yidx, eps, &mut mode, ws, &mut stats)
                 }
             }
         }

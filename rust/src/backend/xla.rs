@@ -207,8 +207,14 @@ impl WorkerBackend for XlaWorker {
             let mu = to_vec_f32(&outs[1])?;
             let obj = to_vec_f32(&outs[2])?;
             let aux = to_vec_f32(&outs[3])?;
-            for (acc, v) in out.sigma.data.iter_mut().zip(&sigma) {
-                *acc += v;
+            // the device returns full [pk, pk] sigma; keep only the
+            // lower triangle in the packed accumulator
+            let pk = self.pk;
+            for i in 0..pk {
+                let off = crate::linalg::SymPacked::row_offset(i);
+                for j in 0..=i {
+                    out.sigma.data[off + j] += sigma[i * pk + j];
+                }
             }
             for (acc, v) in out.mu.iter_mut().zip(&mu) {
                 *acc += v;
@@ -281,10 +287,10 @@ impl MasterBackend for XlaMaster {
         if stats.mu.len() != pk {
             bail!("XlaMaster: stats dim {} != padded {}", stats.mu.len(), pk);
         }
-        // XLA workers produce full symmetric sigma; native-worker stats
-        // are lower-triangular — mirror so both are valid inputs.
-        crate::linalg::symmetrize_from_lower(&mut stats.sigma);
-        let s_lit = literal_f32(&stats.sigma.data, &[pk as i64, pk as i64])?;
+        // stats carry only the packed lower triangle; the solve artifact
+        // wants the full symmetric matrix — unpack exactly once here.
+        let full = stats.sigma.unpack();
+        let s_lit = literal_f32(&full.data, &[pk as i64, pk as i64])?;
         let m_lit = literal_f32(&stats.mu, &[pk as i64])?;
         let outs = match (self.algo, mc_noise) {
             (Algo::Mc, Some(z)) => {
@@ -338,8 +344,8 @@ mod tests {
         let mut xw = XlaWorker::new(&cfg, &ds, 100..650, 0).unwrap();
         let mut nw = NativeWorker::new(ds.clone(), 100..650, Algo::Em, cfg.eps_clamp, 0, 0);
         let sx = xw.step(&StepInput::Binary { w: w.clone() }).unwrap();
-        let mut sn = nw.step(&StepInput::Binary { w: w.clone() }).unwrap();
-        crate::linalg::symmetrize_from_lower(&mut sn.sigma);
+        let sn = nw.step(&StepInput::Binary { w: w.clone() }).unwrap();
+        // packed sigma indexes symmetrically; no mirroring needed
         let pk = xw.stat_dim();
         assert_eq!(pk, 16);
         let mut max_diff = 0f32;

@@ -106,6 +106,7 @@ mod tests {
         let out = train(&ds, &DcdCfg { lambda, ..DcdCfg::default() });
         // compare against the EM solver's optimum on the same problem
         let mut w_em = vec![0f32; 12];
+        let mut ws = crate::solver::local::StepWorkspace::new();
         for _ in 0..40 {
             let mut st = crate::solver::PartialStats::zeros(12);
             crate::solver::local::lin_step(
@@ -114,6 +115,7 @@ mod tests {
                 &w_em,
                 1e-5,
                 &mut crate::solver::GammaMode::Em,
+                &mut ws,
                 &mut st,
             );
             w_em = crate::solver::master::solve_native(

@@ -1,17 +1,26 @@
 //! Dense linear-algebra substrate (no external crates offline).
 //!
 //! Everything the master step and the baselines need: a column-dense
-//! row-major matrix, Cholesky factor/solve, triangular solves, and the
-//! symmetric weighted rank-update `S += sum_d a_d x_d x_d^T` that is the
-//! paper's hot spot on the native (CPU/MPI-like) backend.
+//! row-major matrix, its lower-packed symmetric sibling
+//! ([`SymPacked`]), Cholesky factor/solve, triangular solves, and the
+//! symmetric weighted rank-update `S += sum_d a_d x_d x_d^T` that is
+//! the paper's hot spot on the native (CPU/MPI-like) backend. The hot
+//! kernels (`dot`, `axpy`, `rank_update_dense`) dispatch once per
+//! process to the widest ISA the CPU supports — see [`active_isa`].
 
 mod cholesky;
 mod mat;
+mod packed;
 mod rank_update;
+mod simd;
 
 pub use cholesky::{cholesky_in_place, solve_cholesky, solve_lower, solve_upper, CholeskyError};
 pub use mat::Mat;
-pub use rank_update::{rank_update_dense, rank_update_sparse, symmetrize_from_lower};
+pub use packed::SymPacked;
+pub use rank_update::{
+    rank_update_dense, rank_update_dense_scalar, rank_update_sparse, symmetrize_from_lower,
+};
+pub use simd::{active_isa, axpy, axpy_scalar, dot, dot_scalar, KernelIsa};
 
 /// y = A x for row-major `a` of shape [m, n].
 pub fn matvec(a: &[f32], m: usize, n: usize, x: &[f32], y: &mut [f32]) {
@@ -21,35 +30,6 @@ pub fn matvec(a: &[f32], m: usize, n: usize, x: &[f32], y: &mut [f32]) {
     for (i, yi) in y.iter_mut().enumerate() {
         let row = &a[i * n..(i + 1) * n];
         *yi = dot(row, x);
-    }
-}
-
-/// Dot product with 4-way unrolling (the compiler autovectorizes this
-/// shape reliably; see EXPERIMENTS.md §Perf).
-#[inline]
-pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    let n = a.len().min(b.len());
-    let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
-    let chunks = n / 4;
-    for i in 0..chunks {
-        let j = i * 4;
-        s0 += a[j] * b[j];
-        s1 += a[j + 1] * b[j + 1];
-        s2 += a[j + 2] * b[j + 2];
-        s3 += a[j + 3] * b[j + 3];
-    }
-    let mut s = (s0 + s1) + (s2 + s3);
-    for j in chunks * 4..n {
-        s += a[j] * b[j];
-    }
-    s
-}
-
-/// a += alpha * b (axpy).
-#[inline]
-pub fn axpy(alpha: f32, b: &[f32], a: &mut [f32]) {
-    for (ai, bi) in a.iter_mut().zip(b) {
-        *ai += alpha * bi;
     }
 }
 

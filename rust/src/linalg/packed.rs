@@ -1,0 +1,180 @@
+//! Lower-packed symmetric matrix storage.
+//!
+//! `Sigma^p` is symmetric and the workers only ever fill its lower
+//! triangle (paper §4.1: one triangle is all a worker needs to submit).
+//! Storing the `k(k+1)/2` packed floats instead of a full `k x k`
+//! matrix halves merge bandwidth in the tree reduce, halves the
+//! reduce-buffer memory, and halves the `reset` traffic per iteration;
+//! the master unpacks exactly once per solve.
+
+use std::ops::{Index, IndexMut};
+
+use super::Mat;
+
+/// Symmetric `k x k` matrix stored as its lower triangle, row-packed:
+/// row `i` occupies `data[i(i+1)/2 .. i(i+1)/2 + i + 1]`, holding the
+/// entries `(i, 0..=i)`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SymPacked {
+    k: usize,
+    pub data: Vec<f32>,
+}
+
+impl SymPacked {
+    /// Packed length for dimension `k`.
+    #[inline]
+    pub fn packed_len(k: usize) -> usize {
+        k * (k + 1) / 2
+    }
+
+    /// Offset of packed row `i` (its entries are `(i, 0..=i)`).
+    #[inline]
+    pub fn row_offset(i: usize) -> usize {
+        i * (i + 1) / 2
+    }
+
+    pub fn zeros(k: usize) -> Self {
+        SymPacked { k, data: vec![0.0; Self::packed_len(k)] }
+    }
+
+    /// Matrix dimension (the `k` of `k x k`).
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.k
+    }
+
+    /// Packed row `i`: the `i + 1` entries `(i, 0..=i)`.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        let off = Self::row_offset(i);
+        &self.data[off..off + i + 1]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let off = Self::row_offset(i);
+        &mut self.data[off..off + i + 1]
+    }
+
+    pub fn fill(&mut self, v: f32) {
+        self.data.fill(v);
+    }
+
+    /// self += other (the reduce/merge operator); dims must match.
+    pub fn add_assign(&mut self, other: &SymPacked) {
+        assert_eq!(self.k, other.k);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    /// Pack the lower triangle of a square `Mat` (the upper triangle is
+    /// ignored, matching how the rank-update kernels fill a `Mat`).
+    pub fn from_mat_lower(m: &Mat) -> SymPacked {
+        assert_eq!(m.rows, m.cols);
+        let k = m.rows;
+        let mut data = Vec::with_capacity(Self::packed_len(k));
+        for i in 0..k {
+            data.extend_from_slice(&m.row(i)[..i + 1]);
+        }
+        SymPacked { k, data }
+    }
+
+    /// Unpack into a full symmetric `Mat` (both triangles mirrored).
+    /// The master solve calls this exactly once per iteration.
+    pub fn unpack(&self) -> Mat {
+        let k = self.k;
+        let mut m = Mat::zeros(k, k);
+        for i in 0..k {
+            let row = self.row(i);
+            for (j, &v) in row.iter().enumerate() {
+                m.data[i * k + j] = v;
+                m.data[j * k + i] = v;
+            }
+        }
+        m
+    }
+
+    /// Max |a_ij - b_ij| over the packed entries.
+    pub fn max_abs_diff(&self, other: &SymPacked) -> f32 {
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+/// Symmetric indexing: `(i, j)` and `(j, i)` address the same entry.
+impl Index<(usize, usize)> for SymPacked {
+    type Output = f32;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f32 {
+        let (hi, lo) = if i >= j { (i, j) } else { (j, i) };
+        &self.data[Self::row_offset(hi) + lo]
+    }
+}
+
+impl IndexMut<(usize, usize)> for SymPacked {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f32 {
+        let (hi, lo) = if i >= j { (i, j) } else { (j, i) };
+        &mut self.data[Self::row_offset(hi) + lo]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn packed_layout_and_indexing() {
+        let mut s = SymPacked::zeros(3);
+        assert_eq!(s.data.len(), 6);
+        s[(1, 0)] = 2.0;
+        s[(2, 2)] = 5.0;
+        // symmetric addressing
+        assert_eq!(s[(0, 1)], 2.0);
+        assert_eq!(s.row(1), &[2.0, 0.0]);
+        assert_eq!(s.row(2), &[0.0, 0.0, 5.0]);
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let mut m = Mat::zeros(4, 4);
+        let mut v = 1.0f32;
+        for i in 0..4 {
+            for j in 0..=i {
+                m[(i, j)] = v;
+                v += 1.0;
+            }
+        }
+        // garbage in the upper triangle must be ignored
+        m[(0, 3)] = 99.0;
+        let p = SymPacked::from_mat_lower(&m);
+        let full = p.unpack();
+        for i in 0..4 {
+            for j in 0..4 {
+                let want = if i >= j { m[(i, j)] } else { m[(j, i)] };
+                assert_eq!(full[(i, j)], want, "({i},{j})");
+            }
+        }
+        assert_eq!(SymPacked::from_mat_lower(&full), p);
+    }
+
+    #[test]
+    fn add_assign_matches_mat_add() {
+        let mut a = SymPacked::zeros(3);
+        let mut b = SymPacked::zeros(3);
+        a[(2, 1)] = 1.5;
+        b[(2, 1)] = 2.0;
+        b[(0, 0)] = -1.0;
+        let want = {
+            let mut m = a.unpack();
+            m.add_assign(&b.unpack());
+            m
+        };
+        a.add_assign(&b);
+        assert_eq!(a.unpack(), want);
+    }
+}

@@ -1,20 +1,55 @@
 //! The native-backend hot spot: `S += sum_d a_d x_d x_d^T` (Eq. 40).
 //!
-//! Dense and CSR-sparse variants, accumulating only the lower triangle —
-//! the paper notes (§4.1) that workers need only submit one triangle.
-//! `symmetrize_from_lower` mirrors it before the master solve.
+//! Dense and CSR-sparse variants accumulating into lower-packed
+//! [`SymPacked`] storage — the paper notes (§4.1) that workers need only
+//! submit one triangle, so nothing above the diagonal is ever written
+//! or shipped. The dense kernel is runtime-dispatched (see
+//! [`active_isa`](super::active_isa)): a rank-8 AVX2+FMA micro-kernel
+//! with an L2-blocked loop over the output rows on x86_64, a rank-4
+//! NEON kernel on aarch64, and the portable rank-4 scalar kernel
+//! elsewhere. `symmetrize_from_lower` still mirrors a full `Mat` for
+//! the (rare) callers that build one directly.
 
-use super::Mat;
+use super::simd::{active_isa, KernelIsa};
+use super::{Mat, SymPacked};
 
 /// Dense rank-1 updates over a row-block: `s += sum_d a[d] * x_d x_d^T`,
-/// lower triangle only. `x` is row-major [n, k]; `s` is [k, k].
+/// lower triangle only. `x` is row-major [n, k]; `s` is `k x k` packed.
 ///
-/// Rows are processed four at a time (a rank-4 SYRK micro-kernel): the
-/// inner j-loop then performs 4 fused multiply-adds per store to `s`,
-/// quartering the dominant write traffic — see EXPERIMENTS.md §Perf for
-/// the measured before/after (~7 -> ~17 GFLOP/s on this box).
-pub fn rank_update_dense(s: &mut Mat, x: &[f32], n: usize, k: usize, a: &[f32]) {
-    debug_assert_eq!(s.rows, k);
+/// Dispatches once per process to the widest kernel the CPU supports.
+/// All paths produce the same result up to f32 accumulation order
+/// (rank-8 FMA vs rank-4 separate multiply-add); within one process the
+/// path is fixed, so repeated calls are bit-reproducible.
+pub fn rank_update_dense(s: &mut SymPacked, x: &[f32], n: usize, k: usize, a: &[f32]) {
+    debug_assert_eq!(s.dim(), k);
+    debug_assert_eq!(x.len(), n * k);
+    debug_assert_eq!(a.len(), n);
+    #[cfg(target_arch = "x86_64")]
+    {
+        if active_isa() == KernelIsa::Avx2Fma {
+            // SAFETY: active_isa verified avx2+fma; slice lengths are
+            // checked by the debug asserts above and rechecked inside.
+            unsafe { rank_update_dense_avx2(&mut s.data, x, n, k, a) };
+            return;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if active_isa() == KernelIsa::Neon {
+            rank_update_dense_neon(&mut s.data, x, n, k, a);
+            return;
+        }
+    }
+    rank_update_dense_scalar(s, x, n, k, a);
+}
+
+/// The portable scalar path: rows are processed four at a time (a
+/// rank-4 SYRK micro-kernel), so the inner j-loop performs 4 fused
+/// multiply-adds per store to `s`, quartering the dominant write
+/// traffic — see EXPERIMENTS.md §Perf. Public so benches and property
+/// tests can compare it against the dispatched path on any machine.
+pub fn rank_update_dense_scalar(s: &mut SymPacked, x: &[f32], n: usize, k: usize, a: &[f32]) {
+    debug_assert_eq!(s.dim(), k);
     debug_assert_eq!(x.len(), n * k);
     debug_assert_eq!(a.len(), n);
     let sd = &mut s.data;
@@ -34,7 +69,8 @@ pub fn rank_update_dense(s: &mut Mat, x: &[f32], n: usize, k: usize, a: &[f32]) 
             let w1 = a1 * r1[i];
             let w2 = a2 * r2[i];
             let w3 = a3 * r3[i];
-            let dst = &mut sd[i * k..i * k + i + 1];
+            let off = SymPacked::row_offset(i);
+            let dst = &mut sd[off..off + i + 1];
             let (s0, s1, s2, s3) = (&r0[..=i], &r1[..=i], &r2[..=i], &r3[..=i]);
             // zip chain keeps bounds checks out of the loop body so the
             // compiler emits one fused SIMD stream
@@ -56,7 +92,8 @@ pub fn rank_update_dense(s: &mut Mat, x: &[f32], n: usize, k: usize, a: &[f32]) 
             if w == 0.0 {
                 continue;
             }
-            let dst = &mut sd[i * k..i * k + i + 1];
+            let off = SymPacked::row_offset(i);
+            let dst = &mut sd[off..off + i + 1];
             let src = &row[..i + 1];
             for (d_, s_) in dst.iter_mut().zip(src) {
                 *d_ += w * s_;
@@ -65,18 +102,228 @@ pub fn rank_update_dense(s: &mut Mat, x: &[f32], n: usize, k: usize, a: &[f32]) 
     }
 }
 
+/// AVX2+FMA rank-8 kernel. The output rows are walked in L2-sized
+/// tiles (`TILE_FLOATS` packed floats ≈ 192 KB) so each tile of `s`
+/// stays cache-resident across the whole pass over the data block —
+/// for large k the packed matrix no longer fits L2 and an untiled loop
+/// would stream it from L3 once per 8 rows of data.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn rank_update_dense_avx2(sd: &mut [f32], x: &[f32], n: usize, k: usize, a: &[f32]) {
+    // SAFETY (caller): requires avx2+fma; sd.len() == k(k+1)/2,
+    // x.len() == n*k, a.len() == n. All pointer arithmetic below stays
+    // inside those bounds: row pointers r0..r7 index < k, dst indexes
+    // < off(i) + i + 1 <= sd.len().
+    use std::arch::x86_64::*;
+    const TILE_FLOATS: usize = 48 * 1024; // 192 KB of packed dst per tile
+    let xp = x.as_ptr();
+    let sp = sd.as_mut_ptr();
+    let mut i0 = 0usize;
+    while i0 < k {
+        // grow the tile [i0, i1) until it holds ~TILE_FLOATS packed floats
+        let mut i1 = i0;
+        let mut fl = 0usize;
+        while i1 < k {
+            let rowlen = i1 + 1;
+            if fl + rowlen > TILE_FLOATS && i1 > i0 {
+                break;
+            }
+            fl += rowlen;
+            i1 += 1;
+        }
+        let blocks = n / 8;
+        for blk in 0..blocks {
+            let d = blk * 8;
+            if a[d] == 0.0
+                && a[d + 1] == 0.0
+                && a[d + 2] == 0.0
+                && a[d + 3] == 0.0
+                && a[d + 4] == 0.0
+                && a[d + 5] == 0.0
+                && a[d + 6] == 0.0
+                && a[d + 7] == 0.0
+            {
+                continue;
+            }
+            let r0 = xp.add(d * k);
+            let r1 = xp.add((d + 1) * k);
+            let r2 = xp.add((d + 2) * k);
+            let r3 = xp.add((d + 3) * k);
+            let r4 = xp.add((d + 4) * k);
+            let r5 = xp.add((d + 5) * k);
+            let r6 = xp.add((d + 6) * k);
+            let r7 = xp.add((d + 7) * k);
+            for i in i0..i1 {
+                let w0 = a[d] * *r0.add(i);
+                let w1 = a[d + 1] * *r1.add(i);
+                let w2 = a[d + 2] * *r2.add(i);
+                let w3 = a[d + 3] * *r3.add(i);
+                let w4 = a[d + 4] * *r4.add(i);
+                let w5 = a[d + 5] * *r5.add(i);
+                let w6 = a[d + 6] * *r6.add(i);
+                let w7 = a[d + 7] * *r7.add(i);
+                let wv0 = _mm256_set1_ps(w0);
+                let wv1 = _mm256_set1_ps(w1);
+                let wv2 = _mm256_set1_ps(w2);
+                let wv3 = _mm256_set1_ps(w3);
+                let wv4 = _mm256_set1_ps(w4);
+                let wv5 = _mm256_set1_ps(w5);
+                let wv6 = _mm256_set1_ps(w6);
+                let wv7 = _mm256_set1_ps(w7);
+                let dst = sp.add(SymPacked::row_offset(i));
+                let len = i + 1;
+                let mut j = 0usize;
+                while j + 8 <= len {
+                    let mut acc = _mm256_loadu_ps(dst.add(j));
+                    acc = _mm256_fmadd_ps(wv0, _mm256_loadu_ps(r0.add(j)), acc);
+                    acc = _mm256_fmadd_ps(wv1, _mm256_loadu_ps(r1.add(j)), acc);
+                    acc = _mm256_fmadd_ps(wv2, _mm256_loadu_ps(r2.add(j)), acc);
+                    acc = _mm256_fmadd_ps(wv3, _mm256_loadu_ps(r3.add(j)), acc);
+                    acc = _mm256_fmadd_ps(wv4, _mm256_loadu_ps(r4.add(j)), acc);
+                    acc = _mm256_fmadd_ps(wv5, _mm256_loadu_ps(r5.add(j)), acc);
+                    acc = _mm256_fmadd_ps(wv6, _mm256_loadu_ps(r6.add(j)), acc);
+                    acc = _mm256_fmadd_ps(wv7, _mm256_loadu_ps(r7.add(j)), acc);
+                    _mm256_storeu_ps(dst.add(j), acc);
+                    j += 8;
+                }
+                while j < len {
+                    *dst.add(j) += w0 * *r0.add(j)
+                        + w1 * *r1.add(j)
+                        + w2 * *r2.add(j)
+                        + w3 * *r3.add(j)
+                        + w4 * *r4.add(j)
+                        + w5 * *r5.add(j)
+                        + w6 * *r6.add(j)
+                        + w7 * *r7.add(j);
+                    j += 1;
+                }
+            }
+        }
+        // remainder rows of the data block: rank-1 updates
+        for d in blocks * 8..n {
+            let ad = a[d];
+            if ad == 0.0 {
+                continue;
+            }
+            let row = xp.add(d * k);
+            for i in i0..i1 {
+                let w = ad * *row.add(i);
+                if w == 0.0 {
+                    continue;
+                }
+                let wv = _mm256_set1_ps(w);
+                let dst = sp.add(SymPacked::row_offset(i));
+                let len = i + 1;
+                let mut j = 0usize;
+                while j + 8 <= len {
+                    let acc = _mm256_fmadd_ps(
+                        wv,
+                        _mm256_loadu_ps(row.add(j)),
+                        _mm256_loadu_ps(dst.add(j)),
+                    );
+                    _mm256_storeu_ps(dst.add(j), acc);
+                    j += 8;
+                }
+                while j < len {
+                    *dst.add(j) += w * *row.add(j);
+                    j += 1;
+                }
+            }
+        }
+        i0 = i1;
+    }
+}
+
+/// NEON rank-4 kernel (128-bit lanes; NEON is baseline on aarch64).
+#[cfg(target_arch = "aarch64")]
+fn rank_update_dense_neon(sd: &mut [f32], x: &[f32], n: usize, k: usize, a: &[f32]) {
+    use std::arch::aarch64::*;
+    let xp = x.as_ptr();
+    let sp = sd.as_mut_ptr();
+    let blocks = n / 4;
+    // SAFETY: NEON is baseline on aarch64; pointer arithmetic mirrors
+    // the scalar kernel's slice bounds (sd.len() == k(k+1)/2,
+    // x.len() == n*k, a.len() == n).
+    unsafe {
+        for blk in 0..blocks {
+            let d = blk * 4;
+            if a[d] == 0.0 && a[d + 1] == 0.0 && a[d + 2] == 0.0 && a[d + 3] == 0.0 {
+                continue;
+            }
+            let r0 = xp.add(d * k);
+            let r1 = xp.add((d + 1) * k);
+            let r2 = xp.add((d + 2) * k);
+            let r3 = xp.add((d + 3) * k);
+            for i in 0..k {
+                let w0 = a[d] * *r0.add(i);
+                let w1 = a[d + 1] * *r1.add(i);
+                let w2 = a[d + 2] * *r2.add(i);
+                let w3 = a[d + 3] * *r3.add(i);
+                let wv0 = vdupq_n_f32(w0);
+                let wv1 = vdupq_n_f32(w1);
+                let wv2 = vdupq_n_f32(w2);
+                let wv3 = vdupq_n_f32(w3);
+                let dst = sp.add(SymPacked::row_offset(i));
+                let len = i + 1;
+                let mut j = 0usize;
+                while j + 4 <= len {
+                    let mut acc = vld1q_f32(dst.add(j));
+                    acc = vfmaq_f32(acc, wv0, vld1q_f32(r0.add(j)));
+                    acc = vfmaq_f32(acc, wv1, vld1q_f32(r1.add(j)));
+                    acc = vfmaq_f32(acc, wv2, vld1q_f32(r2.add(j)));
+                    acc = vfmaq_f32(acc, wv3, vld1q_f32(r3.add(j)));
+                    vst1q_f32(dst.add(j), acc);
+                    j += 4;
+                }
+                while j < len {
+                    *dst.add(j) +=
+                        w0 * *r0.add(j) + w1 * *r1.add(j) + w2 * *r2.add(j) + w3 * *r3.add(j);
+                    j += 1;
+                }
+            }
+        }
+        for d in blocks * 4..n {
+            let ad = a[d];
+            if ad == 0.0 {
+                continue;
+            }
+            let row = xp.add(d * k);
+            for i in 0..k {
+                let w = ad * *row.add(i);
+                if w == 0.0 {
+                    continue;
+                }
+                let wv = vdupq_n_f32(w);
+                let dst = sp.add(SymPacked::row_offset(i));
+                let len = i + 1;
+                let mut j = 0usize;
+                while j + 4 <= len {
+                    let acc = vfmaq_f32(vld1q_f32(dst.add(j)), wv, vld1q_f32(row.add(j)));
+                    vst1q_f32(dst.add(j), acc);
+                    j += 4;
+                }
+                while j < len {
+                    *dst.add(j) += w * *row.add(j);
+                    j += 1;
+                }
+            }
+        }
+    }
+}
+
 /// Sparse rank-1 updates: rows given as (indices, values) pairs.
 /// `S[i, j] += a_d v_i v_j` for every nonzero pair with `j <= i`.
-pub fn rank_update_sparse(s: &mut Mat, idx: &[u32], val: &[f32], a_d: f32) {
+/// Gather/scatter-shaped, so it stays scalar on every ISA; the f32
+/// order is unchanged from the pre-packed kernel.
+pub fn rank_update_sparse(s: &mut SymPacked, idx: &[u32], val: &[f32], a_d: f32) {
     debug_assert_eq!(idx.len(), val.len());
     if a_d == 0.0 {
         return;
     }
-    let k = s.cols;
     let sd = &mut s.data;
     for (p, &ip) in idx.iter().enumerate() {
         let w = a_d * val[p];
-        let base = ip as usize * k;
+        let base = SymPacked::row_offset(ip as usize);
         // CSR indices are sorted, so idx[..=p] are all <= ip
         for q in 0..=p {
             sd[base + idx[q] as usize] += w * val[q];
@@ -84,7 +331,7 @@ pub fn rank_update_sparse(s: &mut Mat, idx: &[u32], val: &[f32], a_d: f32) {
     }
 }
 
-/// Mirror the lower triangle into the upper.
+/// Mirror the lower triangle of a full `Mat` into the upper.
 pub fn symmetrize_from_lower(s: &mut Mat) {
     assert_eq!(s.rows, s.cols);
     let k = s.rows;
@@ -118,11 +365,32 @@ mod tests {
         let mut g = Pcg64::new(5);
         let x: Vec<f32> = (0..n * k).map(|_| g.next_f32() - 0.5).collect();
         let a: Vec<f32> = (0..n).map(|_| g.next_f32() * 3.0).collect();
-        let mut s = Mat::zeros(k, k);
+        let mut s = SymPacked::zeros(k);
         rank_update_dense(&mut s, &x, n, k, &a);
-        symmetrize_from_lower(&mut s);
+        let full = s.unpack();
         let want = naive(&x, n, k, &a);
-        assert!(s.max_abs_diff(&want) < 1e-4, "{}", s.max_abs_diff(&want));
+        assert!(full.max_abs_diff(&want) < 1e-4, "{}", full.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn dispatched_matches_scalar_under_tolerance() {
+        // the accumulation order differs (rank-8 FMA vs rank-4), so
+        // compare under a relative bound, not bit-equality
+        let (n, k) = (53, 17);
+        let mut g = Pcg64::new(11);
+        let x: Vec<f32> = (0..n * k).map(|_| g.next_f32() * 2.0 - 1.0).collect();
+        let a: Vec<f32> = (0..n).map(|_| g.next_f32()).collect();
+        let mut fast = SymPacked::zeros(k);
+        rank_update_dense(&mut fast, &x, n, k, &a);
+        let mut slow = SymPacked::zeros(k);
+        rank_update_dense_scalar(&mut slow, &x, n, k, &a);
+        let scale = slow.data.iter().fold(1f32, |m, &v| m.max(v.abs()));
+        assert!(
+            fast.max_abs_diff(&slow) < 1e-4 * scale,
+            "isa={} diff={}",
+            active_isa().name(),
+            fast.max_abs_diff(&slow)
+        );
     }
 
     #[test]
@@ -136,12 +404,10 @@ mod tests {
         for (i, v) in idx.iter().zip(&val) {
             dense_row[*i as usize] = *v;
         }
-        let mut s1 = Mat::zeros(k, k);
+        let mut s1 = SymPacked::zeros(k);
         rank_update_sparse(&mut s1, &idx, &val, a_d);
-        symmetrize_from_lower(&mut s1);
-        let mut s2 = Mat::zeros(k, k);
+        let mut s2 = SymPacked::zeros(k);
         rank_update_dense(&mut s2, &dense_row, 1, k, &[a_d]);
-        symmetrize_from_lower(&mut s2);
         assert!(s1.max_abs_diff(&s2) < 1e-6);
     }
 
@@ -149,7 +415,7 @@ mod tests {
     fn zero_weight_rows_skipped() {
         let k = 4;
         let x = vec![1.0f32; 2 * k];
-        let mut s = Mat::zeros(k, k);
+        let mut s = SymPacked::zeros(k);
         rank_update_dense(&mut s, &x, 2, k, &[0.0, 0.0]);
         assert!(s.data.iter().all(|&v| v == 0.0));
     }

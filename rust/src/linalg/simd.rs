@@ -1,0 +1,300 @@
+//! Runtime ISA dispatch for the hot kernels.
+//!
+//! The native backend picks one of three code paths once per process
+//! (first use, cached in a `OnceLock`): AVX2+FMA on x86_64 when the CPU
+//! reports both features, NEON on aarch64 (baseline there), or the
+//! portable scalar path everywhere else. The scalar implementations are
+//! the pre-SIMD kernels, kept callable so benches and property tests
+//! can compare paths on the same machine.
+//!
+//! Numerical contract: `axpy` vectorizes element-wise multiply-then-add
+//! (no FMA contraction, no reassociation), so it stays bit-identical to
+//! the scalar loop — the serving layer relies on that (`model::
+//! class_scores_block` must equal `class_scores` exactly). `dot` and the
+//! rank-update kernels may reassociate the sum, so callers compare them
+//! under tolerance, never bit-equality.
+
+use std::sync::OnceLock;
+
+/// Which micro-kernel family `active_isa` selected for this process.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelIsa {
+    /// x86_64 with AVX2 and FMA (256-bit, fused multiply-add).
+    Avx2Fma,
+    /// aarch64 NEON (128-bit; baseline on that architecture).
+    Neon,
+    /// Portable fallback: the pre-SIMD unrolled scalar kernels.
+    Scalar,
+}
+
+impl KernelIsa {
+    /// Short stable name for logs and bench output.
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelIsa::Avx2Fma => "avx2+fma",
+            KernelIsa::Neon => "neon",
+            KernelIsa::Scalar => "scalar",
+        }
+    }
+}
+
+static ISA: OnceLock<KernelIsa> = OnceLock::new();
+
+/// The ISA path the kernels will use, detected once per process.
+pub fn active_isa() -> KernelIsa {
+    *ISA.get_or_init(detect)
+}
+
+fn detect() -> KernelIsa {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma")
+        {
+            return KernelIsa::Avx2Fma;
+        }
+    }
+    if cfg!(target_arch = "aarch64") {
+        KernelIsa::Neon
+    } else {
+        KernelIsa::Scalar
+    }
+}
+
+/// Dot product, dispatched to the active ISA. The vector paths use
+/// multiple accumulators, so the f32 sum order differs from
+/// [`dot_scalar`]; agreement is tolerance-level, not bit-level.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if active_isa() == KernelIsa::Avx2Fma {
+            // SAFETY: active_isa verified avx2+fma on this CPU.
+            return unsafe { dot_avx2(a, b) };
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if active_isa() == KernelIsa::Neon {
+            return dot_neon(a, b);
+        }
+    }
+    dot_scalar(a, b)
+}
+
+/// Scalar dot product with 4-way unrolling (the pre-SIMD kernel; the
+/// compiler autovectorizes this shape reliably).
+#[inline]
+pub fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
+    let chunks = n / 4;
+    for i in 0..chunks {
+        let j = i * 4;
+        s0 += a[j] * b[j];
+        s1 += a[j + 1] * b[j + 1];
+        s2 += a[j + 2] * b[j + 2];
+        s3 += a[j + 3] * b[j + 3];
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for j in chunks * 4..n {
+        s += a[j] * b[j];
+    }
+    s
+}
+
+/// a += alpha * b (axpy), dispatched to the active ISA. Every path
+/// computes `a[i] + (alpha * b[i])` element-wise with both operations
+/// rounded separately (multiply then add, never fused), so the result
+/// is bit-identical across ISAs and to [`axpy_scalar`].
+#[inline]
+pub fn axpy(alpha: f32, b: &[f32], a: &mut [f32]) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if active_isa() == KernelIsa::Avx2Fma {
+            // SAFETY: active_isa verified avx2 on this CPU.
+            unsafe { axpy_avx2(alpha, b, a) };
+            return;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if active_isa() == KernelIsa::Neon {
+            axpy_neon(alpha, b, a);
+            return;
+        }
+    }
+    axpy_scalar(alpha, b, a);
+}
+
+/// Scalar axpy: `a[i] += alpha * b[i]`.
+#[inline]
+pub fn axpy_scalar(alpha: f32, b: &[f32], a: &mut [f32]) {
+    for (ai, bi) in a.iter_mut().zip(b) {
+        *ai += alpha * bi;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn dot_avx2(a: &[f32], b: &[f32]) -> f32 {
+    // SAFETY (caller): requires avx2+fma. Pointer reads stay inside the
+    // first min(a.len(), b.len()) elements of both slices.
+    use std::arch::x86_64::*;
+    let n = a.len().min(b.len());
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    let mut acc0 = _mm256_setzero_ps();
+    let mut acc1 = _mm256_setzero_ps();
+    let mut acc2 = _mm256_setzero_ps();
+    let mut acc3 = _mm256_setzero_ps();
+    let mut j = 0usize;
+    while j + 32 <= n {
+        acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(j)), _mm256_loadu_ps(bp.add(j)), acc0);
+        acc1 = _mm256_fmadd_ps(
+            _mm256_loadu_ps(ap.add(j + 8)),
+            _mm256_loadu_ps(bp.add(j + 8)),
+            acc1,
+        );
+        acc2 = _mm256_fmadd_ps(
+            _mm256_loadu_ps(ap.add(j + 16)),
+            _mm256_loadu_ps(bp.add(j + 16)),
+            acc2,
+        );
+        acc3 = _mm256_fmadd_ps(
+            _mm256_loadu_ps(ap.add(j + 24)),
+            _mm256_loadu_ps(bp.add(j + 24)),
+            acc3,
+        );
+        j += 32;
+    }
+    while j + 8 <= n {
+        acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(j)), _mm256_loadu_ps(bp.add(j)), acc0);
+        j += 8;
+    }
+    let acc = _mm256_add_ps(_mm256_add_ps(acc0, acc1), _mm256_add_ps(acc2, acc3));
+    let mut lanes = [0f32; 8];
+    _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+    let mut s = ((lanes[0] + lanes[1]) + (lanes[2] + lanes[3]))
+        + ((lanes[4] + lanes[5]) + (lanes[6] + lanes[7]));
+    while j < n {
+        s += *ap.add(j) * *bp.add(j);
+        j += 1;
+    }
+    s
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_avx2(alpha: f32, b: &[f32], a: &mut [f32]) {
+    // SAFETY (caller): requires avx2. Pointer accesses stay inside the
+    // first min(a.len(), b.len()) elements of both slices. Uses
+    // mul-then-add (NOT fmadd) to keep bit-identity with axpy_scalar.
+    use std::arch::x86_64::*;
+    let n = a.len().min(b.len());
+    let al = _mm256_set1_ps(alpha);
+    let ap = a.as_mut_ptr();
+    let bp = b.as_ptr();
+    let mut j = 0usize;
+    while j + 8 <= n {
+        let v = _mm256_add_ps(
+            _mm256_loadu_ps(ap.add(j)),
+            _mm256_mul_ps(al, _mm256_loadu_ps(bp.add(j))),
+        );
+        _mm256_storeu_ps(ap.add(j), v);
+        j += 8;
+    }
+    while j < n {
+        *ap.add(j) += alpha * *bp.add(j);
+        j += 1;
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn dot_neon(a: &[f32], b: &[f32]) -> f32 {
+    use std::arch::aarch64::*;
+    let n = a.len().min(b.len());
+    // SAFETY: NEON is baseline on aarch64; reads stay inside the first
+    // n elements of both slices.
+    unsafe {
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let mut acc0 = vdupq_n_f32(0.0);
+        let mut acc1 = vdupq_n_f32(0.0);
+        let mut j = 0usize;
+        while j + 8 <= n {
+            acc0 = vfmaq_f32(acc0, vld1q_f32(ap.add(j)), vld1q_f32(bp.add(j)));
+            acc1 = vfmaq_f32(acc1, vld1q_f32(ap.add(j + 4)), vld1q_f32(bp.add(j + 4)));
+            j += 8;
+        }
+        let mut s = vaddvq_f32(vaddq_f32(acc0, acc1));
+        while j < n {
+            s += *ap.add(j) * *bp.add(j);
+            j += 1;
+        }
+        s
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn axpy_neon(alpha: f32, b: &[f32], a: &mut [f32]) {
+    use std::arch::aarch64::*;
+    let n = a.len().min(b.len());
+    // SAFETY: NEON is baseline on aarch64; accesses stay inside the
+    // first n elements of both slices. vmulq + vaddq (not vfmaq) keeps
+    // bit-identity with axpy_scalar.
+    unsafe {
+        let ap = a.as_mut_ptr();
+        let bp = b.as_ptr();
+        let al = vdupq_n_f32(alpha);
+        let mut j = 0usize;
+        while j + 4 <= n {
+            let v = vaddq_f32(vld1q_f32(ap.add(j)), vmulq_f32(al, vld1q_f32(bp.add(j))));
+            vst1q_f32(ap.add(j), v);
+            j += 4;
+        }
+        while j < n {
+            *ap.add(j) += alpha * *bp.add(j);
+            j += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq(n: usize, scale: f32, off: f32) -> Vec<f32> {
+        (0..n).map(|i| off + (i as f32) * scale).collect()
+    }
+
+    #[test]
+    fn detect_is_stable() {
+        assert_eq!(active_isa(), active_isa());
+    }
+
+    #[test]
+    fn dot_dispatched_matches_scalar_under_tolerance() {
+        // lengths straddling every unroll boundary, incl. 0 and tails
+        for n in [0usize, 1, 3, 4, 7, 8, 9, 31, 32, 33, 100, 257] {
+            let a = seq(n, 0.013, -0.7);
+            let b = seq(n, -0.029, 1.1);
+            let want = dot_scalar(&a, &b);
+            let got = dot(&a, &b);
+            let tol = 1e-4 * (1.0 + want.abs());
+            assert!((got - want).abs() <= tol, "n={n}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn axpy_dispatched_is_bit_identical_to_scalar() {
+        for n in [0usize, 1, 3, 4, 5, 8, 9, 17, 64, 131] {
+            let b = seq(n, 0.37, -2.0);
+            let mut a1 = seq(n, -0.11, 0.5);
+            let mut a2 = a1.clone();
+            axpy(1.7, &b, &mut a1);
+            axpy_scalar(1.7, &b, &mut a2);
+            assert_eq!(a1, a2, "n={n}");
+        }
+    }
+}

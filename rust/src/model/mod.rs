@@ -279,15 +279,15 @@ mod tests {
     fn rmse_of_true_weights_small() {
         let ds = synth::year_like(2000, 10, 4);
         // least squares fit via normal equations as a sanity reference
-        let mut a = Mat::zeros(10, 10);
+        let mut packed = crate::linalg::SymPacked::zeros(10);
         let mut b = vec![0f32; 10];
         let mut buf = vec![0f32; 10];
         for d in 0..ds.n {
             ds.densify_row(d, &mut buf);
-            crate::linalg::rank_update_dense(&mut a, &buf, 1, 10, &[1.0]);
+            crate::linalg::rank_update_dense(&mut packed, &buf, 1, 10, &[1.0]);
             crate::linalg::axpy(ds.labels[d], &buf, &mut b);
         }
-        crate::linalg::symmetrize_from_lower(&mut a);
+        let mut a = packed.unpack();
         a.add_scaled_eye(1.0);
         let w = crate::linalg::solve_cholesky(&mut a, &b).unwrap();
         assert!(rmse(&ds, &w) < 0.6);

@@ -169,6 +169,7 @@ mod tests {
         let (kds, gram) = gram_dataset(&train, &cfg);
         // one EM pass chain to fit omega
         let mut omega = vec![0f32; 4];
+        let mut ws = crate::solver::local::StepWorkspace::new();
         for _ in 0..30 {
             let mut st = crate::solver::PartialStats::zeros(4);
             crate::solver::local::lin_step(
@@ -177,6 +178,7 @@ mod tests {
                 &omega,
                 1e-5,
                 &mut crate::solver::GammaMode::Em,
+                &mut ws,
                 &mut st,
             );
             omega = crate::solver::master::solve_native(

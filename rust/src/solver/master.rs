@@ -4,9 +4,7 @@
 
 use anyhow::{Context, Result};
 
-use crate::linalg::{
-    cholesky_in_place, solve_lower, solve_upper, symmetrize_from_lower, Mat,
-};
+use crate::linalg::{cholesky_in_place, solve_lower, solve_upper, Mat};
 
 use super::PartialStats;
 
@@ -17,28 +15,31 @@ pub enum Regularizer<'a> {
     Gram { lambda: f32, gram: &'a Mat },
 }
 
-/// Solve the master step in place (destroys `stats.sigma`). `mc_noise`
-/// is a pre-drawn N(0, I) vector for the MC posterior sample; None = EM.
+/// Solve the master step. The packed `stats.sigma` is unpacked into a
+/// full working matrix exactly once here (the only place the full
+/// `k x k` form ever materializes); `stats` itself is left intact.
+/// `mc_noise` is a pre-drawn N(0, I) vector for the MC posterior
+/// sample; None = EM.
 pub fn solve_native(
     stats: &mut PartialStats,
     reg: &Regularizer,
     mc_noise: Option<&[f32]>,
 ) -> Result<Vec<f32>> {
     let k = stats.mu.len();
-    symmetrize_from_lower(&mut stats.sigma);
+    let mut a = stats.sigma.unpack();
     match reg {
-        Regularizer::Eye(lam) => stats.sigma.add_scaled_eye(*lam),
-        Regularizer::Gram { lambda, gram } => stats.sigma.add_scaled(*lambda, gram),
+        Regularizer::Eye(lam) => a.add_scaled_eye(*lam),
+        Regularizer::Gram { lambda, gram } => a.add_scaled(*lambda, gram),
     }
     // The gamma clamp lets Sigma^-1 reach condition numbers ~1/eps^2; in
     // f32 that can round a (mathematically SPD) matrix indefinite,
     // especially for KRN grams. Retry with escalating diagonal jitter —
     // statistically this only smooths the near-zero-margin directions.
-    let mean_diag = (0..k).map(|i| stats.sigma[(i, i)] as f64).sum::<f64>() / k.max(1) as f64;
-    let pristine = stats.sigma.clone();
+    let mean_diag = (0..k).map(|i| a[(i, i)] as f64).sum::<f64>() / k.max(1) as f64;
+    let pristine = a.clone();
     let mut jitter = 0f64;
     loop {
-        match cholesky_in_place(&mut stats.sigma) {
+        match cholesky_in_place(&mut a) {
             Ok(()) => break,
             Err(e) => {
                 jitter = if jitter == 0.0 { mean_diag * 1e-6 } else { jitter * 100.0 };
@@ -47,12 +48,12 @@ pub fn solve_native(
                         "master solve: Sigma^-1 not positive definite (lambda too small?)",
                     );
                 }
-                stats.sigma = pristine.clone();
-                stats.sigma.add_scaled_eye(jitter as f32);
+                a = pristine.clone();
+                a.add_scaled_eye(jitter as f32);
             }
         }
     }
-    let l = &stats.sigma;
+    let l = &a;
     let mut y = vec![0f32; k];
     let mut w = vec![0f32; k];
     solve_lower(l, &stats.mu, &mut y);
@@ -74,7 +75,12 @@ mod tests {
     use crate::rng::{NormalSource, Pcg64};
 
     fn stats_from(sigma_lower: Mat, mu: Vec<f32>) -> PartialStats {
-        PartialStats { sigma: sigma_lower, mu, obj: 0.0, aux: 0.0 }
+        PartialStats {
+            sigma: crate::linalg::SymPacked::from_mat_lower(&sigma_lower),
+            mu,
+            obj: 0.0,
+            aux: 0.0,
+        }
     }
 
     #[test]

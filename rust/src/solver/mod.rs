@@ -12,16 +12,18 @@ pub mod master;
 
 pub use gamma::GammaMode;
 pub use kernel::{gram_dataset, gram_matrix, KernelModel};
+pub use local::StepWorkspace;
 pub use master::{solve_native, Regularizer};
 
-use crate::linalg::Mat;
+use crate::linalg::SymPacked;
 
 /// A worker's partial statistics for one iteration (Eq. 40):
-/// `sigma` accumulates only the lower triangle until the master
-/// symmetrizes it.
+/// `sigma` holds only the lower triangle, packed (`k(k+1)/2` floats) —
+/// that is all a worker ever fills and all the reduce ever ships; the
+/// master unpacks it exactly once per solve.
 #[derive(Clone, Debug)]
 pub struct PartialStats {
-    pub sigma: Mat,
+    pub sigma: SymPacked,
     pub mu: Vec<f32>,
     /// sum of the per-datum loss at the *current* weights
     pub obj: f64,
@@ -32,7 +34,7 @@ pub struct PartialStats {
 
 impl PartialStats {
     pub fn zeros(k: usize) -> Self {
-        PartialStats { sigma: Mat::zeros(k, k), mu: vec![0.0; k], obj: 0.0, aux: 0.0 }
+        PartialStats { sigma: SymPacked::zeros(k), mu: vec![0.0; k], obj: 0.0, aux: 0.0 }
     }
 
     pub fn reset(&mut self) {

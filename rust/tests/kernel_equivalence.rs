@@ -1,0 +1,169 @@
+//! Property tests for the SIMD compute core: the dispatched rank-update
+//! kernel, the scalar fallback, and a naive O(n k^2) reference must
+//! agree within tight tolerance across awkward shapes (row counts that
+//! miss every unroll width, tiny and odd k, zero-weight rows), and the
+//! packed-triangular statistics must round-trip against full matrices.
+//!
+//! CI runs this file as the kernel-equivalence smoke step, so it must
+//! pass on whatever ISA the runner dispatches to (the scalar fallback
+//! makes it trivially true where no SIMD path exists).
+
+use pemsvm::linalg::{
+    active_isa, axpy, axpy_scalar, dot, dot_scalar, rank_update_dense, rank_update_dense_scalar,
+    rank_update_sparse, Mat, SymPacked,
+};
+use pemsvm::rng::Pcg64;
+
+/// Reference Sigma += sum_d a_d x_d x_d^T, computed naively in the
+/// full matrix then packed.
+fn naive(x: &[f32], n: usize, k: usize, a: &[f32]) -> SymPacked {
+    let mut s = Mat::zeros(k, k);
+    for d in 0..n {
+        for i in 0..k {
+            for j in 0..=i {
+                s[(i, j)] += a[d] * x[d * k + i] * x[d * k + j];
+            }
+        }
+    }
+    SymPacked::from_mat_lower(&s)
+}
+
+fn random_problem(n: usize, k: usize, seed: u64, zero_rows: bool) -> (Vec<f32>, Vec<f32>) {
+    let mut g = Pcg64::new(seed);
+    let x: Vec<f32> = (0..n * k).map(|_| g.next_f32() * 2.0 - 1.0).collect();
+    let a: Vec<f32> = (0..n)
+        .map(|d| {
+            if zero_rows && d % 3 == 0 {
+                0.0
+            } else {
+                g.next_f32() * 3.0
+            }
+        })
+        .collect();
+    (x, a)
+}
+
+fn assert_close(got: &SymPacked, want: &SymPacked, label: &str) {
+    let scale = want.data.iter().fold(1f32, |m, &v| m.max(v.abs()));
+    let diff = got.max_abs_diff(want);
+    assert!(
+        diff <= 2e-4 * scale,
+        "{label} (isa={}): max diff {diff} > 2e-4 * {scale}",
+        active_isa().name()
+    );
+}
+
+/// The three kernel paths agree on every awkward (n, k) combination:
+/// n missing the rank-4 and rank-8 block widths, k missing every
+/// vector width (1, 3, 17) plus aligned sizes (8, 64).
+#[test]
+fn simd_scalar_naive_agree_on_awkward_shapes() {
+    let mut seed = 100;
+    for &n in &[1usize, 2, 5, 7, 9, 15, 17, 33, 63] {
+        for &k in &[1usize, 3, 8, 17, 64] {
+            for zero_rows in [false, true] {
+                seed += 1;
+                let (x, a) = random_problem(n, k, seed, zero_rows);
+                let want = naive(&x, n, k, &a);
+                let mut fast = SymPacked::zeros(k);
+                rank_update_dense(&mut fast, &x, n, k, &a);
+                assert_close(&fast, &want, &format!("dispatched n={n} k={k} z={zero_rows}"));
+                let mut slow = SymPacked::zeros(k);
+                rank_update_dense_scalar(&mut slow, &x, n, k, &a);
+                assert_close(&slow, &want, &format!("scalar n={n} k={k} z={zero_rows}"));
+            }
+        }
+    }
+}
+
+/// All-zero weights leave the accumulator untouched on every path.
+#[test]
+fn zero_weights_are_exact_noops() {
+    let (n, k) = (13usize, 17usize);
+    let (x, _) = random_problem(n, k, 9, false);
+    let a = vec![0f32; n];
+    let mut s = SymPacked::zeros(k);
+    rank_update_dense(&mut s, &x, n, k, &a);
+    assert!(s.data.iter().all(|&v| v == 0.0));
+    let mut s2 = SymPacked::zeros(k);
+    rank_update_dense_scalar(&mut s2, &x, n, k, &a);
+    assert!(s2.data.iter().all(|&v| v == 0.0));
+}
+
+/// The sparse kernel agrees with the dense path run on densified rows.
+#[test]
+fn sparse_matches_densified() {
+    let k = 23usize;
+    let mut g = Pcg64::new(42);
+    let mut packed_sparse = SymPacked::zeros(k);
+    let mut packed_dense = SymPacked::zeros(k);
+    for d in 0..40 {
+        // random sorted subset of 5 indices
+        let mut idx: Vec<u32> = Vec::new();
+        let mut j = (g.next_f32() * 3.0) as u32;
+        while (j as usize) < k && idx.len() < 5 {
+            idx.push(j);
+            j += 1 + (g.next_f32() * 5.0) as u32;
+        }
+        let val: Vec<f32> = idx.iter().map(|_| g.next_f32() * 2.0 - 1.0).collect();
+        let a_d = g.next_f32() * (if d % 4 == 0 { 0.0 } else { 1.0 });
+        rank_update_sparse(&mut packed_sparse, &idx, &val, a_d);
+        let mut row = vec![0f32; k];
+        for (p, &i) in idx.iter().enumerate() {
+            row[i as usize] = val[p];
+        }
+        rank_update_dense(&mut packed_dense, &row, 1, k, &[a_d]);
+    }
+    assert_close(&packed_sparse, &packed_dense, "sparse vs densified");
+}
+
+/// pack -> merge -> unpack == add_assign on full matrices, exactly.
+#[test]
+fn packed_merge_roundtrips_against_mat() {
+    for &k in &[1usize, 3, 8, 17, 64] {
+        let mut g = Pcg64::new(k as u64 + 500);
+        let mut ma = Mat::zeros(k, k);
+        let mut mb = Mat::zeros(k, k);
+        for i in 0..k {
+            for j in 0..=i {
+                let (va, vb) = (g.next_f32() - 0.5, g.next_f32() - 0.5);
+                ma[(i, j)] = va;
+                ma[(j, i)] = va;
+                mb[(i, j)] = vb;
+                mb[(j, i)] = vb;
+            }
+        }
+        let mut pa = SymPacked::from_mat_lower(&ma);
+        let pb = SymPacked::from_mat_lower(&mb);
+        pa.add_assign(&pb);
+        let mut want = ma.clone();
+        want.add_assign(&mb);
+        let got = pa.unpack();
+        assert_eq!(got.data, want.data, "k={k}");
+        // and packing the unpacked sum is lossless
+        assert_eq!(SymPacked::from_mat_lower(&got), pa, "k={k} repack");
+    }
+}
+
+/// Dispatched dot agrees with the scalar dot under tolerance, and
+/// dispatched axpy is bit-identical to the scalar axpy (the serving
+/// layer's bit-identity contract rides on the latter).
+#[test]
+fn dot_and_axpy_paths_agree() {
+    for &len in &[0usize, 1, 3, 7, 8, 9, 17, 31, 32, 33, 64, 127, 250] {
+        let mut g = Pcg64::new(len as u64 + 77);
+        let a: Vec<f32> = (0..len).map(|_| g.next_f32() - 0.5).collect();
+        let b: Vec<f32> = (0..len).map(|_| g.next_f32() - 0.5).collect();
+        let want = dot_scalar(&a, &b);
+        let got = dot(&a, &b);
+        assert!(
+            (got - want).abs() <= 1e-4 * (1.0 + want.abs()),
+            "dot len={len}: {got} vs {want}"
+        );
+        let mut y1 = a.clone();
+        let mut y2 = a.clone();
+        axpy(0.731, &b, &mut y1);
+        axpy_scalar(0.731, &b, &mut y2);
+        assert_eq!(y1, y2, "axpy len={len}");
+    }
+}
