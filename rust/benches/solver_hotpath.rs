@@ -1,10 +1,12 @@
 //! §Perf bench: the solver hot path end to end.
 //!
-//! Two sections: (1) the Sigma^p rank-update kernel in GFLOP/s,
+//! Three sections: (1) the Sigma^p rank-update kernel in GFLOP/s,
 //! dispatched-SIMD vs the scalar fallback (the PR-over-PR perf
 //! trajectory number); (2) per-iteration worker-step wall-clock for the
 //! three tasks (CLS / SVR / MLT) at a representative shape, using one
-//! reused [`StepWorkspace`] exactly like the engine loop does.
+//! reused [`StepWorkspace`] exactly like the engine loop does; (3) the
+//! cost of the telemetry layer's per-iteration instrumentation bundle,
+//! asserted < 1% of one CLS iteration (ISSUE acceptance).
 //!
 //! Results are printed AND appended-as-snapshot to `BENCH_solver.json`
 //! at the repo root (one self-contained JSON object; later runs
@@ -115,6 +117,67 @@ fn main() {
     println!("    SVR {:>9.2} ms", svr_it * 1e3);
     println!("    MLT {:>9.2} ms", mlt_it * 1e3);
 
+    // --- section 3: telemetry overhead per iteration ---
+    // Replays exactly what `run_session_traced` adds around one
+    // iteration: two Instant reads, a phase_totals diff, the
+    // weight-delta norm over K weights, a counter inc, six counter
+    // adds, and a histogram observe — all against live registry series.
+    let (tel_per_iter, overhead_pct) = {
+        use pemsvm::metrics::{Metrics, Phase, NPHASES};
+        use pemsvm::telemetry::{self, Counter, Histogram};
+        use std::sync::Arc;
+
+        let reg = telemetry::global();
+        let iters: Arc<Counter> = reg.counter("bench_iterations_total", "");
+        let hist: Arc<Histogram> = reg.histogram("bench_iteration_nanos", "");
+        let phases: Vec<Arc<Counter>> = (0..NPHASES)
+            .map(|i| {
+                reg.counter_labeled(
+                    "bench_phase_nanos_total",
+                    &telemetry::label("phase", ["a", "b", "c", "d", "e", "f"][i]),
+                    "",
+                )
+            })
+            .collect();
+        let mut metrics = Metrics::new();
+        metrics.add(Phase::LocalStats, std::time::Duration::from_micros(3));
+        let w_prev = vec![0.01f32; k];
+        let w_cur = vec![0.02f32; k];
+
+        let tel_reps = 100_000u32;
+        let mut sink = 0f64;
+        let (t_tel, _) = time(|| {
+            for _ in 0..tel_reps {
+                let t0 = std::time::Instant::now();
+                let before = metrics.phase_totals();
+                let cur = std::hint::black_box(&w_cur);
+                let mut acc = 0f64;
+                for (i, &c) in cur.iter().enumerate() {
+                    let d = (c - w_prev[i]) as f64;
+                    acc += d * d;
+                }
+                sink += acc.sqrt();
+                let after = metrics.phase_totals();
+                iters.inc();
+                for (i, c) in phases.iter().enumerate() {
+                    c.add(after[i].saturating_sub(before[i]).as_nanos() as u64);
+                }
+                hist.observe_duration(t0.elapsed());
+            }
+        });
+        std::hint::black_box(sink);
+        let per_iter = t_tel / tel_reps as f64;
+        (per_iter, 100.0 * per_iter / cls_it)
+    };
+    println!(
+        "  telemetry bundle: {:.0} ns/iter = {overhead_pct:.4}% of one CLS iteration",
+        tel_per_iter * 1e9
+    );
+    assert!(
+        overhead_pct < 1.0,
+        "telemetry instrumentation costs {overhead_pct:.3}% of a CLS iteration (budget: 1%)"
+    );
+
     // --- JSON snapshot ---
     let mut rows = String::new();
     for (i, (k, n, gs, gv)) in kernel_rows.iter().enumerate() {
@@ -131,8 +194,10 @@ fn main() {
         "{{\n  \"bench\": \"solver_hotpath\",\n  \"isa\": \"{isa}\",\n  \
          \"scale\": {},\n  \"rank_update\": [{rows}],\n  \
          \"iteration_secs\": {{\"n\": {n}, \"k\": {k}, \"m\": {m}, \
-         \"cls\": {cls_it:.6}, \"svr\": {svr_it:.6}, \"mlt\": {mlt_it:.6}}}\n}}\n",
-        pemsvm::benchutil::scale()
+         \"cls\": {cls_it:.6}, \"svr\": {svr_it:.6}, \"mlt\": {mlt_it:.6}}},\n  \
+         \"telemetry\": {{\"per_iter_nanos\": {:.1}, \"overhead_pct_cls\": {overhead_pct:.5}}}\n}}\n",
+        pemsvm::benchutil::scale(),
+        tel_per_iter * 1e9
     );
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_solver.json");
     match std::fs::write(&path, &json) {

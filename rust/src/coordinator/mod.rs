@@ -18,6 +18,7 @@ use crate::config::{ModelKind, TaskKind, TrainConfig};
 use crate::data::{Dataset, Task};
 use crate::engine::{Cluster, WarmStart};
 use crate::solver::{gram_dataset, KernelModel};
+use crate::telemetry::TraceWriter;
 
 pub use crate::engine::{IterRecord, TrainOutput};
 
@@ -30,6 +31,17 @@ pub fn train(ds: &Dataset, cfg: &TrainConfig) -> Result<TrainOutput> {
 /// Train; when `test` is given, the per-iteration history carries the
 /// held-out metric (accuracy for CLS/MLT, RMSE for SVR).
 pub fn train_full(ds: &Dataset, test: Option<&Dataset>, cfg: &TrainConfig) -> Result<TrainOutput> {
+    train_full_traced(ds, test, cfg, None)
+}
+
+/// [`train_full`] with optional iteration span tracing (DESIGN.md §12):
+/// one JSONL record per iteration through the [`TraceWriter`].
+pub fn train_full_traced(
+    ds: &Dataset,
+    test: Option<&Dataset>,
+    cfg: &TrainConfig,
+    trace: Option<&mut TraceWriter>,
+) -> Result<TrainOutput> {
     // reject a task/dataset mismatch before any work — for KRN the
     // engine's own check would only fire after the O(N^2 K) Gram pass
     match (cfg.task, ds.task) {
@@ -42,18 +54,23 @@ pub fn train_full(ds: &Dataset, test: Option<&Dataset>, cfg: &TrainConfig) -> Re
         if cfg.task != TaskKind::Cls {
             bail!("KRN is implemented for CLS (the paper evaluates KRN-EM-CLS)");
         }
-        return train_kernel(ds, test, cfg);
+        return train_kernel(ds, test, cfg, trace);
     }
     let mut cluster = Cluster::new(ds, cfg)?;
-    cluster.run_session(cfg, test, WarmStart::Cold)
+    cluster.run_session_traced(cfg, test, WarmStart::Cold, trace)
 }
 
 /// KRN: swap in the Gram-row dataset and the Gram regularizer (§3.1),
 /// then reuse the LIN machinery verbatim.
-fn train_kernel(ds: &Dataset, test: Option<&Dataset>, cfg: &TrainConfig) -> Result<TrainOutput> {
+fn train_kernel(
+    ds: &Dataset,
+    test: Option<&Dataset>,
+    cfg: &TrainConfig,
+    trace: Option<&mut TraceWriter>,
+) -> Result<TrainOutput> {
     let (kds, gram) = gram_dataset(ds, &cfg.kernel);
     let mut cluster = Cluster::with_gram(&kds, cfg, Some(Arc::new(gram)))?;
-    let mut out = cluster.run_session(cfg, None, WarmStart::Cold)?;
+    let mut out = cluster.run_session_traced(cfg, None, WarmStart::Cold, trace)?;
     let omega = out.weights.single().to_vec();
     let model = KernelModel { train: ds.clone(), omega, cfg: cfg.kernel };
     if let Some(te) = test {

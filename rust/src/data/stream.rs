@@ -26,9 +26,8 @@ use std::fs::File;
 use std::io::{BufRead, BufReader};
 use std::ops::Range;
 use std::path::Path;
-use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, SyncSender};
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 use std::thread::JoinHandle;
 
 use anyhow::{anyhow, bail, Context, Result};
@@ -36,6 +35,30 @@ use anyhow::{anyhow, bail, Context, Result};
 use super::{libsvm, Dataset, Task};
 use crate::linalg::Mat;
 use crate::model::Weights;
+use crate::telemetry::{self, Counter};
+
+/// Resident-row gauge shared by every [`ParsedChunk`] of one stream:
+/// rows are counted in as they are parsed and counted out when the
+/// chunk drops. `peak()` is the bench's peak-RSS proxy and the
+/// equivalence test's `<= 2 x chunk` bound. (The type itself now lives
+/// in [`crate::telemetry`]; re-exported here for the streaming API.)
+pub use crate::telemetry::Gauge;
+
+/// Stream-wide ingestion counters in the global telemetry registry.
+struct StreamMetrics {
+    chunks: Arc<Counter>,
+    rows: Arc<Counter>,
+}
+
+fn stream_metrics() -> &'static StreamMetrics {
+    static M: OnceLock<StreamMetrics> = OnceLock::new();
+    M.get_or_init(|| StreamMetrics {
+        chunks: telemetry::global()
+            .counter("ingest_chunks_total", "Parsed chunks emitted by stream readers."),
+        rows: telemetry::global()
+            .counter("ingest_rows_total", "Data rows parsed by stream readers."),
+    })
+}
 
 /// Streaming-ingestion knobs.
 #[derive(Clone, Copy, Debug)]
@@ -62,37 +85,6 @@ impl StreamOpts {
     /// Options with nothing declared: one counting pass fixes the dims.
     pub fn rows(chunk_rows: usize) -> Self {
         StreamOpts { chunk_rows, dims: None, class_off: None }
-    }
-}
-
-/// Resident-row gauge shared by every [`ParsedChunk`] of one stream:
-/// rows are counted in as they are parsed and counted out when the
-/// chunk drops. `peak()` is the bench's peak-RSS proxy and the
-/// equivalence test's `<= 2 x chunk` bound.
-#[derive(Debug, Default)]
-pub struct Gauge {
-    cur: AtomicUsize,
-    peak: AtomicUsize,
-}
-
-impl Gauge {
-    fn add(&self, n: usize) {
-        let now = self.cur.fetch_add(n, Ordering::SeqCst) + n;
-        self.peak.fetch_max(now, Ordering::SeqCst);
-    }
-
-    fn sub(&self, n: usize) {
-        self.cur.fetch_sub(n, Ordering::SeqCst);
-    }
-
-    /// Parsed rows currently resident.
-    pub fn resident(&self) -> usize {
-        self.cur.load(Ordering::SeqCst)
-    }
-
-    /// High-water mark of resident parsed rows.
-    pub fn peak(&self) -> usize {
-        self.peak.load(Ordering::SeqCst)
     }
 }
 
@@ -510,8 +502,13 @@ fn producer(
             chunk.push_row(label, &pairs);
         }
         let end = start + chunk.len();
-        if !chunk.is_empty() && tx.send(Ok(chunk)).is_err() {
-            return;
+        if !chunk.is_empty() {
+            stream_metrics().chunks.inc();
+            stream_metrics().rows.add(chunk.len() as u64);
+            crate::log_debug!("stream: parsed chunk {start}..{end} ({} rows)", chunk.len());
+            if tx.send(Ok(chunk)).is_err() {
+                return;
+            }
         }
         if eof {
             if end != n {
@@ -626,7 +623,7 @@ mod tests {
             chunk.unwrap();
         }
         assert!(gauge.peak() <= 64, "peak {} > 2 x chunk", gauge.peak());
-        assert_eq!(gauge.resident(), 0);
+        assert_eq!(gauge.value(), 0);
     }
 
     #[test]

@@ -5,11 +5,13 @@
 //! interleaved all three tasks in one 200-line loop.
 
 use std::sync::Arc;
+use std::time::Instant;
 
 use anyhow::{bail, Result};
 
 use crate::backend::StepInput;
 use crate::linalg::Mat;
+use crate::metrics::Phase;
 use crate::model::Weights;
 
 use super::EngineCtx;
@@ -62,7 +64,9 @@ impl SingleWeight {
         let mut stats = cx.collect(input)?;
         let loss_sum = stats.obj;
         let err_sum = stats.aux;
+        let t0 = Instant::now();
         let objective = cx.reg_quad(&self.w) + 2.0 * loss_sum;
+        cx.metrics.add(Phase::Other, t0.elapsed());
         self.w = Arc::new(cx.solve(&mut stats)?);
         Ok(IterStats { loss_sum, err_sum, objective })
     }
@@ -173,9 +177,11 @@ impl IterDriver for CsBlockDriver {
             // the whole [m, dim] matrix per class
             Arc::make_mut(&mut self.w_all).row_mut(y).copy_from_slice(&wy);
         }
+        let t0 = Instant::now();
         let objective = 0.5 * cx.cfg.lambda as f64
             * crate::linalg::norm2_sq(&self.w_all.data) as f64
             + 2.0 * loss_sum;
+        cx.metrics.add(Phase::Other, t0.elapsed());
         Ok(IterStats { loss_sum, err_sum, objective })
     }
 

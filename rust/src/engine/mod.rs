@@ -30,7 +30,8 @@
 pub mod driver;
 pub mod pool;
 
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
+use std::time::Instant;
 
 use anyhow::{bail, Result};
 
@@ -42,10 +43,11 @@ use crate::config::{Algo, ModelKind, TaskKind, TrainConfig};
 use crate::data::stream::StreamReader;
 use crate::data::{shard_ranges, Dataset, Task};
 use crate::linalg::Mat;
-use crate::metrics::{Metrics, Phase};
+use crate::metrics::{Metrics, Phase, NPHASES, PHASES};
 use crate::model::Weights;
 use crate::rng::{NormalSource, Pcg64};
 use crate::solver::{KernelModel, PartialStats};
+use crate::telemetry::{self, Counter, Histogram, IterSpan, TraceWriter};
 
 /// Per-iteration record (drives Figures 5 and 6).
 #[derive(Clone, Debug)]
@@ -61,6 +63,45 @@ pub struct IterRecord {
     pub train_err: f64,
     /// held-out metric (accuracy or RMSE) if a test set was supplied
     pub test_metric: Option<f64>,
+    /// this iteration's wall-clock per phase
+    /// ([`crate::metrics::PHASES`] order, seconds)
+    pub phase_secs: [f64; NPHASES],
+    /// `||w_t - w_{t-1}||_2` over the flat weight view (for KRN this is
+    /// the dual omega) — the convergence quantity behind Figure 5
+    pub weight_delta: f64,
+}
+
+/// Session-lifetime training counters in the global telemetry registry
+/// (DESIGN.md §12). Registered once per process; the session loop adds
+/// into them so `--metrics-out` and `#metrics` see training activity.
+struct EngineMetrics {
+    sessions: Arc<Counter>,
+    iterations: Arc<Counter>,
+    iteration_nanos: Arc<Histogram>,
+    /// one `train_phase_nanos_total{phase=...}` series per [`PHASES`] entry
+    phase_nanos: [Arc<Counter>; NPHASES],
+}
+
+fn engine_metrics() -> &'static EngineMetrics {
+    static M: OnceLock<EngineMetrics> = OnceLock::new();
+    M.get_or_init(|| {
+        let reg = telemetry::global();
+        EngineMetrics {
+            sessions: reg.counter("train_sessions_total", "Completed training sessions."),
+            iterations: reg.counter("train_iterations_total", "Completed training iterations."),
+            iteration_nanos: reg.histogram(
+                "train_iteration_nanos",
+                "Full-iteration wall-clock in nanoseconds.",
+            ),
+            phase_nanos: std::array::from_fn(|i| {
+                reg.counter_labeled(
+                    "train_phase_nanos_total",
+                    &telemetry::label("phase", PHASES[i].name()),
+                    "Training wall-clock per Table-1 phase in nanoseconds.",
+                )
+            }),
+        }
+    })
 }
 
 /// Everything a training session returns.
@@ -358,6 +399,22 @@ impl Cluster {
         test: Option<&Dataset>,
         warm: WarmStart<'_>,
     ) -> Result<TrainOutput> {
+        self.run_session_traced(cfg, test, warm, None)
+    }
+
+    /// [`run_session`](Cluster::run_session) with iteration span tracing
+    /// (DESIGN.md §12): when `trace` is given, one JSONL record per
+    /// iteration — phase timings, objective, loss, weight-delta norm —
+    /// is written through the [`TraceWriter`]. Either way each iteration
+    /// is folded into the global telemetry registry, so `--metrics-out`
+    /// and the serve `#metrics` verb see training activity.
+    pub fn run_session_traced(
+        &mut self,
+        cfg: &TrainConfig,
+        test: Option<&Dataset>,
+        warm: WarmStart<'_>,
+        mut trace: Option<&mut TraceWriter>,
+    ) -> Result<TrainOutput> {
         self.check_compat(cfg)?;
         let mut master = backend::make_master(cfg, self.dim, self.gram.clone())?;
         let mut metrics = Metrics::new();
@@ -386,7 +443,13 @@ impl Cluster {
 
         let n = self.n;
         let mut stop = StopRule::new(cfg, n);
+        // reused across iterations: previous weights for the delta norm
+        let mut w_prev: Vec<f32> = Vec::new();
         for iter in 0..cfg.max_iters {
+            let iter_start = Instant::now();
+            let phase_before = metrics.phase_totals();
+            w_prev.clear();
+            w_prev.extend_from_slice(drv.current());
             let mut cx = EngineCtx {
                 pool: &mut self.pool,
                 master: &mut *master,
@@ -426,22 +489,67 @@ impl Cluster {
                 })
             });
 
-            history.push(IterRecord {
+            // per-iteration phase deltas: the difference between two
+            // cumulative phase_totals snapshots bracketing this round
+            let phase_after = metrics.phase_totals();
+            let mut phase_secs = [0f64; NPHASES];
+            for (i, s) in phase_secs.iter_mut().enumerate() {
+                *s = phase_after[i].saturating_sub(phase_before[i]).as_secs_f64();
+            }
+            let weight_delta = {
+                let cur = drv.current();
+                let mut acc = 0f64;
+                for (i, &c) in cur.iter().enumerate() {
+                    let p = w_prev.get(i).copied().unwrap_or(0.0);
+                    let d = (c - p) as f64;
+                    acc += d * d;
+                }
+                acc.sqrt()
+            };
+
+            let em = engine_metrics();
+            em.iterations.inc();
+            em.iteration_nanos.observe_duration(iter_start.elapsed());
+            for (i, c) in em.phase_nanos.iter().enumerate() {
+                let delta = phase_after[i].saturating_sub(phase_before[i]);
+                c.add(delta.as_nanos() as u64);
+            }
+
+            let rec = IterRecord {
                 iter,
                 objective: st.objective,
                 train_loss: st.loss_sum,
                 train_err: st.err_sum / n as f64,
                 test_metric,
-            });
+                phase_secs,
+                weight_delta,
+            };
+            if let Some(tw) = trace.as_deref_mut() {
+                tw.record(&IterSpan {
+                    iter: rec.iter,
+                    objective: rec.objective,
+                    train_loss: rec.train_loss,
+                    train_err: rec.train_err,
+                    weight_delta: rec.weight_delta,
+                    test_metric: rec.test_metric,
+                    phase_secs: rec.phase_secs,
+                })?;
+            }
+            history.push(rec);
             metrics.iterations = iter + 1;
             if stop.converged(iter, st.objective) {
                 break;
             }
         }
+        engine_metrics().sessions.inc();
 
         let weights = drv.snapshot(self.k, avg.as_deref());
         let objective = history.last().map(|h| h.objective).unwrap_or(f64::INFINITY);
         let iterations = history.len();
+        crate::log_debug!(
+            "engine: session {} finished after {iterations} iterations (J = {objective:.4})",
+            self.sessions
+        );
         metrics.sessions = 1;
         self.sessions += 1;
         self.last = Some(weights.clone());

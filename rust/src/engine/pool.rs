@@ -16,7 +16,7 @@
 //! order (so the f32 sums associate identically).
 
 use std::sync::mpsc::{self, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -28,6 +28,26 @@ use crate::coordinator::reduce;
 use crate::data::stream::ParsedChunk;
 use crate::metrics::{Metrics, Phase};
 use crate::solver::PartialStats;
+use crate::telemetry::{self, Histogram};
+
+/// Pool-level latency distributions in the global telemetry registry:
+/// the slowest worker's step per round, and the whole reduce.
+struct PoolMetrics {
+    step_nanos: Arc<Histogram>,
+    reduce_nanos: Arc<Histogram>,
+}
+
+fn pool_metrics() -> &'static PoolMetrics {
+    static M: OnceLock<PoolMetrics> = OnceLock::new();
+    M.get_or_init(|| PoolMetrics {
+        step_nanos: telemetry::global().histogram(
+            "worker_step_nanos",
+            "Slowest worker step per broadcast round in nanoseconds.",
+        ),
+        reduce_nanos: telemetry::global()
+            .histogram("reduce_nanos", "Full reduce round wall-clock in nanoseconds."),
+    })
+}
 
 enum Cmd {
     /// One shard pass at the broadcast weights. The `Arc` is the whole
@@ -166,6 +186,7 @@ impl Pool {
                     max_step = max_step.max(t0.elapsed());
                 }
                 metrics.add(Phase::LocalStats, max_step);
+                pool_metrics().step_nanos.observe_duration(max_step);
                 Ok(out)
             }
             Mode::Threads { cmd_txs, res_rx, .. } => {
@@ -204,6 +225,7 @@ impl Pool {
                     return Err(e);
                 }
                 metrics.add(Phase::LocalStats, max_step);
+                pool_metrics().step_nanos.observe_duration(max_step);
                 Ok(slots.into_iter().map(Option::unwrap).collect())
             }
         }
@@ -273,7 +295,9 @@ impl Pool {
             }
             (_, kind) => reduce::reduce(kind, partials),
         };
-        metrics.add(Phase::Reduce, t0.elapsed());
+        let elapsed = t0.elapsed();
+        metrics.add(Phase::Reduce, elapsed);
+        pool_metrics().reduce_nanos.observe_duration(elapsed);
         Ok(out)
     }
 }

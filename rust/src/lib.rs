@@ -73,3 +73,4 @@ pub mod rng;
 pub mod runtime;
 pub mod serve;
 pub mod solver;
+pub mod telemetry;

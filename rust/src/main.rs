@@ -35,6 +35,7 @@ use pemsvm::data::stream::{self, StreamOpts, StreamReader};
 use pemsvm::data::{libsvm, synth, Dataset, Task};
 use pemsvm::engine::{Cluster, WarmStart};
 use pemsvm::serve::{self, ModelBody, SavedModel, Scorer};
+use pemsvm::telemetry::{self, TraceWriter};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -50,6 +51,9 @@ fn run(argv: Vec<String>) -> Result<()> {
         return Ok(());
     }
     let args = Args::parse(argv)?;
+    // applies to every subcommand; the default (1 = info) keeps output
+    // byte-identical to builds before the telemetry layer existed
+    telemetry::log::set_verbosity(args.get_usize("verbosity", 1)? as u8);
     match args.subcommand.as_str() {
         "train" => cmd_train(&args),
         "sweep" => cmd_sweep(&args),
@@ -77,6 +81,14 @@ USAGE:
                [--config file.toml] [--test test.svm] [--verbose]
                [--topology threads|simulate]
                [--stream-chunk-rows R] [--dims N,K]
+               [--trace spans.jsonl] [--metrics-out metrics.prom]
+               [--verbosity 0|1|2]
+               --trace writes one JSON line per training iteration
+               (phase timings, objective, weight-delta norm);
+               --metrics-out dumps the Prometheus exposition of the
+               process telemetry registry after training;
+               --verbosity gates diagnostic stderr (0 quiet, 1 default,
+               2 debug)
                --stream-chunk-rows streams ingestion in R-row chunks:
                no file-sized text buffer or duplicate dataset copy,
                loader buffers bounded at 2R parsed rows, and trained
@@ -86,7 +98,9 @@ USAGE:
                ids). LIN models, native backend
   pemsvm sweep <data.svm> [--lambdas 10,1,0.1,0.01] [--warm-start]
                [--test test.svm] [--stream-chunk-rows R] [--dims N,K]
+               [--trace spans.jsonl] [--metrics-out metrics.prom]
                [train flags...]
+               --trace tags each lambda's records with its session index
   pemsvm datagen <out.svm> --dataset alpha|dna|year|mnist|news20
                [--n N] [--k K] [--m M] [--seed S]
   pemsvm predict <data.svm> <model> [--workers P] [--out preds.txt]
@@ -95,8 +109,9 @@ USAGE:
   pemsvm serve <model...> [--port N] [--workers P] [--max-batch B]
                [--max-wait-us U]
                newline-delimited libsvm rows over TCP; --port 0 picks an
-               ephemeral port (printed on stdout). `#model <name>` and
-               `#stats` are in-band control lines
+               ephemeral port (printed on stdout). `#model <name>`,
+               `#stats` and `#metrics` (Prometheus exposition, ends at
+               `# EOF`) are in-band control lines
   pemsvm eval <data.svm> <model> [--task cls|svr|mlt] [--num-classes M]
                [--workers P]
   pemsvm info [--artifacts-dir artifacts]"
@@ -112,9 +127,8 @@ fn build_config(args: &Args) -> Result<TrainConfig> {
     for (key, val) in &args.flags {
         let k = key.replace('-', "_");
         match k.as_str() {
-            "config" | "model_out" | "test" | "lambdas" | "stream_chunk_rows" | "dims" => {
-                continue
-            }
+            "config" | "model_out" | "test" | "lambdas" | "stream_chunk_rows" | "dims"
+            | "trace" | "metrics_out" | "verbosity" => continue,
             "simulate_cluster" => {
                 bail!("--simulate-cluster was removed; use --topology threads|simulate")
             }
@@ -156,6 +170,32 @@ fn stream_opts_of(args: &Args) -> Result<Option<StreamOpts>> {
         return Ok(None);
     }
     Ok(Some(StreamOpts { chunk_rows, dims, class_off: None }))
+}
+
+/// `--trace <path>`: open the iteration-span JSONL writer (DESIGN.md
+/// §12); `None` when tracing is off.
+fn trace_writer_of(args: &Args) -> Result<Option<TraceWriter>> {
+    args.get("trace").map(|p| TraceWriter::create(Path::new(p))).transpose()
+}
+
+/// `--metrics-out <path>`: dump the full Prometheus exposition of the
+/// global telemetry registry. Prints a `#` line only when the flag is
+/// present, so default CLI output stays byte-identical.
+fn write_metrics_out(args: &Args) -> Result<()> {
+    if let Some(p) = args.get("metrics-out") {
+        std::fs::write(p, telemetry::global().render())
+            .with_context(|| format!("writing {p}"))?;
+        println!("# metrics written to {p}");
+    }
+    Ok(())
+}
+
+/// The closing `#` line for `--trace` runs (again: silent without the
+/// flag).
+fn report_trace(trace: &Option<TraceWriter>) {
+    if let Some(tw) = trace {
+        println!("# trace written to {}", tw.path().display());
+    }
 }
 
 fn reject_kernel_streaming(cfg: &TrainConfig) -> Result<()> {
@@ -234,8 +274,9 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.workers,
         cfg.backend
     );
+    let mut trace = trace_writer_of(args)?;
     let t_train = std::time::Instant::now();
-    let out = pemsvm::coordinator::train_full(&ds, test.as_ref(), &cfg)?;
+    let out = pemsvm::coordinator::train_full_traced(&ds, test.as_ref(), &cfg, trace.as_mut())?;
     let train_secs = t_train.elapsed().as_secs_f64();
 
     print_history(&out, cfg.verbose);
@@ -264,7 +305,9 @@ fn cmd_train(args: &Args) -> Result<()> {
         );
     }
 
-    save_trained_model(args, &cfg, ds.k, out)
+    save_trained_model(args, &cfg, ds.k, out)?;
+    report_trace(&trace);
+    write_metrics_out(args)
 }
 
 /// `train --stream-chunk-rows`: out-of-core ingestion through
@@ -299,8 +342,9 @@ fn cmd_train_streamed(
     );
     let mut cluster = Cluster::from_stream(reader, cfg)?;
     let ingest_secs = t_ingest.elapsed().as_secs_f64();
+    let mut trace = trace_writer_of(args)?;
     let t_train = std::time::Instant::now();
-    let out = cluster.run_session(cfg, test.as_ref(), WarmStart::Cold)?;
+    let out = cluster.run_session_traced(cfg, test.as_ref(), WarmStart::Cold, trace.as_mut())?;
     let train_secs = t_train.elapsed().as_secs_f64();
 
     print_history(&out, cfg.verbose);
@@ -321,7 +365,9 @@ fn cmd_train_streamed(
         );
     }
 
-    save_trained_model(args, cfg, k, out)
+    save_trained_model(args, cfg, k, out)?;
+    report_trace(&trace);
+    write_metrics_out(args)
 }
 
 /// Lambda sweep on one persistent cluster: the `engine::Cluster` is
@@ -403,6 +449,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         "lambda", "iters", "objective", format!("train_{metric_name}"),
         format!("test_{metric_name}"), "secs"
     );
+    let mut trace = trace_writer_of(args)?;
     for (i, &lambda) in lambdas.iter().enumerate() {
         let mut scfg = cfg.clone();
         scfg.lambda = lambda;
@@ -411,10 +458,15 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         } else {
             pemsvm::engine::WarmStart::Cold
         };
+        // one session per lambda in the trace stream, distinguished by
+        // the record's `session` field
+        if let Some(tw) = trace.as_mut() {
+            tw.set_session(i);
+        }
         let t0 = std::time::Instant::now();
         // test set stays out of the session: the per-iteration held-out
         // history would be discarded here; one final evaluate suffices
-        let out = cluster.run_session(&scfg, None, warm)?;
+        let out = cluster.run_session_traced(&scfg, None, warm, trace.as_mut())?;
         let train_metric = match &eager_ds {
             Some(ds) => pemsvm::model::evaluate(ds, &out.weights),
             None => stream::evaluate_streamed(
@@ -439,7 +491,8 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         "# cluster reused across {} sessions: threads and shards were built once",
         cluster.sessions()
     );
-    Ok(())
+    report_trace(&trace);
+    write_metrics_out(args)
 }
 
 /// Load a model for the inference subcommands, letting `--task` /

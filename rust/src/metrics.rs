@@ -3,14 +3,15 @@
 //! Draw mu / Broadcast mu) so the itertime bench can print an empirical
 //! version of the asymptotic table.
 //!
-//! Two families live here: [`Metrics`] is the per-session training
-//! record (phase wall-clock, iteration/reduce counts — accumulated by
-//! the engine, merged across sessions for cluster-lifetime reports),
-//! and [`ServeStats`]/[`ServeSnapshot`] are the lock-free monotonic
-//! counters the serving registry hangs off every model entry
-//! (DESIGN.md §9). [`Stopwatch`] is the shared bench timer.
+//! [`Metrics`] is the per-session training record (phase wall-clock,
+//! iteration/reduce counts — accumulated by the engine, merged across
+//! sessions for cluster-lifetime reports); span tracing diffs two
+//! [`Metrics::phase_totals`] snapshots to attribute one iteration's
+//! wall-clock (see [`crate::telemetry::span`]). [`Stopwatch`] is the
+//! shared bench timer. The lock-free serving counters that used to
+//! live here moved onto the telemetry registry
+//! (`serve::registry::ModelStats`).
 
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
 /// Per-iteration phases, in Table-1 order.
@@ -30,7 +31,11 @@ pub enum Phase {
     Other,
 }
 
-pub const PHASES: [Phase; 6] = [
+/// Number of [`Phase`]s (the width of [`Metrics::phase_totals`] and of
+/// [`crate::telemetry::IterSpan::phase_secs`]).
+pub const NPHASES: usize = 6;
+
+pub const PHASES: [Phase; NPHASES] = [
     Phase::DrawGamma,
     Phase::LocalStats,
     Phase::Reduce,
@@ -66,7 +71,7 @@ impl Phase {
 /// Accumulated wall-clock per phase + iteration count.
 #[derive(Clone, Debug, Default)]
 pub struct Metrics {
-    totals: [Duration; 6],
+    totals: [Duration; NPHASES],
     pub iterations: usize,
     /// number of reduce rounds (== collects; > iterations for MLT)
     pub reduces: usize,
@@ -94,6 +99,13 @@ impl Metrics {
 
     pub fn total(&self, phase: Phase) -> Duration {
         self.totals[phase.idx()]
+    }
+
+    /// Point-in-time copy of the per-phase totals ([`PHASES`] order).
+    /// Span tracing diffs two of these around an iteration to get that
+    /// iteration's per-phase wall-clock.
+    pub fn phase_totals(&self) -> [Duration; NPHASES] {
+        self.totals
     }
 
     pub fn grand_total(&self) -> Duration {
@@ -136,79 +148,6 @@ impl Metrics {
     }
 }
 
-/// Lock-free serving counters: one per registry entry, shared by every
-/// thread that scores against that model. All counters are monotonic;
-/// a [`ServeSnapshot`] reads them at one instant for reporting.
-#[derive(Debug, Default)]
-pub struct ServeStats {
-    batches: AtomicU64,
-    rows: AtomicU64,
-    busy_nanos: AtomicU64,
-    max_batch_nanos: AtomicU64,
-}
-
-impl ServeStats {
-    /// Record one scored batch of `rows` rows that took `elapsed`.
-    pub fn record(&self, rows: usize, elapsed: Duration) {
-        let nanos = elapsed.as_nanos() as u64;
-        self.batches.fetch_add(1, Ordering::Relaxed);
-        self.rows.fetch_add(rows as u64, Ordering::Relaxed);
-        self.busy_nanos.fetch_add(nanos, Ordering::Relaxed);
-        self.max_batch_nanos.fetch_max(nanos, Ordering::Relaxed);
-    }
-
-    pub fn snapshot(&self) -> ServeSnapshot {
-        ServeSnapshot {
-            batches: self.batches.load(Ordering::Relaxed),
-            rows: self.rows.load(Ordering::Relaxed),
-            busy: Duration::from_nanos(self.busy_nanos.load(Ordering::Relaxed)),
-            max_batch: Duration::from_nanos(self.max_batch_nanos.load(Ordering::Relaxed)),
-        }
-    }
-}
-
-/// A point-in-time read of [`ServeStats`].
-#[derive(Clone, Copy, Debug)]
-pub struct ServeSnapshot {
-    pub batches: u64,
-    pub rows: u64,
-    /// total wall-clock spent inside the scorer
-    pub busy: Duration,
-    /// worst single-batch latency
-    pub max_batch: Duration,
-}
-
-impl ServeSnapshot {
-    /// Rows per second of scorer busy time (0 when idle).
-    pub fn rows_per_sec(&self) -> f64 {
-        let secs = self.busy.as_secs_f64();
-        if secs > 0.0 {
-            self.rows as f64 / secs
-        } else {
-            0.0
-        }
-    }
-
-    /// One-line report for the `#stats` protocol verb and CLI prints.
-    pub fn report(&self) -> String {
-        let mean_us = if self.batches > 0 {
-            self.busy.as_secs_f64() * 1e6 / self.batches as f64
-        } else {
-            0.0
-        };
-        format!(
-            "batches={} rows={} busy={:.1}ms mean_batch={:.0}us max_batch={:.0}us \
-             rows_per_sec={:.0}",
-            self.batches,
-            self.rows,
-            self.busy.as_secs_f64() * 1e3,
-            mean_us,
-            self.max_batch.as_secs_f64() * 1e6,
-            self.rows_per_sec()
-        )
-    }
-}
-
 /// Simple stopwatch for benches.
 pub struct Stopwatch(Instant);
 
@@ -241,17 +180,18 @@ mod tests {
     }
 
     #[test]
-    fn serve_stats_accumulate() {
-        let s = ServeStats::default();
-        s.record(10, Duration::from_micros(100));
-        s.record(30, Duration::from_micros(300));
-        let snap = s.snapshot();
-        assert_eq!(snap.batches, 2);
-        assert_eq!(snap.rows, 40);
-        assert_eq!(snap.busy, Duration::from_micros(400));
-        assert_eq!(snap.max_batch, Duration::from_micros(300));
-        assert!((snap.rows_per_sec() - 100_000.0).abs() < 1.0);
-        assert!(snap.report().contains("rows=40"));
+    fn phase_totals_snapshot_diffs() {
+        let mut m = Metrics::new();
+        m.add(Phase::LocalStats, Duration::from_millis(4));
+        let before = m.phase_totals();
+        m.add(Phase::LocalStats, Duration::from_millis(6));
+        m.add(Phase::Reduce, Duration::from_millis(1));
+        let after = m.phase_totals();
+        let delta: Vec<Duration> =
+            after.iter().zip(before).map(|(a, b)| *a - b).collect();
+        assert_eq!(delta[Phase::LocalStats.idx()], Duration::from_millis(6));
+        assert_eq!(delta[Phase::Reduce.idx()], Duration::from_millis(1));
+        assert_eq!(delta[Phase::DrawMu.idx()], Duration::ZERO);
     }
 
     #[test]

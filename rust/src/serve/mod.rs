@@ -9,7 +9,9 @@
 //!   plus the legacy `model.txt` read-path.
 //! * [`registry`] — named models in memory behind an `Arc` swap:
 //!   publish/hot-reload without dropping in-flight requests, with
-//!   per-model [`crate::metrics::ServeStats`] counters.
+//!   per-model [`registry::ModelStats`] counters that live in the
+//!   global telemetry registry (so `#metrics` exposes them and they
+//!   survive unload/republish cycles; DESIGN.md §12).
 //! * [`scorer`] — the persistent batched scoring pool (patterned on
 //!   `engine::pool::Pool`): shards a batch of rows across worker
 //!   threads and scores CLS margins, SVR values, MLT argmaxes
@@ -25,6 +27,6 @@ pub mod scorer;
 pub mod server;
 
 pub use format::{load, save, ModelBody, ModelMeta, SavedModel};
-pub use registry::{ModelEntry, Registry};
+pub use registry::{ModelEntry, ModelStats, Registry, ServeSnapshot};
 pub use scorer::{format_prediction, metric_of, predicted_value, ScoredBatch, Scorer};
 pub use server::{serve, ServeOpts};

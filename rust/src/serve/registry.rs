@@ -6,26 +6,140 @@
 //! ([`ModelEntry::current`]) and keeps scoring against that snapshot
 //! even if [`Registry::publish`] replaces the model mid-flight — the
 //! old version is freed when the last in-flight request drops its
-//! clone. Per-model serving counters live on the entry (not the model)
-//! so they survive hot reloads.
+//! clone. Per-model serving counters ([`ModelStats`]) live in the
+//! global telemetry registry keyed by model name, so they survive hot
+//! reloads — including a full unload + republish cycle.
 
 use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use crate::metrics::ServeStats;
+use crate::telemetry::{self, Counter, Gauge, Histogram};
 
 use super::format::{self, SavedModel};
+
+/// Per-model serving counters, backed by the global telemetry registry
+/// (DESIGN.md §12) and keyed by model **name**, not registry slot: a
+/// model that is unloaded and re-published — even through a different
+/// [`Registry`] in the same process — re-registers onto the same
+/// monotone series, so `#stats` / `#metrics` counts never reset across
+/// hot reloads (`tests/serve_roundtrip.rs` pins this).
+pub struct ModelStats {
+    rows: Arc<Counter>,
+    batches: Arc<Counter>,
+    busy_nanos: Arc<Counter>,
+    /// value = last batch latency (ns); peak = worst batch
+    batch_nanos: Arc<Gauge>,
+    latency: Arc<Histogram>,
+}
+
+impl ModelStats {
+    /// Get-or-register the serving series for `model` in the global
+    /// telemetry registry.
+    pub fn for_model(model: &str) -> ModelStats {
+        let reg = telemetry::global();
+        let l = telemetry::label("model", model);
+        ModelStats {
+            rows: reg.counter_labeled(
+                "predict_requests_total",
+                &l,
+                "Rows scored through the serve and predict paths.",
+            ),
+            batches: reg.counter_labeled(
+                "predict_batches_total",
+                &l,
+                "Micro-batches handed to the scorer.",
+            ),
+            busy_nanos: reg.counter_labeled(
+                "predict_busy_nanos_total",
+                &l,
+                "Wall-clock nanoseconds spent inside the scorer.",
+            ),
+            batch_nanos: reg.gauge_labeled(
+                "predict_batch_nanos",
+                &l,
+                "Latency of the most recent scored batch in nanoseconds (peak = worst batch).",
+            ),
+            latency: reg.histogram_labeled(
+                "predict_batch_latency_nanos",
+                &l,
+                "Scored-batch latency distribution in nanoseconds.",
+            ),
+        }
+    }
+
+    /// Record one scored batch of `rows` rows that took `elapsed`.
+    pub fn record(&self, rows: usize, elapsed: Duration) {
+        let nanos = elapsed.as_nanos() as u64;
+        self.batches.inc();
+        self.rows.add(rows as u64);
+        self.busy_nanos.add(nanos);
+        self.batch_nanos.set(nanos as usize);
+        self.latency.observe(nanos);
+    }
+
+    pub fn snapshot(&self) -> ServeSnapshot {
+        ServeSnapshot {
+            batches: self.batches.get(),
+            rows: self.rows.get(),
+            busy: Duration::from_nanos(self.busy_nanos.get()),
+            max_batch: Duration::from_nanos(self.batch_nanos.peak() as u64),
+        }
+    }
+}
+
+/// A point-in-time read of [`ModelStats`].
+#[derive(Clone, Copy, Debug)]
+pub struct ServeSnapshot {
+    pub batches: u64,
+    pub rows: u64,
+    /// total wall-clock spent inside the scorer
+    pub busy: Duration,
+    /// worst single-batch latency
+    pub max_batch: Duration,
+}
+
+impl ServeSnapshot {
+    /// Rows per second of scorer busy time (0 when idle).
+    pub fn rows_per_sec(&self) -> f64 {
+        let secs = self.busy.as_secs_f64();
+        if secs > 0.0 {
+            self.rows as f64 / secs
+        } else {
+            0.0
+        }
+    }
+
+    /// One-line report for the `#stats` protocol verb and CLI prints.
+    pub fn report(&self) -> String {
+        let mean_us = if self.batches > 0 {
+            self.busy.as_secs_f64() * 1e6 / self.batches as f64
+        } else {
+            0.0
+        };
+        format!(
+            "batches={} rows={} busy={:.1}ms mean_batch={:.0}us max_batch={:.0}us \
+             rows_per_sec={:.0}",
+            self.batches,
+            self.rows,
+            self.busy.as_secs_f64() * 1e3,
+            mean_us,
+            self.max_batch.as_secs_f64() * 1e6,
+            self.rows_per_sec()
+        )
+    }
+}
 
 /// A named registry slot: the swappable model + its lifetime counters.
 pub struct ModelEntry {
     name: String,
     model: RwLock<Arc<SavedModel>>,
     /// requests/rows/latency counters, accumulated across reloads
-    pub stats: ServeStats,
+    pub stats: ModelStats,
     /// how many times this slot has been (re)published
     versions: AtomicU64,
 }
@@ -77,7 +191,7 @@ impl Registry {
         let entry = Arc::new(ModelEntry {
             name: name.to_string(),
             model: RwLock::new(model),
-            stats: ServeStats::default(),
+            stats: ModelStats::for_model(name),
             versions: AtomicU64::new(1),
         });
         map.insert(name.to_string(), entry.clone());
@@ -167,5 +281,24 @@ mod tests {
             }
             _ => panic!("wrong bodies"),
         }
+    }
+
+    #[test]
+    fn stats_survive_unload_and_republish() {
+        // the series is keyed by model name in the global telemetry
+        // registry, so unload + republish (which allocates a brand-new
+        // entry) keeps counting where the old entry left off
+        let reg = Registry::new();
+        let e1 = reg.publish("registry-continuity", linear(vec![1.0]));
+        e1.stats.record(5, std::time::Duration::from_micros(10));
+        assert!(reg.unload("registry-continuity"));
+        let e2 = reg.publish("registry-continuity", linear(vec![2.0]));
+        assert!(!Arc::ptr_eq(&e1, &e2));
+        e2.stats.record(3, std::time::Duration::from_micros(10));
+        let snap = e2.stats.snapshot();
+        assert_eq!(snap.rows, 8);
+        assert_eq!(snap.batches, 2);
+        // the stale entry reads the same series
+        assert_eq!(e1.stats.snapshot().rows, 8);
     }
 }

@@ -10,13 +10,19 @@
 //!   index for MLT, value for SVR), in row order per connection.
 //! * `#model <name>` — switch this connection to another registry model.
 //! * `#stats` — reply with the current model's serving counters.
+//! * `#metrics` — reply with the full Prometheus text exposition of
+//!   the process telemetry registry (DESIGN.md §12), terminated by a
+//!   `# EOF` line so in-band scrapers know where the block ends.
 //! * blank lines / other `#...` lines — ignored, no reply.
 //! * a malformed row — replies `error: <why>`, the connection stays up.
 //!
-//! Malformed-row errors and `#stats` replies travel through the same
-//! dispatcher queue as predictions, so the one-reply-per-line ordering
-//! holds even for pipelined clients; only errors with no model context
-//! (unknown `#model`, no model selected) are answered immediately.
+//! Malformed-row errors and `#stats` / `#metrics` replies travel
+//! through the same dispatcher queue as predictions, so the
+//! one-reply-per-line ordering holds even for pipelined clients — a
+//! `#metrics` scrape sent after N rows reports counters that include
+//! all N. Only errors with no model context (unknown `#model`) are
+//! answered immediately, as is `#metrics` on a connection with no
+//! model selected (the exposition needs no model).
 //!
 //! Micro-batching: connection readers feed one dispatcher channel; the
 //! dispatcher coalesces up to `max_batch` rows or `max_wait` (whichever
@@ -26,15 +32,40 @@
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::data::{libsvm, Dataset};
+use crate::telemetry::{self, Counter};
 
 use super::registry::{ModelEntry, Registry};
 use super::scorer::{format_prediction, Scorer};
+
+/// Front-end counters (global: one TCP server per process in practice).
+struct ServerMetrics {
+    connections: Arc<Counter>,
+    protocol_errors: Arc<Counter>,
+}
+
+fn server_metrics() -> &'static ServerMetrics {
+    static M: OnceLock<ServerMetrics> = OnceLock::new();
+    M.get_or_init(|| ServerMetrics {
+        connections: telemetry::global()
+            .counter("serve_connections_total", "Accepted TCP serving connections."),
+        protocol_errors: telemetry::global().counter(
+            "serve_protocol_errors_total",
+            "Error replies sent on the TCP protocol (bad rows, unknown models).",
+        ),
+    })
+}
+
+/// The `#metrics` reply body: the whole exposition plus the in-band
+/// terminator line (the connection writer appends the final newline).
+fn render_exposition() -> String {
+    format!("{}# EOF", telemetry::global().render())
+}
 
 /// Serving knobs (see `pemsvm serve --help` text in `main.rs`).
 #[derive(Clone, Debug)]
@@ -61,6 +92,9 @@ enum Payload {
     BadRow(String),
     /// the `#stats` verb, answered in order against the row stream
     Stats,
+    /// the `#metrics` verb: the full exposition, ordered like `#stats`
+    /// so the counters cover every row queued before it
+    Metrics,
 }
 
 /// One protocol message en route to the dispatcher.
@@ -118,6 +152,8 @@ fn handle_conn(
         }
     });
 
+    server_metrics().connections.inc();
+    crate::log_debug!("serve: connection accepted (default model `{default_model}`)");
     let mut entry = registry.get(default_model);
     for (lineno, line) in reader.lines().enumerate() {
         let Ok(line) = line else { break };
@@ -131,6 +167,7 @@ fn handle_conn(
                 Some("model") => match it.next().and_then(|n| registry.get(n)) {
                     Some(e) => entry = Some(e),
                     None => {
+                        server_metrics().protocol_errors.inc();
                         let _ = reply_tx.send("error: unknown model".into());
                     }
                 },
@@ -145,7 +182,23 @@ fn handle_conn(
                         }
                     }
                     None => {
+                        server_metrics().protocol_errors.inc();
                         let _ = reply_tx.send("error: no model selected".into());
+                    }
+                },
+                Some("metrics") => match entry.clone() {
+                    // queued like #stats so the exposition covers every
+                    // row this connection sent before the verb
+                    Some(entry) => {
+                        let msg =
+                            RowMsg { payload: Payload::Metrics, entry, reply: reply_tx.clone() };
+                        if row_tx.send(msg).is_err() {
+                            break;
+                        }
+                    }
+                    // the exposition needs no model: answer immediately
+                    None => {
+                        let _ = reply_tx.send(render_exposition());
                     }
                 },
                 _ => {} // comment; ignore
@@ -153,13 +206,17 @@ fn handle_conn(
             continue;
         }
         let Some(entry) = entry.clone() else {
+            server_metrics().protocol_errors.inc();
             let _ = reply_tx.send("error: no model selected".into());
             continue;
         };
         let payload = match libsvm::parse_row(trimmed, lineno + 1) {
             Ok(Some((_label, pairs))) => Payload::Row(pairs),
             Ok(None) => continue,
-            Err(e) => Payload::BadRow(format!("error: {e:#}")),
+            Err(e) => {
+                server_metrics().protocol_errors.inc();
+                Payload::BadRow(format!("error: {e:#}"))
+            }
         };
         if row_tx.send(RowMsg { payload, entry, reply: reply_tx.clone() }).is_err() {
             break; // dispatcher gone: server shutting down
@@ -252,6 +309,9 @@ fn score_and_reply(scorer: &mut Scorer, rows: Vec<RowMsg>) {
                 (Payload::Stats, _) => {
                     format!("stats {}: {}", entry.name(), entry.stats.snapshot().report())
                 }
+                // multi-line reply: the per-connection writer sends the
+                // whole block plus the trailing newline in one message
+                (Payload::Metrics, _) => render_exposition(),
             };
             replies.push((pos, msg, row.reply));
         }

@@ -2,11 +2,34 @@
 //! mode takes `w = Sigma (sum_p mu^p)` (Eq. 6) and the MC mode draws
 //! `w ~ N(Sigma b, Sigma)` via `w = mu + L^{-T} z`.
 
+use std::sync::{Arc, OnceLock};
+use std::time::Instant;
+
 use anyhow::{Context, Result};
 
 use crate::linalg::{cholesky_in_place, solve_lower, solve_upper, Mat};
+use crate::telemetry::{self, Counter, Histogram};
 
 use super::PartialStats;
+
+/// Master-step series in the global telemetry registry: solve latency
+/// and how often the jitter escalation had to retry the factorization.
+struct MasterMetrics {
+    solve_nanos: Arc<Histogram>,
+    jitter_retries: Arc<Counter>,
+}
+
+fn master_metrics() -> &'static MasterMetrics {
+    static M: OnceLock<MasterMetrics> = OnceLock::new();
+    M.get_or_init(|| MasterMetrics {
+        solve_nanos: telemetry::global()
+            .histogram("master_solve_nanos", "Master solve (Eq. 6) wall-clock in nanoseconds."),
+        jitter_retries: telemetry::global().counter(
+            "master_jitter_retries_total",
+            "Cholesky retries with escalated diagonal jitter.",
+        ),
+    })
+}
 
 /// The quadratic regularizer R: identity for LIN (Eq. 6), the Gram
 /// matrix for KRN (§3.1).
@@ -25,6 +48,7 @@ pub fn solve_native(
     reg: &Regularizer,
     mc_noise: Option<&[f32]>,
 ) -> Result<Vec<f32>> {
+    let t_solve = Instant::now();
     let k = stats.mu.len();
     let mut a = stats.sigma.unpack();
     match reg {
@@ -42,6 +66,7 @@ pub fn solve_native(
         match cholesky_in_place(&mut a) {
             Ok(()) => break,
             Err(e) => {
+                master_metrics().jitter_retries.inc();
                 jitter = if jitter == 0.0 { mean_diag * 1e-6 } else { jitter * 100.0 };
                 if jitter > mean_diag * 1e-2 {
                     return Err(e).context(
@@ -66,6 +91,7 @@ pub fn solve_native(
             *wi += fi;
         }
     }
+    master_metrics().solve_nanos.observe_duration(t_solve.elapsed());
     Ok(w)
 }
 

@@ -1,0 +1,65 @@
+//! Leveled stderr logging: [`crate::log_info!`] / [`crate::log_debug!`]
+//! gated by a process-wide verbosity level.
+//!
+//! Levels: 0 = quiet (suppress info), 1 = info (default), 2 = debug.
+//! The CLI sets the level from `--verbosity N` before dispatching a
+//! subcommand. Both macros write to **stderr**, so protocol/stdout
+//! output (predictions, `# listening on ...`) stays byte-identical at
+//! any verbosity and the CI smoke diffs keep passing.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Suppress `log_info!`.
+pub const QUIET: u8 = 0;
+/// The default: `log_info!` prints, `log_debug!` does not.
+pub const INFO: u8 = 1;
+/// Everything prints.
+pub const DEBUG: u8 = 2;
+
+static VERBOSITY: AtomicU8 = AtomicU8::new(INFO);
+
+/// Set the process verbosity (clamped to [`DEBUG`]).
+pub fn set_verbosity(level: u8) {
+    VERBOSITY.store(level.min(DEBUG), Ordering::Relaxed);
+}
+
+/// Current process verbosity.
+pub fn verbosity() -> u8 {
+    VERBOSITY.load(Ordering::Relaxed)
+}
+
+/// `eprintln!` at info level (suppressed by `--verbosity 0`).
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        if $crate::telemetry::log::verbosity() >= $crate::telemetry::log::INFO {
+            eprintln!($($arg)*);
+        }
+    };
+}
+
+/// `eprintln!` at debug level (enabled by `--verbosity 2`).
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        if $crate::telemetry::log::verbosity() >= $crate::telemetry::log::DEBUG {
+            eprintln!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::{set_verbosity, verbosity, DEBUG, INFO};
+
+    #[test]
+    fn verbosity_clamps_and_macros_expand() {
+        // process-global state: restore the default before returning
+        set_verbosity(9);
+        assert_eq!(verbosity(), DEBUG);
+        crate::log_info!("log test: info at debug verbosity");
+        crate::log_debug!("log test: debug at debug verbosity (n = {})", 1 + 1);
+        set_verbosity(INFO);
+        assert_eq!(verbosity(), INFO);
+    }
+}

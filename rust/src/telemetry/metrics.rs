@@ -1,0 +1,261 @@
+//! Lock-free metric primitives: sharded [`Counter`], watermark
+//! [`Gauge`], power-of-two-bucket [`Histogram`].
+//!
+//! Design constraints (DESIGN.md §12): recording must be safe from any
+//! thread, allocation-free, and cheap enough to sit inside the solver
+//! hot path — `benches/solver_hotpath.rs` asserts the whole
+//! per-iteration instrumentation bundle costs < 1% of one worker step.
+//! Counters stripe their adds over cache-line-sized cells indexed by a
+//! per-thread shard id, so concurrent workers never contend on one
+//! atomic; a snapshot sums the cells. Histograms bucket by the value's
+//! bit length (bucket `i` covers `2^(i-1) ..= 2^i - 1` nanoseconds),
+//! which makes merges exact u64 adds and therefore associative.
+
+use std::cell::Cell as TlCell;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::time::Duration;
+
+/// Number of independent cells a [`Counter`] stripes its adds over.
+/// Threads hash to a cell once (round-robin at first use) and stick to
+/// it, so any worker count up to `SHARDS` is entirely contention-free.
+pub const SHARDS: usize = 16;
+
+/// One cache line per cell so writers on different shards never
+/// false-share.
+#[repr(align(64))]
+struct Cell(AtomicU64);
+
+/// This thread's shard index: assigned round-robin on first use.
+fn shard() -> usize {
+    static NEXT: AtomicUsize = AtomicUsize::new(0);
+    thread_local! {
+        static SHARD: TlCell<usize> = const { TlCell::new(usize::MAX) };
+    }
+    SHARD.with(|s| {
+        let mut v = s.get();
+        if v == usize::MAX {
+            v = NEXT.fetch_add(1, Ordering::Relaxed) % SHARDS;
+            s.set(v);
+        }
+        v
+    })
+}
+
+/// Monotone counter. [`add`](Counter::add) is one relaxed atomic add on
+/// a thread-affine cell; [`get`](Counter::get) sums the cells. A `get`
+/// racing concurrent adds sees every add that completed before the
+/// last cell load (per-cell reads are coherent, so repeated `get`s are
+/// monotone).
+pub struct Counter {
+    cells: [Cell; SHARDS],
+}
+
+impl Counter {
+    pub fn new() -> Counter {
+        Counter { cells: std::array::from_fn(|_| Cell(AtomicU64::new(0))) }
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.cells[shard()].0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current total across all shards.
+    pub fn get(&self) -> u64 {
+        self.cells.iter().map(|c| c.0.load(Ordering::Relaxed)).sum()
+    }
+}
+
+impl Default for Counter {
+    fn default() -> Self {
+        Counter::new()
+    }
+}
+
+/// A level with a high-water mark: `value()` is the current level,
+/// `peak()` the largest level ever seen. Used both as an up/down
+/// resource gauge (resident streamed rows: [`add`](Gauge::add) /
+/// [`sub`](Gauge::sub)) and as a last-sample-plus-max recorder
+/// ([`set`](Gauge::set), e.g. per-batch latency where the peak is the
+/// worst batch).
+#[derive(Debug, Default)]
+pub struct Gauge {
+    cur: AtomicUsize,
+    peak: AtomicUsize,
+}
+
+impl Gauge {
+    pub fn new() -> Gauge {
+        Gauge::default()
+    }
+
+    pub fn add(&self, n: usize) {
+        let now = self.cur.fetch_add(n, Ordering::SeqCst) + n;
+        self.peak.fetch_max(now, Ordering::SeqCst);
+    }
+
+    pub fn sub(&self, n: usize) {
+        self.cur.fetch_sub(n, Ordering::SeqCst);
+    }
+
+    /// Overwrite the level (the peak still ratchets up).
+    pub fn set(&self, v: usize) {
+        self.cur.store(v, Ordering::SeqCst);
+        self.peak.fetch_max(v, Ordering::SeqCst);
+    }
+
+    /// Current level.
+    pub fn value(&self) -> usize {
+        self.cur.load(Ordering::SeqCst)
+    }
+
+    /// High-water mark.
+    pub fn peak(&self) -> usize {
+        self.peak.load(Ordering::SeqCst)
+    }
+}
+
+/// Bucket count of a [`Histogram`]: bucket 0 holds exact zeros, bucket
+/// `i` (1..=42) holds values of bit length `i` (`2^(i-1) ..= 2^i - 1`),
+/// and the last bucket is the overflow (`>= 2^42` ns ≈ 73 minutes —
+/// far beyond any per-iteration latency this crate records).
+pub const HIST_BUCKETS: usize = 44;
+
+/// Upper bound (inclusive) of bucket `i`, or `None` for the overflow
+/// bucket (rendered as `+Inf`).
+pub fn bucket_upper_bound(i: usize) -> Option<u64> {
+    if i + 1 >= HIST_BUCKETS {
+        None
+    } else {
+        Some((1u64 << i) - 1) // i = 0 gives 0: the exact-zero bucket
+    }
+}
+
+/// Lock-free latency histogram: one relaxed add into the value's
+/// bit-length bucket plus one into the running sum. Bucket counts are
+/// exact, so snapshots merge associatively (`tests/telemetry.rs`).
+pub struct Histogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    sum: AtomicU64,
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram { buckets: std::array::from_fn(|_| AtomicU64::new(0)), sum: AtomicU64::new(0) }
+    }
+
+    fn bucket_of(v: u64) -> usize {
+        if v == 0 {
+            0
+        } else {
+            (64 - v.leading_zeros() as usize).min(HIST_BUCKETS - 1)
+        }
+    }
+
+    #[inline]
+    pub fn observe(&self, v: u64) {
+        self.buckets[Self::bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn observe_duration(&self, d: Duration) {
+        self.observe(d.as_nanos() as u64);
+    }
+
+    /// Point-in-time copy. Racing observers may land between the
+    /// bucket loads and the sum load, so `sum` can momentarily run
+    /// ahead of the bucketed values — counts themselves never regress
+    /// and never lose a completed observe.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            buckets: std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed)),
+            sum: self.sum.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+/// A point-in-time read of a [`Histogram`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    /// per-bucket observation counts (see [`bucket_upper_bound`])
+    pub buckets: [u64; HIST_BUCKETS],
+    /// sum of all observed values
+    pub sum: u64,
+}
+
+impl HistogramSnapshot {
+    /// Total observations.
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+
+    /// Fold another snapshot in. Exact u64 adds bucket by bucket, so
+    /// `(a + b) + c == a + (b + c)` — worker-local histograms can be
+    /// reduced in any tree order.
+    pub fn merge(&mut self, other: &HistogramSnapshot) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += *b;
+        }
+        self.sum += other.sum;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_basics() {
+        let c = Counter::new();
+        assert_eq!(c.get(), 0);
+        c.inc();
+        c.add(41);
+        assert_eq!(c.get(), 42);
+    }
+
+    #[test]
+    fn gauge_tracks_level_and_peak() {
+        let g = Gauge::new();
+        g.add(5);
+        g.add(3);
+        g.sub(6);
+        assert_eq!(g.value(), 2);
+        assert_eq!(g.peak(), 8);
+        g.set(4);
+        assert_eq!(g.value(), 4);
+        assert_eq!(g.peak(), 8); // set below the peak does not lower it
+        g.set(20);
+        assert_eq!(g.peak(), 20);
+    }
+
+    #[test]
+    fn bucket_bounds_are_powers_of_two_minus_one() {
+        assert_eq!(bucket_upper_bound(0), Some(0));
+        assert_eq!(bucket_upper_bound(1), Some(1));
+        assert_eq!(bucket_upper_bound(10), Some(1023));
+        assert_eq!(bucket_upper_bound(HIST_BUCKETS - 1), None);
+        // every value lands in the bucket whose bound first covers it
+        for v in [0u64, 1, 2, 3, 4, 1023, 1024, u64::MAX] {
+            let b = Histogram::bucket_of(v);
+            if let Some(hi) = bucket_upper_bound(b) {
+                assert!(v <= hi, "v={v} bucket={b}");
+            }
+            if b > 0 {
+                let below = bucket_upper_bound(b - 1).unwrap();
+                assert!(v > below, "v={v} bucket={b}");
+            }
+        }
+    }
+}

@@ -1,0 +1,38 @@
+//! The unified telemetry layer (DESIGN.md §12): lock-free metric
+//! primitives, a global exposition registry, per-iteration span
+//! tracing, and leveled logging — all dependency-free.
+//!
+//! Four parts:
+//!
+//! * [`metrics`] — the lock-free core: [`Counter`] (sharded atomic
+//!   cells, one relaxed add on the hot path), [`Gauge`] (current value
+//!   plus high-water mark) and [`Histogram`] (power-of-two latency
+//!   buckets, exact u64 merges). All are safe to hammer from worker
+//!   threads while another thread snapshots them.
+//! * [`registry`] — [`MetricRegistry`]: named metric families with
+//!   optional label sets, rendered in Prometheus text exposition
+//!   format. [`global()`] is the process-wide registry that the
+//!   engine, solver, stream loader and serve front-end all register
+//!   into; `pemsvm serve` exposes it as the in-band `#metrics` verb
+//!   and `pemsvm train --metrics-out <path>` writes an end-of-run
+//!   snapshot.
+//! * [`span`] — [`TraceWriter`]: per-iteration [`IterSpan`] records
+//!   (phase wall-clock, objective, weight-delta norm) emitted as one
+//!   JSONL line each via `pemsvm train/sweep --trace <path>` — the
+//!   data behind the paper's Figures 2/5/6 as a byproduct of any run.
+//! * [`log`] — `log_info!` / `log_debug!` macros gated by the
+//!   process verbosity (`--verbosity`); default output is unchanged.
+//!
+//! Everything here is `std`-only and allocation-free on the hot paths:
+//! recording into a counter or histogram is a handful of relaxed
+//! atomic operations, and registration (the only locking path) happens
+//! once per metric at first use.
+
+pub mod log;
+pub mod metrics;
+pub mod registry;
+pub mod span;
+
+pub use metrics::{Counter, Gauge, Histogram, HistogramSnapshot, HIST_BUCKETS};
+pub use registry::{global, label, MetricRegistry};
+pub use span::{IterSpan, TraceWriter};

@@ -1,0 +1,190 @@
+//! [`MetricRegistry`]: named metric families, optionally labeled,
+//! rendered in Prometheus text exposition format.
+//!
+//! Registration is get-or-create: calling
+//! [`counter_labeled`](MetricRegistry::counter_labeled) twice with the
+//! same name and label set returns the *same* underlying cells, which
+//! is what makes per-model serving counters survive hot reloads — a
+//! re-published model re-registers and lands on its existing series
+//! (`serve::registry::ModelStats`). The registry lock is only taken at
+//! registration time; recording goes straight to the lock-free
+//! primitives.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::{Arc, OnceLock, RwLock};
+
+use super::metrics::{bucket_upper_bound, Counter, Gauge, Histogram, HIST_BUCKETS};
+
+#[derive(Clone)]
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+impl Metric {
+    fn kind(&self) -> &'static str {
+        match self {
+            Metric::Counter(_) => "counter",
+            Metric::Gauge(_) => "gauge",
+            Metric::Histogram(_) => "histogram",
+        }
+    }
+}
+
+/// One metric family: a help string plus its series keyed by rendered
+/// label set (`""` for the unlabeled series).
+struct Family {
+    help: String,
+    series: BTreeMap<String, Metric>,
+}
+
+/// Named metric families behind one lock (held for registration and
+/// rendering only — never on the record path).
+#[derive(Default)]
+pub struct MetricRegistry {
+    families: RwLock<BTreeMap<String, Family>>,
+}
+
+impl MetricRegistry {
+    pub fn new() -> MetricRegistry {
+        MetricRegistry::default()
+    }
+
+    fn register(&self, name: &str, labels: &str, help: &str, make: fn() -> Metric) -> Metric {
+        let mut fams = self.families.write().expect("telemetry registry poisoned");
+        let fam = fams
+            .entry(name.to_string())
+            .or_insert_with(|| Family { help: help.to_string(), series: BTreeMap::new() });
+        let metric = fam.series.entry(labels.to_string()).or_insert_with(make).clone();
+        let want = make().kind();
+        assert_eq!(
+            metric.kind(),
+            want,
+            "metric `{name}` already registered as a {}",
+            metric.kind()
+        );
+        metric
+    }
+
+    /// Get-or-register an unlabeled counter.
+    pub fn counter(&self, name: &str, help: &str) -> Arc<Counter> {
+        self.counter_labeled(name, "", help)
+    }
+
+    /// Get-or-register a counter series under `labels` (a rendered
+    /// label set from [`label`], e.g. `model="smoke"`).
+    pub fn counter_labeled(&self, name: &str, labels: &str, help: &str) -> Arc<Counter> {
+        match self.register(name, labels, help, || Metric::Counter(Arc::new(Counter::new()))) {
+            Metric::Counter(c) => c,
+            _ => unreachable!("kind checked in register"),
+        }
+    }
+
+    pub fn gauge(&self, name: &str, help: &str) -> Arc<Gauge> {
+        self.gauge_labeled(name, "", help)
+    }
+
+    pub fn gauge_labeled(&self, name: &str, labels: &str, help: &str) -> Arc<Gauge> {
+        match self.register(name, labels, help, || Metric::Gauge(Arc::new(Gauge::new()))) {
+            Metric::Gauge(g) => g,
+            _ => unreachable!("kind checked in register"),
+        }
+    }
+
+    pub fn histogram(&self, name: &str, help: &str) -> Arc<Histogram> {
+        self.histogram_labeled(name, "", help)
+    }
+
+    pub fn histogram_labeled(&self, name: &str, labels: &str, help: &str) -> Arc<Histogram> {
+        match self.register(name, labels, help, || Metric::Histogram(Arc::new(Histogram::new()))) {
+            Metric::Histogram(h) => h,
+            _ => unreachable!("kind checked in register"),
+        }
+    }
+
+    /// Render every family in Prometheus text exposition format:
+    /// `# HELP` / `# TYPE` headers, then one `name{labels} value` line
+    /// per series (histograms expand to cumulative `_bucket` lines plus
+    /// `_sum` / `_count`; gauges also emit a `<name>_peak` family for
+    /// their high-water mark).
+    pub fn render(&self) -> String {
+        let fams = self.families.read().expect("telemetry registry poisoned");
+        let mut out = String::new();
+        for (name, fam) in fams.iter() {
+            let Some(kind) = fam.series.values().next().map(Metric::kind) else { continue };
+            if !fam.help.is_empty() {
+                let _ = writeln!(out, "# HELP {name} {}", fam.help);
+            }
+            let _ = writeln!(out, "# TYPE {name} {kind}");
+            for (labels, metric) in &fam.series {
+                match metric {
+                    Metric::Counter(c) => series_line(&mut out, name, labels, "", c.get()),
+                    Metric::Gauge(g) => {
+                        series_line(&mut out, name, labels, "", g.value() as u64)
+                    }
+                    Metric::Histogram(h) => {
+                        let snap = h.snapshot();
+                        let mut cum = 0u64;
+                        for (i, &b) in snap.buckets.iter().enumerate() {
+                            cum += b;
+                            if b == 0 && i + 1 < HIST_BUCKETS {
+                                continue; // only boundaries that move, plus +Inf
+                            }
+                            let le = match bucket_upper_bound(i) {
+                                Some(hi) => hi.to_string(),
+                                None => "+Inf".to_string(),
+                            };
+                            let le = label("le", &le);
+                            series_line(&mut out, &format!("{name}_bucket"), labels, &le, cum);
+                        }
+                        series_line(&mut out, &format!("{name}_sum"), labels, "", snap.sum);
+                        series_line(&mut out, &format!("{name}_count"), labels, "", snap.count());
+                    }
+                }
+            }
+            if kind == "gauge" {
+                let _ = writeln!(out, "# TYPE {name}_peak gauge");
+                for (labels, metric) in &fam.series {
+                    if let Metric::Gauge(g) = metric {
+                        series_line(&mut out, &format!("{name}_peak"), labels, "", g.peak() as u64);
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Append one `name{labels} value` exposition line; `extra` is an
+/// additional label pair (the histogram `le`).
+fn series_line(out: &mut String, name: &str, labels: &str, extra: &str, value: u64) {
+    let _ = match (labels.is_empty(), extra.is_empty()) {
+        (true, true) => writeln!(out, "{name} {value}"),
+        (true, false) => writeln!(out, "{name}{{{extra}}} {value}"),
+        (false, true) => writeln!(out, "{name}{{{labels}}} {value}"),
+        (false, false) => writeln!(out, "{name}{{{labels},{extra}}} {value}"),
+    };
+}
+
+/// Render one `key="value"` label pair, escaping the value per the
+/// exposition format (`\\`, `\"`, `\n`).
+pub fn label(key: &str, value: &str) -> String {
+    let mut v = String::with_capacity(value.len());
+    for ch in value.chars() {
+        match ch {
+            '\\' => v.push_str("\\\\"),
+            '"' => v.push_str("\\\""),
+            '\n' => v.push_str("\\n"),
+            c => v.push(c),
+        }
+    }
+    format!("{key}=\"{v}\"")
+}
+
+/// The process-wide registry every subsystem records into.
+pub fn global() -> &'static MetricRegistry {
+    static GLOBAL: OnceLock<MetricRegistry> = OnceLock::new();
+    GLOBAL.get_or_init(MetricRegistry::default)
+}

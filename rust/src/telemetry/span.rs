@@ -1,0 +1,157 @@
+//! Iteration span tracing: one JSONL record per training iteration.
+//!
+//! The engine session loop ([`crate::engine::Cluster::run_session_traced`])
+//! fills an [`IterSpan`] per iteration — phase wall-clock deltas in
+//! the order of [`crate::metrics::PHASES`], the primal objective, and
+//! the weight-delta norm `||w_t - w_{t-1}||` — and hands it to a
+//! [`TraceWriter`], which appends one JSON line to the `--trace` file.
+//! The record is flushed per iteration, so a killed run keeps every
+//! completed iteration. The format is flat enough to load with any
+//! JSON-lines reader and plot the paper's Figures 2/5/6 directly.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::metrics::{NPHASES, PHASES};
+
+/// Everything one training iteration reports into the trace.
+#[derive(Clone, Debug)]
+pub struct IterSpan {
+    /// 0-based iteration index within the session
+    pub iter: usize,
+    /// primal objective J at the pre-update weights
+    pub objective: f64,
+    /// training loss sum at the pre-update weights
+    pub train_loss: f64,
+    /// training error fraction (CLS/MLT) or mean squared residual (SVR)
+    pub train_err: f64,
+    /// `||w_t - w_{t-1}||_2` over the flat weight view
+    pub weight_delta: f64,
+    /// held-out metric if the session has a test set
+    pub test_metric: Option<f64>,
+    /// this iteration's wall-clock per phase, [`PHASES`] order, seconds
+    pub phase_secs: [f64; NPHASES],
+}
+
+/// Appends [`IterSpan`]s as JSONL. Records carry a session id so a
+/// sweep's per-lambda sessions stay distinguishable in one file.
+pub struct TraceWriter {
+    out: BufWriter<File>,
+    path: PathBuf,
+    session: usize,
+}
+
+impl TraceWriter {
+    /// Create (truncate) the trace file.
+    pub fn create(path: &Path) -> Result<TraceWriter> {
+        let file = File::create(path)
+            .with_context(|| format!("creating trace file {}", path.display()))?;
+        Ok(TraceWriter { out: BufWriter::new(file), path: path.to_path_buf(), session: 0 })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Tag subsequent records with a session id (sweeps bump this once
+    /// per lambda; plain `train` leaves it at 0).
+    pub fn set_session(&mut self, session: usize) {
+        self.session = session;
+    }
+
+    /// Append one iteration record and flush it to disk.
+    pub fn record(&mut self, span: &IterSpan) -> Result<()> {
+        let mut line = String::with_capacity(256);
+        line.push_str(&format!(
+            "{{\"session\":{},\"iter\":{},\"objective\":{},\"train_loss\":{},\"train_err\":{},\
+             \"weight_delta\":{}",
+            self.session,
+            span.iter,
+            json_f64(span.objective),
+            json_f64(span.train_loss),
+            json_f64(span.train_err),
+            json_f64(span.weight_delta),
+        ));
+        match span.test_metric {
+            Some(m) => line.push_str(&format!(",\"test_metric\":{}", json_f64(m))),
+            None => line.push_str(",\"test_metric\":null"),
+        }
+        line.push_str(",\"phases\":{");
+        for (i, p) in PHASES.iter().enumerate() {
+            if i > 0 {
+                line.push(',');
+            }
+            line.push_str(&format!("\"{}\":{}", p.name(), json_f64(span.phase_secs[i])));
+        }
+        line.push_str("}}\n");
+        self.out
+            .write_all(line.as_bytes())
+            .and_then(|()| self.out.flush())
+            .with_context(|| format!("writing trace record to {}", self.path.display()))
+    }
+}
+
+/// f64 as a JSON value: `Display` for finite numbers (round-trips in
+/// any JSON parser), `null` for NaN/inf (which JSON cannot carry).
+fn json_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_are_one_json_line_each() {
+        let dir = std::env::temp_dir().join("pemsvm_telemetry_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.jsonl");
+        let mut tw = TraceWriter::create(&path).unwrap();
+        let mut phase_secs = [0f64; NPHASES];
+        phase_secs[0] = 1.5e-3;
+        tw.record(&IterSpan {
+            iter: 0,
+            objective: 12.5,
+            train_loss: 3.25,
+            train_err: 0.125,
+            weight_delta: 0.5,
+            test_metric: None,
+            phase_secs,
+        })
+        .unwrap();
+        tw.set_session(1);
+        tw.record(&IterSpan {
+            iter: 0,
+            objective: f64::INFINITY,
+            train_loss: 0.0,
+            train_err: 0.0,
+            weight_delta: 0.0,
+            test_metric: Some(0.75),
+            phase_secs: [0.0; NPHASES],
+        })
+        .unwrap();
+        drop(tw);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].starts_with("{\"session\":0,\"iter\":0,\"objective\":12.5,"));
+        assert!(lines[0].contains("\"draw_gamma\":0.0015"));
+        assert!(lines[0].contains("\"test_metric\":null"));
+        assert!(lines[1].starts_with("{\"session\":1,"));
+        assert!(lines[1].contains("\"objective\":null")); // inf -> null
+        assert!(lines[1].contains("\"test_metric\":0.75"));
+        // braces balance on every line (cheap well-formedness check)
+        for l in &lines {
+            let open = l.matches('{').count();
+            assert_eq!(open, l.matches('}').count());
+            assert_eq!(open, 2); // the record object + its phases object
+        }
+    }
+}

@@ -269,4 +269,88 @@ fn tcp_protocol_matches_batch_scorer() {
     reader.read_line(&mut stats).unwrap();
     assert!(stats.starts_with("stats m:"), "got `{stats}`");
     assert!(stats.contains(" rows=300 "), "got `{stats}`");
+
+    // the metrics verb returns the Prometheus exposition, terminated by
+    // `# EOF`, and its request counter agrees with #stats
+    writer.write_all(b"#metrics\n").unwrap();
+    writer.flush().unwrap();
+    let mut exposition = String::new();
+    loop {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        if line.trim_end() == "# EOF" {
+            break;
+        }
+        exposition.push_str(&line);
+    }
+    assert!(
+        exposition.contains("predict_requests_total{model=\"m\"} 300"),
+        "got:\n{exposition}"
+    );
+    assert!(exposition.contains("# TYPE predict_requests_total counter"));
+}
+
+/// Serving counters are keyed by model *name* in the global telemetry
+/// registry, so they stay monotone across a hot reload mid-stream AND
+/// across a full unload + republish (which allocates a new entry).
+#[test]
+fn stats_stay_monotone_across_mid_stream_reload() {
+    // unique model name: telemetry series are process-global, and other
+    // tests in this binary pin exact counts for their own names
+    let name = "hotswap";
+    let registry = Arc::new(Registry::new());
+    registry.publish(name, linear_model(TaskKind::Cls, Weights::Single(vec![1.0, 0.0]), 2, 1));
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let reg = registry.clone();
+    std::thread::spawn(move || {
+        let opts =
+            ServeOpts { max_batch: 8, max_wait: Duration::from_micros(500), workers: 1 };
+        let _ = serve::serve(listener, reg, "hotswap".into(), opts);
+    });
+
+    let send_rows = |writer: &mut TcpStream, reader: &mut BufReader<TcpStream>, n: usize| {
+        for _ in 0..n {
+            writer.write_all(b"1 1:2\n").unwrap();
+        }
+        writer.flush().unwrap();
+        for _ in 0..n {
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            assert!(!line.trim().is_empty());
+        }
+    };
+    let read_rows_stat = |writer: &mut TcpStream, reader: &mut BufReader<TcpStream>| -> String {
+        writer.write_all(b"#stats\n").unwrap();
+        writer.flush().unwrap();
+        let mut stats = String::new();
+        reader.read_line(&mut stats).unwrap();
+        stats
+    };
+
+    let stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+
+    send_rows(&mut writer, &mut reader, 10);
+    assert!(read_rows_stat(&mut writer, &mut reader).contains(" rows=10 "));
+
+    // hot reload mid-stream: same entry, new model Arc
+    registry.publish(name, linear_model(TaskKind::Cls, Weights::Single(vec![0.0, 1.0]), 2, 1));
+    send_rows(&mut writer, &mut reader, 10);
+    assert!(read_rows_stat(&mut writer, &mut reader).contains(" rows=20 "));
+
+    // full unload + republish: a brand-new entry under the same name,
+    // reached through a brand-new connection
+    assert!(registry.unload(name));
+    registry.publish(name, linear_model(TaskKind::Cls, Weights::Single(vec![1.0, 1.0]), 2, 1));
+    let stream2 = TcpStream::connect(addr).unwrap();
+    stream2.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut writer2 = stream2.try_clone().unwrap();
+    let mut reader2 = BufReader::new(stream2);
+    send_rows(&mut writer2, &mut reader2, 10);
+    let stats = read_rows_stat(&mut writer2, &mut reader2);
+    assert!(stats.contains(" rows=30 "), "counts reset across republish: `{stats}`");
 }

@@ -1,0 +1,201 @@
+//! Tier-1 tests for the telemetry layer (DESIGN.md §12): exactness of
+//! the lock-free counters under contention, histogram bucket/merge
+//! semantics, and the Prometheus text exposition.
+
+use std::sync::Arc;
+
+use pemsvm::telemetry::{
+    Counter, Histogram, HistogramSnapshot, MetricRegistry, HIST_BUCKETS,
+};
+
+#[test]
+fn concurrent_counter_increments_sum_exactly() {
+    const THREADS: usize = 8;
+    const PER_THREAD: u64 = 100_000;
+    let c = Arc::new(Counter::new());
+    let handles: Vec<_> = (0..THREADS)
+        .map(|t| {
+            let c = c.clone();
+            std::thread::spawn(move || {
+                // mix inc() and add() so both paths are exercised
+                for i in 0..PER_THREAD {
+                    if (i + t as u64) % 2 == 0 {
+                        c.inc();
+                    } else {
+                        c.add(1);
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(c.get(), THREADS as u64 * PER_THREAD);
+}
+
+#[test]
+fn snapshot_during_increment_loses_nothing() {
+    // Reads racing writes must be monotone (per-cell coherence) and the
+    // final read after join must be exact.
+    const WRITERS: usize = 4;
+    const PER_WRITER: u64 = 200_000;
+    let c = Arc::new(Counter::new());
+    let writers: Vec<_> = (0..WRITERS)
+        .map(|_| {
+            let c = c.clone();
+            std::thread::spawn(move || {
+                for _ in 0..PER_WRITER {
+                    c.inc();
+                }
+            })
+        })
+        .collect();
+    let reader = {
+        let c = c.clone();
+        std::thread::spawn(move || {
+            let mut prev = 0u64;
+            let target = WRITERS as u64 * PER_WRITER;
+            while prev < target {
+                let now = c.get();
+                assert!(now >= prev, "counter regressed: {now} < {prev}");
+                prev = now;
+            }
+            prev
+        })
+    };
+    for w in writers {
+        w.join().unwrap();
+    }
+    assert_eq!(reader.join().unwrap(), WRITERS as u64 * PER_WRITER);
+    assert_eq!(c.get(), WRITERS as u64 * PER_WRITER);
+}
+
+#[test]
+fn histogram_bucket_boundaries() {
+    let h = Histogram::new();
+    // bucket 0: exact zeros; bucket i: bit length i
+    h.observe(0); // bucket 0
+    h.observe(1); // bucket 1
+    h.observe(2); // bucket 2
+    h.observe(3); // bucket 2
+    h.observe(4); // bucket 3
+    h.observe(255); // bucket 8 (2^7 ..= 2^8 - 1)
+    h.observe(256); // bucket 9
+    h.observe(u64::MAX); // overflow bucket
+    let s = h.snapshot();
+    assert_eq!(s.buckets[0], 1);
+    assert_eq!(s.buckets[1], 1);
+    assert_eq!(s.buckets[2], 2);
+    assert_eq!(s.buckets[3], 1);
+    assert_eq!(s.buckets[8], 1);
+    assert_eq!(s.buckets[9], 1);
+    assert_eq!(s.buckets[HIST_BUCKETS - 1], 1);
+    assert_eq!(s.count(), 8);
+    // the running sum is a plain atomic add, wrapping past u64::MAX
+    assert_eq!(s.sum, (1u64 + 2 + 3 + 4 + 255 + 256).wrapping_add(u64::MAX));
+}
+
+#[test]
+fn histogram_merge_is_associative() {
+    fn filled(values: &[u64]) -> HistogramSnapshot {
+        let h = Histogram::new();
+        for &v in values {
+            h.observe(v);
+        }
+        h.snapshot()
+    }
+    let a = filled(&[0, 5, 17, 900]);
+    let b = filled(&[1, 1, 1, 1 << 20]);
+    let c = filled(&[3, 1 << 30, 42]);
+
+    let mut left = a;
+    left.merge(&b);
+    left.merge(&c); // (a + b) + c
+
+    let mut bc = b;
+    bc.merge(&c);
+    let mut right = a;
+    right.merge(&bc); // a + (b + c)
+
+    assert_eq!(left, right);
+    assert_eq!(left.count(), 11);
+}
+
+/// Every non-comment, non-blank exposition line must look like
+/// `name{labels} value` (or `name value`) with a u64 value — the same
+/// shape the CI smoke's awk check enforces on a live `#metrics` scrape.
+fn assert_parses_as_exposition(text: &str) {
+    for line in text.lines() {
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (series, value) = line.rsplit_once(' ').unwrap_or_else(|| {
+            panic!("exposition line without value: `{line}`");
+        });
+        value.parse::<u64>().unwrap_or_else(|_| {
+            panic!("non-numeric value `{value}` in line `{line}`");
+        });
+        let name = series.split('{').next().unwrap();
+        assert!(!name.is_empty(), "empty series name in `{line}`");
+        assert!(
+            name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_'),
+            "bad metric name `{name}` in `{line}`"
+        );
+        if let Some(rest) = series.strip_prefix(name) {
+            if !rest.is_empty() {
+                assert!(
+                    rest.starts_with('{') && rest.ends_with('}'),
+                    "malformed label block in `{line}`"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn registry_renders_prometheus_text() {
+    // a local (non-global) registry keeps this test independent of
+    // series other tests create
+    let reg = MetricRegistry::new();
+    reg.counter("requests_total", "Total requests.").add(3);
+    reg.gauge_labeled("resident_rows", &pemsvm::telemetry::label("stage", "ingest"), "Rows.")
+        .set(7);
+    let h = reg.histogram("latency_nanos", "Latency.");
+    h.observe(100);
+    h.observe(2000);
+
+    let text = reg.render();
+    assert_parses_as_exposition(&text);
+    assert!(text.contains("# TYPE requests_total counter"), "{text}");
+    assert!(text.contains("requests_total 3"), "{text}");
+    assert!(text.contains("# TYPE resident_rows gauge"), "{text}");
+    assert!(text.contains("resident_rows{stage=\"ingest\"} 7"), "{text}");
+    // gauges expose their high-water mark as a sibling family
+    assert!(text.contains("resident_rows_peak{stage=\"ingest\"} 7"), "{text}");
+    assert!(text.contains("# TYPE latency_nanos histogram"), "{text}");
+    assert!(text.contains("latency_nanos_bucket{le=\"+Inf\"} 2"), "{text}");
+    assert!(text.contains("latency_nanos_sum 2100"), "{text}");
+    assert!(text.contains("latency_nanos_count 2"), "{text}");
+}
+
+#[test]
+fn reregistration_returns_the_same_cells() {
+    let reg = MetricRegistry::new();
+    let a = reg.counter("shared_total", "First registration.");
+    a.add(5);
+    // same name => same underlying series (this is what keeps serving
+    // stats continuous across model hot reloads)
+    let b = reg.counter("shared_total", "Second registration.");
+    b.add(2);
+    assert_eq!(a.get(), 7);
+    assert!(Arc::ptr_eq(&a, &b));
+}
+
+#[test]
+fn label_escaping() {
+    assert_eq!(pemsvm::telemetry::label("model", "plain"), "model=\"plain\"");
+    assert_eq!(pemsvm::telemetry::label("model", "a\"b"), "model=\"a\\\"b\"");
+    assert_eq!(pemsvm::telemetry::label("model", "a\\b"), "model=\"a\\\\b\"");
+    assert_eq!(pemsvm::telemetry::label("model", "a\nb"), "model=\"a\\nb\"");
+}
