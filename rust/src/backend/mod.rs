@@ -36,14 +36,50 @@ pub enum StepInput {
     Mlt { w_all: Arc<Mat>, yidx: usize },
 }
 
+/// A worker's sampler-RNG state, captured for checkpointing: the raw
+/// PCG64 register pair plus the normal source's cached polar spare.
+/// Restoring it resumes the worker's draw sequence bit-exactly
+/// (DESIGN.md §13).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RngState {
+    pub state: u128,
+    pub inc: u128,
+    pub spare: Option<f64>,
+}
+
 /// A worker's compute engine over its shard.
 pub trait WorkerBackend: Send {
     /// Full pass over the shard at the given weights: gamma update +
     /// local statistics (Eq. 40) + local objective.
     fn step(&mut self, input: &StepInput) -> Result<PartialStats>;
 
+    /// [`step`](WorkerBackend::step), additionally accumulating the
+    /// given **global** row ranges into the same statistics — how a
+    /// survivor adopts an evicted worker's rows mid-session (DESIGN.md
+    /// §13). The default supports only the empty adoption set; backends
+    /// whose workers hold the full dataset override it.
+    fn step_ranges(&mut self, input: &StepInput, extra: &[Range<usize>]) -> Result<PartialStats> {
+        if extra.is_empty() {
+            self.step(input)
+        } else {
+            anyhow::bail!("this backend cannot adopt re-sharded rows")
+        }
+    }
+
     /// Feature dimensionality of the returned statistics.
     fn stat_dim(&self) -> usize;
+
+    /// Capture the worker's sampler-RNG state for a checkpoint. `None`
+    /// means the backend has no restorable RNG (checkpoints then record
+    /// the gap and `--resume` rejects the file).
+    fn rng_state(&self) -> Option<RngState> {
+        None
+    }
+
+    /// Restore a state captured by [`rng_state`](WorkerBackend::rng_state).
+    fn set_rng_state(&mut self, _state: RngState) -> Result<()> {
+        anyhow::bail!("this backend does not support RNG checkpointing")
+    }
 
     /// Streaming ingestion (DESIGN.md §10): append the rows of `chunk`
     /// that fall inside this worker's shard window. Only workers built

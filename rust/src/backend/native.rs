@@ -15,7 +15,7 @@ use crate::solver::local;
 use crate::solver::master::{solve_native, Regularizer};
 use crate::solver::{GammaMode, PartialStats};
 
-use super::{MasterBackend, StepInput, WorkerBackend};
+use super::{MasterBackend, RngState, StepInput, WorkerBackend};
 
 /// One worker's native compute state.
 ///
@@ -89,47 +89,89 @@ impl NativeWorker {
         }
     }
 
+    /// One pass over `range`, **accumulating** into `out` (the local
+    /// step kernels add; the caller owns the reset). Factored out so
+    /// [`WorkerBackend::step_ranges`] can run the worker's own shard
+    /// plus any adopted ranges into a single partial.
+    fn run_into(
+        &mut self,
+        input: &StepInput,
+        range: Range<usize>,
+        out: &mut PartialStats,
+    ) -> Result<()> {
+        let ds = self.ds.clone();
+        let eps = self.eps;
+        // build the mode from disjoint fields so `ws` can borrow too
+        let ws = &mut self.ws;
+        let mut mode = match self.algo {
+            Algo::Em => GammaMode::Em,
+            Algo::Mc => GammaMode::Mc { rng: &mut self.rng, normals: &mut self.normals },
+        };
+        match input {
+            StepInput::Binary { w } => local::lin_step(&ds, range, w, eps, &mut mode, ws, out),
+            StepInput::Svr { w, eps_ins } => {
+                local::svr_step(&ds, range, w, eps, *eps_ins, &mut mode, ws, out)
+            }
+            StepInput::Mlt { w_all, yidx } => {
+                local::mlt_step(&ds, range, w_all, *yidx, eps, &mut mode, ws, out)
+            }
+        }
+        Ok(())
+    }
 }
 
 impl WorkerBackend for NativeWorker {
     fn step(&mut self, input: &StepInput) -> Result<PartialStats> {
+        self.step_ranges(input, &[])
+    }
+
+    fn step_ranges(&mut self, input: &StepInput, extra: &[Range<usize>]) -> Result<PartialStats> {
         if self.builder.is_some() {
             bail!("streamed worker stepped before seal");
+        }
+        // eager workers hold the full dataset, so global adopted ranges
+        // index it directly; a sealed streamed worker holds only its own
+        // shard and cannot adopt (the pool guards this, belt + braces)
+        for r in extra {
+            if r.end > self.ds.n {
+                bail!(
+                    "adopted range {}..{} outside this worker's dataset view (n = {})",
+                    r.start,
+                    r.end,
+                    self.ds.n
+                );
+            }
         }
         self.stats.reset();
         // split borrows: move stats out, run, move back
         let mut stats = std::mem::replace(&mut self.stats, PartialStats::zeros(0));
-        {
-            let ds = self.ds.clone();
-            let range = self.range.clone();
-            let eps = self.eps;
-            // build the mode from disjoint fields so `ws` can borrow too
-            let ws = &mut self.ws;
-            let mut mode = match self.algo {
-                Algo::Em => GammaMode::Em,
-                Algo::Mc => {
-                    GammaMode::Mc { rng: &mut self.rng, normals: &mut self.normals }
-                }
-            };
-            match input {
-                StepInput::Binary { w } => {
-                    local::lin_step(&ds, range, w, eps, &mut mode, ws, &mut stats)
-                }
-                StepInput::Svr { w, eps_ins } => {
-                    local::svr_step(&ds, range, w, eps, *eps_ins, &mut mode, ws, &mut stats)
-                }
-                StepInput::Mlt { w_all, yidx } => {
-                    local::mlt_step(&ds, range, w_all, *yidx, eps, &mut mode, ws, &mut stats)
+        let mut res = self.run_into(input, self.range.clone(), &mut stats);
+        if res.is_ok() {
+            for r in extra {
+                res = self.run_into(input, r.clone(), &mut stats);
+                if res.is_err() {
+                    break;
                 }
             }
         }
         let out = stats.clone();
         self.stats = stats;
-        Ok(out)
+        res.map(|()| out)
     }
 
     fn stat_dim(&self) -> usize {
         self.ds.k
+    }
+
+    fn rng_state(&self) -> Option<RngState> {
+        let (state, inc) = self.rng.to_raw();
+        Some(RngState { state, inc, spare: self.normals.spare() })
+    }
+
+    fn set_rng_state(&mut self, s: RngState) -> Result<()> {
+        self.rng = Pcg64::from_raw(s.state, s.inc);
+        self.normals = NormalSource::with_spare(s.spare);
+        Ok(())
     }
 
     fn ingest(&mut self, chunk: &ParsedChunk) -> Result<()> {
@@ -198,6 +240,40 @@ mod tests {
         assert_eq!(t1.sigma.data, t2.sigma.data);
         // and different from EM
         assert_ne!(t1.sigma.data, s1.sigma.data);
+    }
+
+    #[test]
+    fn step_ranges_accumulates_adopted_rows() {
+        // a worker stepping its own shard plus an adopted range produces
+        // the same statistics as a worker owning the union outright
+        let ds = Arc::new(synth::alpha_like(300, 8, 3));
+        let w = Arc::new(vec![0.05f32; 8]);
+        let mut split = NativeWorker::new(ds.clone(), 0..150, Algo::Em, 1e-5, 7, 0);
+        let got = split.step_ranges(&StepInput::Binary { w: w.clone() }, &[150..300]).unwrap();
+        let mut whole = NativeWorker::new(ds.clone(), 0..300, Algo::Em, 1e-5, 7, 0);
+        let want = whole.step(&StepInput::Binary { w: w.clone() }).unwrap();
+        assert_eq!(got.sigma.data, want.sigma.data);
+        assert_eq!(got.mu, want.mu);
+        assert_eq!(got.obj, want.obj);
+        // an out-of-bounds adopted range is rejected, not a panic
+        assert!(split.step_ranges(&StepInput::Binary { w }, &[290..301]).is_err());
+    }
+
+    #[test]
+    fn rng_state_roundtrip_is_bit_exact() {
+        let ds = Arc::new(synth::alpha_like(100, 6, 5));
+        let w = Arc::new(vec![0.1f32; 6]);
+        let mut a = NativeWorker::new(ds.clone(), 0..100, Algo::Mc, 1e-5, 11, 2);
+        // advance the stream, snapshot, advance again
+        a.step(&StepInput::Binary { w: w.clone() }).unwrap();
+        let snap = a.rng_state().unwrap();
+        let s1 = a.step(&StepInput::Binary { w: w.clone() }).unwrap();
+        // restore and re-run: the draw sequence must replay exactly
+        a.set_rng_state(snap).unwrap();
+        assert_eq!(a.rng_state().unwrap(), snap);
+        let s2 = a.step(&StepInput::Binary { w }).unwrap();
+        assert_eq!(s1.sigma.data, s2.sigma.data);
+        assert_eq!(s1.mu, s2.mu);
     }
 
     #[test]

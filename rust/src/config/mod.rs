@@ -112,6 +112,12 @@ pub struct TrainConfig {
     /// kernel artifact (true, default) or the XLA-native-dot ablation
     /// twin (false; EM/CLS only)
     pub xla_use_pallas: bool,
+    /// fault tolerance (DESIGN.md §13): how long the leader waits for a
+    /// worker's step reply before retrying it (threaded topology)
+    pub step_timeout_ms: u64,
+    /// retries per worker per round before the worker is evicted and its
+    /// rows re-sharded onto the survivors
+    pub step_retries: usize,
 }
 
 impl Default for TrainConfig {
@@ -137,6 +143,8 @@ impl Default for TrainConfig {
             topology: Topology::Threads,
             warm_start: false,
             xla_use_pallas: true,
+            step_timeout_ms: 30_000,
+            step_retries: 2,
         }
     }
 }
@@ -241,6 +249,8 @@ impl TrainConfig {
             }
             "warm_start" => self.warm_start = v.parse()?,
             "xla_use_pallas" => self.xla_use_pallas = v.parse()?,
+            "step_timeout_ms" => self.step_timeout_ms = v.parse()?,
+            "step_retries" => self.step_retries = v.parse()?,
             "backend" => {
                 self.backend = match v.to_ascii_lowercase().as_str() {
                     "native" => BackendKind::Native,
@@ -309,6 +319,18 @@ mod tests {
         c.set("warm_start", "true").unwrap();
         assert!(c.warm_start);
         assert!(c.set("topology", "mesh").is_err());
+    }
+
+    #[test]
+    fn fault_tolerance_keys() {
+        let mut c = TrainConfig::default();
+        assert_eq!(c.step_timeout_ms, 30_000);
+        assert_eq!(c.step_retries, 2);
+        c.set("step_timeout_ms", "250").unwrap();
+        c.set("step_retries", "5").unwrap();
+        assert_eq!(c.step_timeout_ms, 250);
+        assert_eq!(c.step_retries, 5);
+        assert!(c.set("step_timeout_ms", "fast").is_err());
     }
 
     #[test]

@@ -16,7 +16,7 @@ use anyhow::{bail, Result};
 
 use crate::config::{ModelKind, TaskKind, TrainConfig};
 use crate::data::{Dataset, Task};
-use crate::engine::{Cluster, WarmStart};
+use crate::engine::{CheckpointCfg, Cluster, WarmStart};
 use crate::solver::{gram_dataset, KernelModel};
 use crate::telemetry::TraceWriter;
 
@@ -42,6 +42,19 @@ pub fn train_full_traced(
     cfg: &TrainConfig,
     trace: Option<&mut TraceWriter>,
 ) -> Result<TrainOutput> {
+    train_full_checkpointed(ds, test, cfg, trace, None)
+}
+
+/// [`train_full_traced`] with checkpoint/resume (DESIGN.md §13): with
+/// `ck`, the session state is written every `ck.every` iterations and
+/// `ck.resume` continues a killed run bit-exactly.
+pub fn train_full_checkpointed(
+    ds: &Dataset,
+    test: Option<&Dataset>,
+    cfg: &TrainConfig,
+    trace: Option<&mut TraceWriter>,
+    ck: Option<&CheckpointCfg>,
+) -> Result<TrainOutput> {
     // reject a task/dataset mismatch before any work — for KRN the
     // engine's own check would only fire after the O(N^2 K) Gram pass
     match (cfg.task, ds.task) {
@@ -54,10 +67,13 @@ pub fn train_full_traced(
         if cfg.task != TaskKind::Cls {
             bail!("KRN is implemented for CLS (the paper evaluates KRN-EM-CLS)");
         }
+        if ck.is_some() {
+            bail!("checkpoint/resume is implemented for linear models (LIN)");
+        }
         return train_kernel(ds, test, cfg, trace);
     }
     let mut cluster = Cluster::new(ds, cfg)?;
-    cluster.run_session_traced(cfg, test, WarmStart::Cold, trace)
+    cluster.run_session_checkpointed(cfg, test, WarmStart::Cold, trace, ck)
 }
 
 /// KRN: swap in the Gram-row dataset and the Gram regularizer (§3.1),

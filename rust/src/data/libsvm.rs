@@ -263,6 +263,71 @@ mod tests {
     }
 
     #[test]
+    fn parse_row_feature_index_overflow_is_an_error_not_a_wrap() {
+        // u32::MAX + 1: must fail parse, never wrap around to index 0
+        assert!(parse_row("1 4294967296:1.0", 1).is_err());
+        assert!(parse_row("1 99999999999999999999:1.0", 1).is_err());
+        // u32::MAX itself is representable (0-based u32::MAX - 1)
+        let (_, pairs) = parse_row("1 4294967295:2.0", 1).unwrap().unwrap();
+        assert_eq!(pairs, vec![(u32::MAX - 1, 2.0)]);
+    }
+
+    #[test]
+    fn parse_row_tolerates_trailing_whitespace_and_cr() {
+        // trailing spaces/tabs and a Windows \r must not become tokens
+        let (label, pairs) = parse_row("1 3:1.5 \t ", 1).unwrap().unwrap();
+        assert_eq!((label, pairs), (1.0, vec![(2, 1.5)]));
+        let (label, pairs) = parse_row("-1 2:0.5\r", 1).unwrap().unwrap();
+        assert_eq!((label, pairs), (-1.0, vec![(1, 0.5)]));
+        // a trailing comment marker mid-line is NOT a comment: `#` only
+        // introduces comments at line start, so this token must error
+        assert!(parse_row("1 2:0.5 # trailing", 1).is_err());
+    }
+
+    #[test]
+    fn parse_row_never_panics_on_adversarial_input() {
+        // property-style sweep: every line must return Ok(Some)/Ok(None)/
+        // Err — a panic in the parser would take down a serve connection
+        // reader thread (`serve::server` feeds client bytes in here)
+        let corpus = [
+            ":",
+            "1 :",
+            "1 :5",
+            "1 5:",
+            "1 ::",
+            "1 1:2:3",
+            "1 -3:1.0",
+            "1 3:-inf",
+            "1 3:NaN",
+            "nan 1:1",
+            "1 18446744073709551616:1",
+            "\u{0}",
+            "1 \u{0}:1",
+            "+ 1:1",
+            "1e999 1:1",
+            "1 1:1e999",
+            "  -1   7:0.5    2:1.0  ",
+        ];
+        for (i, line) in corpus.iter().enumerate() {
+            let _ = parse_row(line, i + 1); // must return, not panic
+        }
+        // seeded fuzz over the format's alphabet
+        let mut g = crate::rng::Pcg64::new(99);
+        let alphabet: &[u8] = b"0123456789:. -+eE#\t\rinfa";
+        for round in 0..1000 {
+            let len = g.next_below(48) as usize;
+            let line: String = (0..len)
+                .map(|_| alphabet[g.next_below(alphabet.len() as u64) as usize] as char)
+                .collect();
+            if let Ok(Some((label, pairs))) = parse_row(&line, round) {
+                // whatever parses obeys the parsed-row invariants
+                assert!(!label.is_nan() || line.to_ascii_lowercase().contains("nan"));
+                assert!(pairs.windows(2).all(|w| w[0].0 <= w[1].0), "sorted: `{line}`");
+            }
+        }
+    }
+
+    #[test]
     fn rejects_zero_index() {
         let dir = std::env::temp_dir().join("pemsvm_libsvm_test");
         std::fs::create_dir_all(&dir).unwrap();

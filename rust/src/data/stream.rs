@@ -676,6 +676,32 @@ mod tests {
     }
 
     #[test]
+    fn malformed_rows_surface_as_errors_not_panics() {
+        // parse failures mid-file must come back as Err from open (the
+        // scan touches every line) or from chunk iteration — a streamed
+        // reader that panics would take the ingestion thread with it
+        for (name, body) in [
+            ("bad_tok.svm", "1 3:1.5\n1 x:y\n-1 2:0.5\n"),
+            ("zero_idx.svm", "1 0:2.0\n"),
+            ("overflow.svm", "1 4294967296:1.0\n"),
+            ("bad_label.svm", "spam 2:1.0\n"),
+        ] {
+            let p = tmpfile(name);
+            std::fs::write(&p, body).unwrap();
+            // auto-scan path: the dim scan itself hits the bad row
+            let got = StreamReader::open(&p, Task::Binary, &StreamOpts::rows(4))
+                .and_then(|r| r.map(|c| c.map(|_| ())).collect::<Result<Vec<_>>>());
+            assert!(got.is_err(), "{name}: expected Err, got {got:?}");
+            // declared-dims path skips the scan, so the error must
+            // surface from the chunk iterator instead
+            let opts = StreamOpts { chunk_rows: 4, dims: Some((3, 8)), class_off: None };
+            let got = StreamReader::open(&p, Task::Binary, &opts)
+                .and_then(|r| r.map(|c| c.map(|_| ())).collect::<Result<Vec<_>>>());
+            assert!(got.is_err(), "{name} (declared dims): expected Err, got {got:?}");
+        }
+    }
+
+    #[test]
     fn multiclass_one_based_matches_eager() {
         let p = tmpfile("mc.svm");
         std::fs::write(&p, "1 1:1\n2 1:1\n3 1:1\n").unwrap();

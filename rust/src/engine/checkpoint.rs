@@ -1,0 +1,429 @@
+//! Iteration checkpointing (DESIGN.md §13): everything a training
+//! session needs to continue **bit-identically** after a kill, in a
+//! versioned plain-text format next of kin to `pemsvm-model v1`.
+//!
+//! Bit-exact resume is stricter than "load the weights": the session's
+//! state also includes the MC running average, the stopping rule's
+//! smoothed-objective tail, and three RNG streams (the master's
+//! posterior-noise stream plus one sampler stream per worker). All of
+//! them are captured, and every float is serialized as its IEEE-754 bit
+//! pattern in hex — a round-trip through decimal formatting would
+//! perturb the trajectory.
+//!
+//! Layout (`pemsvm-ckpt v1`): a header of `key value` lines carrying the
+//! config fingerprint (task/algo/seed/worker count/λ/ε — resume refuses
+//! a checkpoint written under a different fingerprint), then the state
+//! vectors as `name <len> <hex>...` lines, then the RNG block, then an
+//! `end` sentinel so a truncated file is detected rather than resumed.
+
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::backend::RngState;
+use crate::config::TrainConfig;
+
+/// Checkpointing knobs for a session: write every `every` iterations to
+/// `path`; `resume` starts the session from the file instead of fresh.
+#[derive(Clone, Debug)]
+pub struct CheckpointCfg {
+    pub every: usize,
+    pub path: PathBuf,
+    pub resume: bool,
+}
+
+/// One captured session state — the full resume payload.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    // config fingerprint: resume refuses a mismatch
+    pub task: String,
+    pub algo: String,
+    pub topology: String,
+    pub reduce: String,
+    pub seed: u64,
+    pub workers: usize,
+    pub burn_in: usize,
+    pub lambda_bits: u32,
+    pub eps_clamp_bits: u32,
+    pub eps_ins_bits: u32,
+    // session state
+    /// the iteration the resumed loop starts at
+    pub next_iter: usize,
+    /// statistics width (`k`, or the XLA-padded width)
+    pub dim: usize,
+    /// class count (1 for CLS/SVR)
+    pub m: usize,
+    /// driver weights, flat `[m * dim]`
+    pub weights: Vec<f32>,
+    /// MC running average over post-burn-in samples, if any yet
+    pub avg: Option<Vec<f32>>,
+    pub avg_count: usize,
+    /// stopping rule: previous (smoothed) objective
+    pub stop_jprev: f64,
+    /// stopping rule: the MC smoothing window tail (empty for EM)
+    pub stop_smooth: Vec<f64>,
+    /// the master's posterior-noise RNG stream
+    pub master_rng: RngState,
+    /// per-worker sampler streams; `None` for evicted workers or
+    /// backends without a restorable RNG
+    pub worker_rng: Vec<Option<RngState>>,
+}
+
+impl Checkpoint {
+    /// The config fingerprint of this checkpoint, from the session
+    /// config it was written under.
+    pub fn fingerprint(cfg: &TrainConfig) -> (String, String, String, String) {
+        (
+            format!("{:?}", cfg.task),
+            format!("{:?}", cfg.algo),
+            format!("{:?}", cfg.topology),
+            format!("{:?}", cfg.reduce),
+        )
+    }
+
+    /// Refuse to resume under a config that would diverge from the
+    /// trajectory this checkpoint was written on.
+    pub fn check_compat(&self, cfg: &TrainConfig) -> Result<()> {
+        let (task, algo, topology, reduce) = Self::fingerprint(cfg);
+        if self.task != task {
+            bail!("checkpoint task {} != session task {task}", self.task);
+        }
+        if self.algo != algo {
+            bail!("checkpoint algo {} != session algo {algo}", self.algo);
+        }
+        if self.topology != topology {
+            bail!("checkpoint topology {} != session topology {topology}", self.topology);
+        }
+        if self.reduce != reduce {
+            bail!(
+                "checkpoint reduce {} != session reduce {reduce} (association order \
+                 changes the f32 sums)",
+                self.reduce
+            );
+        }
+        if self.seed != cfg.seed {
+            bail!("checkpoint seed {} != session seed {}", self.seed, cfg.seed);
+        }
+        if self.workers != cfg.workers.max(1) {
+            bail!(
+                "checkpoint was written with {} workers, session has {}",
+                self.workers,
+                cfg.workers.max(1)
+            );
+        }
+        if self.burn_in != cfg.burn_in {
+            bail!("checkpoint burn_in {} != session burn_in {}", self.burn_in, cfg.burn_in);
+        }
+        if self.lambda_bits != cfg.lambda.to_bits() {
+            bail!("checkpoint lambda differs from the session's (bit-exact compare)");
+        }
+        if self.eps_clamp_bits != cfg.eps_clamp.to_bits() {
+            bail!("checkpoint eps_clamp differs from the session's (bit-exact compare)");
+        }
+        if self.eps_ins_bits != cfg.eps_insensitive.to_bits() {
+            bail!("checkpoint eps_insensitive differs from the session's (bit-exact compare)");
+        }
+        Ok(())
+    }
+
+    /// Serialize to the `pemsvm-ckpt v1` text format.
+    pub fn to_text(&self) -> String {
+        let mut s = String::new();
+        s.push_str("pemsvm-ckpt v1\n");
+        let _ = writeln!(s, "task {}", self.task);
+        let _ = writeln!(s, "algo {}", self.algo);
+        let _ = writeln!(s, "topology {}", self.topology);
+        let _ = writeln!(s, "reduce {}", self.reduce);
+        let _ = writeln!(s, "seed {}", self.seed);
+        let _ = writeln!(s, "workers {}", self.workers);
+        let _ = writeln!(s, "burn_in {}", self.burn_in);
+        let _ = writeln!(s, "lambda {:08x}", self.lambda_bits);
+        let _ = writeln!(s, "eps_clamp {:08x}", self.eps_clamp_bits);
+        let _ = writeln!(s, "eps_insensitive {:08x}", self.eps_ins_bits);
+        let _ = writeln!(s, "next_iter {}", self.next_iter);
+        let _ = writeln!(s, "dim {}", self.dim);
+        let _ = writeln!(s, "classes {}", self.m);
+        write_f32s(&mut s, "weights", &self.weights);
+        match &self.avg {
+            Some(a) => write_f32s(&mut s, "avg", a),
+            None => s.push_str("avg none\n"),
+        }
+        let _ = writeln!(s, "avg_count {}", self.avg_count);
+        let _ = writeln!(s, "stop_jprev {:016x}", self.stop_jprev.to_bits());
+        let _ = write!(s, "stop_smooth {}", self.stop_smooth.len());
+        for v in &self.stop_smooth {
+            let _ = write!(s, " {:016x}", v.to_bits());
+        }
+        s.push('\n');
+        let _ = writeln!(s, "master_rng {}", rng_text(&self.master_rng));
+        let _ = writeln!(s, "worker_rng {}", self.worker_rng.len());
+        for (wid, st) in self.worker_rng.iter().enumerate() {
+            match st {
+                Some(st) => {
+                    let _ = writeln!(s, "worker {wid} {}", rng_text(st));
+                }
+                None => {
+                    let _ = writeln!(s, "worker {wid} none");
+                }
+            }
+        }
+        s.push_str("end pemsvm-ckpt\n");
+        s
+    }
+
+    /// Parse the `pemsvm-ckpt v1` text format.
+    pub fn from_text(text: &str) -> Result<Checkpoint> {
+        let mut c = Cursor { it: text.lines(), lineno: 0 };
+        if c.next()? != "pemsvm-ckpt v1" {
+            bail!("not a pemsvm-ckpt v1 file");
+        }
+        let task = c.kv("task")?.to_string();
+        let algo = c.kv("algo")?.to_string();
+        let topology = c.kv("topology")?.to_string();
+        let reduce = c.kv("reduce")?.to_string();
+        let seed = c.kv("seed")?.parse().context("seed")?;
+        let workers = c.kv("workers")?.parse().context("workers")?;
+        let burn_in = c.kv("burn_in")?.parse().context("burn_in")?;
+        let lambda_bits = u32::from_str_radix(c.kv("lambda")?, 16).context("lambda")?;
+        let eps_clamp_bits = u32::from_str_radix(c.kv("eps_clamp")?, 16).context("eps_clamp")?;
+        let eps_ins_bits =
+            u32::from_str_radix(c.kv("eps_insensitive")?, 16).context("eps_insensitive")?;
+        let next_iter = c.kv("next_iter")?.parse().context("next_iter")?;
+        let dim: usize = c.kv("dim")?.parse().context("dim")?;
+        let m: usize = c.kv("classes")?.parse().context("classes")?;
+        let weights = read_f32s(c.kv("weights")?).context("weights")?;
+        if weights.len() != m * dim {
+            bail!("checkpoint weights length {} != classes*dim {}", weights.len(), m * dim);
+        }
+        let avg_line = c.kv("avg")?;
+        let avg = if avg_line == "none" { None } else { Some(read_f32s(avg_line).context("avg")?) };
+        let avg_count = c.kv("avg_count")?.parse().context("avg_count")?;
+        let stop_jprev =
+            f64::from_bits(u64::from_str_radix(c.kv("stop_jprev")?, 16).context("stop_jprev")?);
+        let stop_smooth = read_f64s(c.kv("stop_smooth")?).context("stop_smooth")?;
+        let master_rng = rng_parse(c.kv("master_rng")?).context("master_rng")?;
+        let nw: usize = c.kv("worker_rng")?.parse().context("worker_rng")?;
+        if nw > 1 << 20 {
+            bail!("unreasonable worker count {nw} in checkpoint");
+        }
+        let mut worker_rng = Vec::with_capacity(nw);
+        for wid in 0..nw {
+            let rest = c.kv("worker")?;
+            let (id, st) = rest.split_once(' ').ok_or_else(|| anyhow!("bad worker line"))?;
+            if id.parse::<usize>().ok() != Some(wid) {
+                bail!("worker RNG lines out of order (expected {wid}, got {id})");
+            }
+            worker_rng.push(if st == "none" { None } else { Some(rng_parse(st)?) });
+        }
+        if c.next()? != "end pemsvm-ckpt" {
+            bail!("checkpoint truncated: missing end sentinel");
+        }
+        Ok(Checkpoint {
+            task,
+            algo,
+            topology,
+            reduce,
+            seed,
+            workers,
+            burn_in,
+            lambda_bits,
+            eps_clamp_bits,
+            eps_ins_bits,
+            next_iter,
+            dim,
+            m,
+            weights,
+            avg,
+            avg_count,
+            stop_jprev,
+            stop_smooth,
+            master_rng,
+            worker_rng,
+        })
+    }
+
+    /// Write atomically: serialize to `<path>.tmp`, then rename over
+    /// `path` — a kill mid-write leaves the previous checkpoint intact.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let tmp = path.with_extension("ckpt.tmp");
+        std::fs::write(&tmp, self.to_text())
+            .with_context(|| format!("writing checkpoint {}", tmp.display()))?;
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("publishing checkpoint {}", path.display()))?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading checkpoint {}", path.display()))?;
+        Self::from_text(&text).with_context(|| format!("parsing checkpoint {}", path.display()))
+    }
+}
+
+struct Cursor<'a> {
+    it: std::str::Lines<'a>,
+    lineno: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn next(&mut self) -> Result<&'a str> {
+        self.lineno += 1;
+        self.it.next().ok_or_else(|| anyhow!("checkpoint truncated at line {}", self.lineno))
+    }
+
+    /// Read one `key rest...` line, checking the key.
+    fn kv(&mut self, key: &str) -> Result<&'a str> {
+        let line = self.next()?;
+        let (k, v) = line.split_once(' ').unwrap_or((line, ""));
+        if k != key {
+            bail!("checkpoint line {}: expected `{key}`, found `{k}`", self.lineno);
+        }
+        Ok(v)
+    }
+}
+
+fn write_f32s(s: &mut String, name: &str, vals: &[f32]) {
+    let _ = write!(s, "{name} {}", vals.len());
+    for v in vals {
+        let _ = write!(s, " {:08x}", v.to_bits());
+    }
+    s.push('\n');
+}
+
+fn read_f32s(line: &str) -> Result<Vec<f32>> {
+    let mut parts = line.split_ascii_whitespace();
+    let len: usize = parts.next().ok_or_else(|| anyhow!("missing length"))?.parse()?;
+    let mut out = Vec::with_capacity(len.min(1 << 24));
+    for p in parts {
+        out.push(f32::from_bits(u32::from_str_radix(p, 16)?));
+    }
+    if out.len() != len {
+        bail!("vector length mismatch: header says {len}, found {}", out.len());
+    }
+    Ok(out)
+}
+
+fn read_f64s(line: &str) -> Result<Vec<f64>> {
+    let mut parts = line.split_ascii_whitespace();
+    let len: usize = parts.next().ok_or_else(|| anyhow!("missing length"))?.parse()?;
+    let mut out = Vec::with_capacity(len.min(1 << 24));
+    for p in parts {
+        out.push(f64::from_bits(u64::from_str_radix(p, 16)?));
+    }
+    if out.len() != len {
+        bail!("vector length mismatch: header says {len}, found {}", out.len());
+    }
+    Ok(out)
+}
+
+fn rng_text(s: &RngState) -> String {
+    let spare = match s.spare {
+        Some(v) => format!("{:016x}", v.to_bits()),
+        None => "none".to_string(),
+    };
+    format!("{:032x} {:032x} {spare}", s.state, s.inc)
+}
+
+fn rng_parse(s: &str) -> Result<RngState> {
+    let mut p = s.split_ascii_whitespace();
+    let state = u128::from_str_radix(p.next().ok_or_else(|| anyhow!("missing rng state"))?, 16)?;
+    let inc = u128::from_str_radix(p.next().ok_or_else(|| anyhow!("missing rng inc"))?, 16)?;
+    let spare = match p.next().ok_or_else(|| anyhow!("missing rng spare"))? {
+        "none" => None,
+        hex => Some(f64::from_bits(u64::from_str_radix(hex, 16)?)),
+    };
+    Ok(RngState { state, inc, spare })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            task: "Cls".into(),
+            algo: "Mc".into(),
+            topology: "Threads".into(),
+            reduce: "Tree".into(),
+            seed: 42,
+            workers: 3,
+            burn_in: 2,
+            lambda_bits: 1.5f32.to_bits(),
+            eps_clamp_bits: 1e-5f32.to_bits(),
+            eps_ins_bits: 0.1f32.to_bits(),
+            next_iter: 7,
+            dim: 4,
+            m: 1,
+            weights: vec![0.25, -1.5, f32::MIN_POSITIVE, 3.75],
+            avg: Some(vec![0.5, 0.5, -0.125, 0.0]),
+            avg_count: 5,
+            stop_jprev: 123.456789,
+            stop_smooth: vec![130.0, 128.5, 123.456789],
+            master_rng: RngState { state: u128::MAX - 17, inc: 12345, spare: Some(-0.7071) },
+            worker_rng: vec![
+                Some(RngState { state: 1, inc: 3, spare: None }),
+                None,
+                Some(RngState { state: 9, inc: 11, spare: Some(2.25) }),
+            ],
+        }
+    }
+
+    #[test]
+    fn text_roundtrip_is_bit_exact() {
+        let ck = sample();
+        let parsed = Checkpoint::from_text(&ck.to_text()).unwrap();
+        assert_eq!(parsed, ck);
+        // the floats survive via bit patterns, not decimal formatting
+        assert_eq!(parsed.stop_jprev.to_bits(), ck.stop_jprev.to_bits());
+    }
+
+    #[test]
+    fn truncated_and_corrupt_files_are_rejected() {
+        let text = sample().to_text();
+        // drop the end sentinel
+        let cut = text.rsplit_once("end pemsvm-ckpt").unwrap().0;
+        assert!(Checkpoint::from_text(cut).is_err());
+        // wrong magic
+        assert!(Checkpoint::from_text("pemsvm-model v1\n").is_err());
+        // weights length lies
+        let lied = text.replace("weights 4 ", "weights 5 ");
+        assert!(Checkpoint::from_text(&lied).is_err());
+    }
+
+    #[test]
+    fn compat_check_catches_fingerprint_drift() {
+        let ck = sample();
+        let mut cfg = TrainConfig {
+            task: crate::config::TaskKind::Cls,
+            algo: crate::config::Algo::Mc,
+            topology: crate::config::Topology::Threads,
+            reduce: crate::config::ReduceKind::Tree,
+            seed: 42,
+            workers: 3,
+            burn_in: 2,
+            lambda: 1.5,
+            eps_clamp: 1e-5,
+            eps_insensitive: 0.1,
+            ..TrainConfig::default()
+        };
+        ck.check_compat(&cfg).unwrap();
+        cfg.seed = 43;
+        assert!(ck.check_compat(&cfg).is_err());
+        cfg.seed = 42;
+        cfg.lambda = 1.5000001;
+        assert!(ck.check_compat(&cfg).is_err());
+    }
+
+    #[test]
+    fn save_load_via_disk() {
+        let dir = std::env::temp_dir()
+            .join(format!("pemsvm-ckpt-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.ckpt");
+        let ck = sample();
+        ck.save(&path).unwrap();
+        assert_eq!(Checkpoint::load(&path).unwrap(), ck);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,184 @@
+//! Deterministic fault injection for the worker pool (DESIGN.md §13).
+//!
+//! A [`FaultPlan`] is a list of `(worker, round, kind)` triples compiled
+//! into the pool at spawn time. The plan is **inert when empty** — the
+//! production path carries a zero-length vector and one integer compare
+//! per step command — and fully deterministic otherwise: a fault fires
+//! exactly once, when the named worker receives the step command of the
+//! named round. Rounds count broadcast rounds as issued by the leader
+//! (so an MLT iteration consumes `m` rounds, and a round restarted after
+//! an eviction gets a fresh number).
+//!
+//! Four fault kinds cover the failure modes a distributed reduce must
+//! survive:
+//!
+//! * [`FaultKind::DelayStep`] — a straggler: the worker sleeps before
+//!   stepping, long enough to trip the leader's bounded timeout.
+//! * [`FaultKind::DropReply`] — a lost message: the step command is
+//!   swallowed, no reply is ever sent.
+//! * [`FaultKind::PanicAt`] — a crash: the worker thread exits its
+//!   command loop (observably identical to an unwound panic — the
+//!   channels drop — without the stderr noise of a real `panic!`).
+//! * [`FaultKind::CorruptStats`] — a poisoned message: the step runs
+//!   but its statistics come back with NaNs.
+
+use crate::rng::Pcg64;
+
+/// One injectable failure mode.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// sleep this long before computing the step (straggler)
+    DelayStep { millis: u64 },
+    /// swallow the step command; never reply (lost message)
+    DropReply,
+    /// the worker dies: its thread leaves the command loop for good
+    PanicAt,
+    /// reply with NaN-poisoned statistics (corrupt message)
+    CorruptStats,
+}
+
+/// A fault pinned to one worker and one broadcast round.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultSpec {
+    pub worker: usize,
+    pub round: u64,
+    pub kind: FaultKind,
+}
+
+/// A deterministic schedule of faults, split per worker at pool spawn.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    specs: Vec<FaultSpec>,
+}
+
+impl FaultPlan {
+    /// The inert (production) plan.
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.specs.len()
+    }
+
+    /// Add one fault; builder-style for test matrices.
+    pub fn with(mut self, worker: usize, round: u64, kind: FaultKind) -> FaultPlan {
+        self.specs.push(FaultSpec { worker, round, kind });
+        self
+    }
+
+    pub fn push(&mut self, spec: FaultSpec) {
+        self.specs.push(spec);
+    }
+
+    /// A seeded random plan of `n_faults` faults over `workers` workers
+    /// and broadcast rounds `1..=rounds`: the chaos harness sweeps seeds
+    /// instead of hand-writing matrices. At most one worker is ever
+    /// killed (a plan that kills all workers cannot terminate), and
+    /// delays are kept short enough for tests.
+    pub fn seeded(seed: u64, workers: usize, rounds: u64, n_faults: usize) -> FaultPlan {
+        let mut rng = Pcg64::new_stream(seed, 0xfau64);
+        let mut plan = FaultPlan::default();
+        let mut killed = false;
+        for _ in 0..n_faults {
+            let worker = rng.next_below(workers.max(1) as u64) as usize;
+            let round = 1 + rng.next_below(rounds.max(1));
+            let kind = match rng.next_below(4) {
+                0 => FaultKind::DelayStep { millis: 20 + rng.next_below(60) },
+                1 => FaultKind::DropReply,
+                2 if !killed => {
+                    killed = true;
+                    FaultKind::PanicAt
+                }
+                _ => FaultKind::CorruptStats,
+            };
+            plan.push(FaultSpec { worker, round, kind });
+        }
+        plan
+    }
+
+    /// Split the plan into per-worker injectors (what each worker thread
+    /// carries). Specs naming workers `>= workers` are dropped.
+    pub fn split(&self, workers: usize) -> Vec<WorkerFaults> {
+        let mut out: Vec<WorkerFaults> = (0..workers).map(|_| WorkerFaults::default()).collect();
+        for s in &self.specs {
+            if s.worker < workers {
+                out[s.worker].specs.push(*s);
+            }
+        }
+        out
+    }
+}
+
+/// One worker's slice of the plan. Each spec fires at most once — a
+/// retried or restarted round re-delivers the same round number, but the
+/// fault has already been consumed, so retries observe a healthy worker.
+#[derive(Clone, Debug, Default)]
+pub struct WorkerFaults {
+    specs: Vec<FaultSpec>,
+}
+
+impl WorkerFaults {
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+
+    /// Consume and return the fault scheduled for `round`, if any.
+    pub fn fire(&mut self, round: u64) -> Option<FaultKind> {
+        let i = self.specs.iter().position(|s| s.round == round)?;
+        Some(self.specs.swap_remove(i).kind)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plan_is_inert() {
+        let plan = FaultPlan::none();
+        assert!(plan.is_empty());
+        let mut per = plan.split(4);
+        assert_eq!(per.len(), 4);
+        for w in per.iter_mut() {
+            assert!(w.fire(1).is_none());
+        }
+    }
+
+    #[test]
+    fn faults_fire_once_at_their_round() {
+        let plan = FaultPlan::none()
+            .with(1, 3, FaultKind::DropReply)
+            .with(1, 5, FaultKind::CorruptStats)
+            .with(0, 3, FaultKind::PanicAt);
+        let mut per = plan.split(2);
+        assert_eq!(per[0].fire(3), Some(FaultKind::PanicAt));
+        assert_eq!(per[0].fire(3), None, "consumed on first delivery");
+        assert_eq!(per[1].fire(1), None);
+        assert_eq!(per[1].fire(3), Some(FaultKind::DropReply));
+        assert_eq!(per[1].fire(5), Some(FaultKind::CorruptStats));
+        assert!(per[1].is_empty());
+    }
+
+    #[test]
+    fn seeded_plans_are_reproducible_and_bounded() {
+        let a = FaultPlan::seeded(42, 4, 10, 6);
+        let b = FaultPlan::seeded(42, 4, 10, 6);
+        assert_eq!(a.specs, b.specs);
+        assert_eq!(a.len(), 6);
+        let kills =
+            a.specs.iter().filter(|s| s.kind == FaultKind::PanicAt).count();
+        assert!(kills <= 1, "a survivable plan kills at most one worker");
+        for s in &a.specs {
+            assert!(s.worker < 4);
+            assert!(s.round >= 1 && s.round <= 10);
+        }
+        // different seed -> different schedule (overwhelmingly likely)
+        let c = FaultPlan::seeded(43, 4, 10, 6);
+        assert_ne!(a.specs, c.specs);
+    }
+}

@@ -27,18 +27,22 @@
 //!
 //! `coordinator::train` / `train_full` remain as thin one-shot wrappers.
 
+pub mod checkpoint;
 pub mod driver;
+pub mod fault;
 pub mod pool;
 
 use std::sync::{Arc, OnceLock};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
+pub use checkpoint::{Checkpoint, CheckpointCfg};
 pub use driver::{BinaryDriver, CsBlockDriver, IterDriver, IterStats, SvrDriver};
-pub use pool::Pool;
+pub use fault::{FaultKind, FaultPlan};
+pub use pool::{FaultStats, Pool, PoolOpts};
 
-use crate::backend::{self, MasterBackend, StepInput};
+use crate::backend::{self, MasterBackend, RngState, StepInput};
 use crate::config::{Algo, ModelKind, TaskKind, TrainConfig};
 use crate::data::stream::StreamReader;
 use crate::data::{shard_ranges, Dataset, Task};
@@ -241,12 +245,28 @@ impl Cluster {
         Self::with_gram(ds, cfg, None)
     }
 
+    /// [`new`](Cluster::new) with a deterministic [`FaultPlan`] compiled
+    /// into the pool — the chaos harness's entry point (DESIGN.md §13).
+    pub fn new_with_faults(ds: &Dataset, cfg: &TrainConfig, plan: FaultPlan) -> Result<Cluster> {
+        Self::with_gram_faults(ds, cfg, None, plan)
+    }
+
     /// KRN variant: `ds` is the Gram-row dataset and `gram` the Gram
     /// regularizer (§3.1).
     pub fn with_gram(
         ds: &Dataset,
         cfg: &TrainConfig,
         gram: Option<Arc<Mat>>,
+    ) -> Result<Cluster> {
+        Self::with_gram_faults(ds, cfg, gram, FaultPlan::none())
+    }
+
+    /// [`with_gram`](Cluster::with_gram) with a [`FaultPlan`].
+    pub fn with_gram_faults(
+        ds: &Dataset,
+        cfg: &TrainConfig,
+        gram: Option<Arc<Mat>>,
+        plan: FaultPlan,
     ) -> Result<Cluster> {
         match (cfg.task, ds.task) {
             (TaskKind::Cls, Task::Binary)
@@ -259,7 +279,18 @@ impl Cluster {
         let shards: Vec<_> = shard_ranges(ds.n, p).into_iter().map(|s| s.range).collect();
         let workers = backend::make_workers(cfg, &ds_arc, &shards)?;
         let dim = workers.iter().map(|w| w.stat_dim()).max().unwrap_or(ds.k);
-        let pool = Pool::spawn(workers, cfg.topology);
+        // eager workers view the full dataset, so the pool can re-shard
+        // an evicted worker's global row ranges onto survivors
+        let pool = Pool::spawn_with(
+            workers,
+            cfg.topology,
+            PoolOpts {
+                shards: Some(shards.clone()),
+                plan,
+                step_timeout: Duration::from_millis(cfg.step_timeout_ms),
+                step_retries: cfg.step_retries,
+            },
+        );
         let m_classes = match ds.task {
             Task::Multiclass(m) => m,
             _ => 1,
@@ -307,7 +338,19 @@ impl Cluster {
         let shards: Vec<_> = shard_ranges(n, p).into_iter().map(|s| s.range).collect();
         let workers = backend::make_stream_workers(cfg, k, task, &shards)?;
         let dim = workers.iter().map(|w| w.stat_dim()).max().unwrap_or(k);
-        let mut pool = Pool::spawn(workers, cfg.topology);
+        // streamed workers hold only their own shard, so the pool cannot
+        // re-shard on eviction (`shards: None`); a worker death here is
+        // fatal and the run must restart from ingestion
+        let mut pool = Pool::spawn_with(
+            workers,
+            cfg.topology,
+            PoolOpts {
+                shards: None,
+                plan: FaultPlan::none(),
+                step_timeout: Duration::from_millis(cfg.step_timeout_ms),
+                step_retries: cfg.step_retries,
+            },
+        );
         for chunk in reader {
             pool.ingest_all(chunk?)?;
         }
@@ -331,6 +374,19 @@ impl Cluster {
 
     pub fn workers(&self) -> usize {
         self.pool.len()
+    }
+
+    /// Workers still trusted with step commands (== [`workers`](Cluster::workers)
+    /// unless some were evicted mid-session).
+    pub fn alive_workers(&self) -> usize {
+        self.pool.alive()
+    }
+
+    /// This cluster's pool-local retry/eviction counters — the
+    /// per-instance twin of `worker_retries_total` /
+    /// `worker_evictions_total`.
+    pub fn fault_counters(&self) -> FaultStats {
+        self.pool.fault_counters()
     }
 
     /// Sessions completed on this cluster so far.
@@ -413,7 +469,28 @@ impl Cluster {
         cfg: &TrainConfig,
         test: Option<&Dataset>,
         warm: WarmStart<'_>,
+        trace: Option<&mut TraceWriter>,
+    ) -> Result<TrainOutput> {
+        self.run_session_checkpointed(cfg, test, warm, trace, None)
+    }
+
+    /// [`run_session_traced`](Cluster::run_session_traced) with
+    /// checkpointing (DESIGN.md §13): with `ck`, the full session state
+    /// — driver weights, MC running average, stopping-rule tail, master
+    /// and worker RNG streams — is written atomically every
+    /// [`CheckpointCfg::every`] iterations, and `resume` restores all of
+    /// it so the continued run is **bit-identical** to one that was
+    /// never interrupted (`tests/chaos.rs`). A checkpoint written after
+    /// an eviction still resumes exactly — onto a fresh full-strength
+    /// pool — for EM; an MC resume requires every worker's sampler
+    /// state, so it refuses a checkpoint with gaps.
+    pub fn run_session_checkpointed(
+        &mut self,
+        cfg: &TrainConfig,
+        test: Option<&Dataset>,
+        warm: WarmStart<'_>,
         mut trace: Option<&mut TraceWriter>,
+        ck: Option<&CheckpointCfg>,
     ) -> Result<TrainOutput> {
         self.check_compat(cfg)?;
         let mut master = backend::make_master(cfg, self.dim, self.gram.clone())?;
@@ -443,9 +520,51 @@ impl Cluster {
 
         let n = self.n;
         let mut stop = StopRule::new(cfg, n);
+        let mut start_iter = 0usize;
+        if let Some(c) = ck.filter(|c| c.resume) {
+            let loaded = Checkpoint::load(&c.path)?;
+            loaded.check_compat(cfg)?;
+            if loaded.dim != self.dim || loaded.m != self.m_classes {
+                bail!(
+                    "checkpoint shape {}x{} does not match this cluster ({}x{})",
+                    loaded.m,
+                    loaded.dim,
+                    self.m_classes,
+                    self.dim
+                );
+            }
+            if cfg.algo == Algo::Mc && loaded.worker_rng.iter().any(|s| s.is_none()) {
+                bail!(
+                    "checkpoint lacks sampler RNG state for some workers; an MC run \
+                     cannot resume bit-exactly without it"
+                );
+            }
+            let w = if self.m_classes > 1 {
+                Weights::PerClass(Mat {
+                    rows: loaded.m,
+                    cols: loaded.dim,
+                    data: loaded.weights.clone(),
+                })
+            } else {
+                Weights::Single(loaded.weights.clone())
+            };
+            drv.warm_start(&w)?;
+            avg = loaded.avg.clone();
+            avg_count = loaded.avg_count;
+            stop.j_prev = loaded.stop_jprev;
+            stop.smooth = loaded.stop_smooth.clone();
+            rng = Pcg64::from_raw(loaded.master_rng.state, loaded.master_rng.inc);
+            normals = NormalSource::with_spare(loaded.master_rng.spare);
+            self.pool.set_rng_states(&loaded.worker_rng)?;
+            start_iter = loaded.next_iter;
+            crate::log_info!(
+                "engine: resumed from {} at iteration {start_iter}",
+                c.path.display()
+            );
+        }
         // reused across iterations: previous weights for the delta norm
         let mut w_prev: Vec<f32> = Vec::new();
-        for iter in 0..cfg.max_iters {
+        for iter in start_iter..cfg.max_iters {
             let iter_start = Instant::now();
             let phase_before = metrics.phase_totals();
             w_prev.clear();
@@ -537,7 +656,46 @@ impl Cluster {
             }
             history.push(rec);
             metrics.iterations = iter + 1;
-            if stop.converged(iter, st.objective) {
+            // evaluate the stopping rule *before* writing a checkpoint:
+            // its mutated state (j_prev, smoothing tail) is part of the
+            // resume payload, so a resumed run decides iteration
+            // `next_iter` exactly as the uninterrupted run would
+            let stopped = stop.converged(iter, st.objective);
+            if let Some(c) = ck {
+                if c.every > 0 && (iter + 1) % c.every == 0 {
+                    let (state, inc) = rng.to_raw();
+                    let (task, algo, topology, reduce) = Checkpoint::fingerprint(cfg);
+                    let snap = Checkpoint {
+                        task,
+                        algo,
+                        topology,
+                        reduce,
+                        seed: cfg.seed,
+                        workers: self.pool.len(),
+                        burn_in: cfg.burn_in,
+                        lambda_bits: cfg.lambda.to_bits(),
+                        eps_clamp_bits: cfg.eps_clamp.to_bits(),
+                        eps_ins_bits: cfg.eps_insensitive.to_bits(),
+                        next_iter: iter + 1,
+                        dim: self.dim,
+                        m: self.m_classes,
+                        weights: drv.current().to_vec(),
+                        avg: avg.clone(),
+                        avg_count,
+                        stop_jprev: stop.j_prev,
+                        stop_smooth: stop.smooth.clone(),
+                        master_rng: RngState { state, inc, spare: normals.spare() },
+                        worker_rng: self.pool.rng_states()?,
+                    };
+                    snap.save(&c.path)?;
+                    crate::log_debug!(
+                        "engine: checkpoint written to {} after iteration {}",
+                        c.path.display(),
+                        iter + 1
+                    );
+                }
+            }
+            if stopped {
                 break;
             }
         }

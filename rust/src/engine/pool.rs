@@ -14,21 +14,40 @@
 //! The two modes are numerically identical for a fixed seed: steps see
 //! the same shard/weights, and the tree reduce uses the same pairing
 //! order (so the f32 sums associate identically).
+//!
+//! # Fault tolerance (DESIGN.md §13)
+//!
+//! Every broadcast round is tagged with a monotone round id; the leader
+//! collects replies under a bounded timeout and ignores stale or
+//! duplicate replies (an earlier round's straggler answering late). A
+//! worker that misses its deadline or returns non-finite statistics is
+//! retried up to [`PoolOpts::step_retries`] times with a doubling
+//! timeout; a worker that exhausts its retries — or whose channel is
+//! gone because its thread died — is **evicted**: its shard rows are
+//! re-split across the survivors, which adopt them as extra global
+//! ranges on every subsequent step. Statistics stay exact because the
+//! partial-merge operator is additive over rows; only the f32
+//! association order changes. Seeded [`FaultPlan`]s (compiled in, inert
+//! when empty) make every one of these paths deterministic under test
+//! (`tests/chaos.rs`).
 
-use std::sync::mpsc::{self, Receiver, Sender};
+use std::ops::Range;
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, OnceLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
-use crate::backend::{StepInput, WorkerBackend};
+use crate::backend::{RngState, StepInput, WorkerBackend};
 use crate::config::{ReduceKind, Topology};
 use crate::coordinator::reduce;
 use crate::data::stream::ParsedChunk;
 use crate::metrics::{Metrics, Phase};
 use crate::solver::PartialStats;
-use crate::telemetry::{self, Histogram};
+use crate::telemetry::{self, Counter, Histogram};
+
+use super::fault::{FaultKind, FaultPlan, WorkerFaults};
 
 /// Pool-level latency distributions in the global telemetry registry:
 /// the slowest worker's step per round, and the whole reduce.
@@ -49,12 +68,73 @@ fn pool_metrics() -> &'static PoolMetrics {
     })
 }
 
+/// Fault-tolerance counters in the global telemetry registry
+/// (DESIGN.md §13): step retries after timeouts/corruption, and workers
+/// evicted with their rows re-sharded onto survivors.
+struct FaultMetrics {
+    retries: Arc<Counter>,
+    evictions: Arc<Counter>,
+}
+
+fn fault_metrics() -> &'static FaultMetrics {
+    static M: OnceLock<FaultMetrics> = OnceLock::new();
+    M.get_or_init(|| FaultMetrics {
+        retries: telemetry::global().counter(
+            "worker_retries_total",
+            "Worker step commands re-sent after a timeout or a corrupt reply.",
+        ),
+        evictions: telemetry::global().counter(
+            "worker_evictions_total",
+            "Workers evicted from the pool; their rows re-sharded onto survivors.",
+        ),
+    })
+}
+
+/// Pool-local fault counters — the per-instance twin of the global
+/// telemetry series, so tests can assert on one pool's behaviour even
+/// when other pools run concurrently in the same process.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FaultStats {
+    pub retries: u64,
+    pub evictions: u64,
+}
+
+/// Pool construction knobs. [`Default`] is the production setting:
+/// no fault plan, generous timeout, eviction only as a last resort.
+#[derive(Clone, Debug)]
+pub struct PoolOpts {
+    /// each worker's global row range; `None` for pools whose workers
+    /// hold only their own shard (streamed ingestion), which therefore
+    /// cannot re-shard a dead worker's rows
+    pub shards: Option<Vec<Range<usize>>>,
+    /// deterministic fault injection schedule (inert when empty)
+    pub plan: FaultPlan,
+    /// how long the leader waits on a step reply before retrying
+    pub step_timeout: Duration,
+    /// retries per worker per round before eviction
+    pub step_retries: usize,
+}
+
+impl Default for PoolOpts {
+    fn default() -> Self {
+        PoolOpts {
+            shards: None,
+            plan: FaultPlan::none(),
+            step_timeout: Duration::from_secs(30),
+            step_retries: 2,
+        }
+    }
+}
+
 enum Cmd {
-    /// One shard pass at the broadcast weights. The `Arc` is the whole
-    /// broadcast: P workers share one `StepInput` instead of receiving
-    /// P deep copies (the `rebind_weights` optimization — for MLT this
-    /// saves P clones of the full `[m, k]` weight block per class).
-    Step(Arc<StepInput>),
+    /// One shard pass at the broadcast weights, tagged with the leader's
+    /// round id (stale-reply detection) and the adopted global row
+    /// ranges this worker covers for evicted peers. The `Arc` is the
+    /// whole broadcast: P workers share one `StepInput` instead of
+    /// receiving P deep copies (the `rebind_weights` optimization — for
+    /// MLT this saves P clones of the full `[m, k]` weight block per
+    /// class).
+    Step { input: Arc<StepInput>, round: u64, extra: Vec<Range<usize>> },
     /// Merge `src` into the partial at tree slot `.0` and hand it back.
     Merge(usize, Box<PartialStats>, Box<PartialStats>),
     /// Streaming ingestion (DESIGN.md §10): every worker appends its
@@ -64,13 +144,18 @@ enum Cmd {
     Ingest(Arc<ParsedChunk>),
     /// End of the chunk stream: each worker validates + seals its shard.
     Seal,
+    /// Capture / restore the worker's sampler-RNG state (checkpointing).
+    GetRng,
+    SetRng(RngState),
     Stop,
 }
 
 enum Reply {
-    Stepped { wid: usize, stats: Result<PartialStats>, step_time: Duration },
+    Stepped { wid: usize, round: u64, stats: Result<PartialStats>, step_time: Duration },
     Merged { slot: usize, stats: Box<PartialStats> },
     Ingested { wid: usize, res: Result<()> },
+    Rng { wid: usize, state: Option<RngState> },
+    RngSet { wid: usize, res: Result<()> },
 }
 
 enum Mode {
@@ -81,6 +166,7 @@ enum Mode {
     },
     Simulate {
         workers: Vec<Box<dyn WorkerBackend>>,
+        faults: Vec<WorkerFaults>,
     },
 }
 
@@ -88,79 +174,76 @@ enum Mode {
 /// training sessions.
 pub struct Pool {
     mode: Mode,
+    /// original global shard per worker id (`None`: cannot re-shard)
+    shards: Option<Vec<Range<usize>>>,
+    /// worker id -> still trusted? Evicted workers are never sent
+    /// another step and their late replies are discarded.
+    alive: Vec<bool>,
+    /// worker id -> adopted global row ranges from evicted peers
+    adopted: Vec<Vec<Range<usize>>>,
+    /// monotone broadcast-round id (also the fault plan's clock)
+    round: u64,
+    step_timeout: Duration,
+    step_retries: usize,
+    fault_stats: FaultStats,
+    /// a non-empty fault plan was compiled in: reduces run leader-side
+    faulty: bool,
 }
 
 impl Pool {
     /// Take ownership of the (already shard-bound) worker backends and,
     /// in the threaded topology, spawn their threads.
     pub fn spawn(workers: Vec<Box<dyn WorkerBackend>>, topology: Topology) -> Pool {
-        match topology {
-            Topology::Simulate => Pool { mode: Mode::Simulate { workers } },
+        Self::spawn_with(workers, topology, PoolOpts::default())
+    }
+
+    /// [`spawn`](Pool::spawn) with fault-tolerance options: shard map
+    /// for re-sharding, timeout/retry budget, and an optional
+    /// deterministic [`FaultPlan`].
+    pub fn spawn_with(
+        workers: Vec<Box<dyn WorkerBackend>>,
+        topology: Topology,
+        opts: PoolOpts,
+    ) -> Pool {
+        let p = workers.len();
+        let faulty = !opts.plan.is_empty();
+        let mut per_worker = opts.plan.split(p);
+        let mode = match topology {
+            Topology::Simulate => Mode::Simulate { workers, faults: per_worker },
             Topology::Threads => {
                 let (res_tx, res_rx) = mpsc::channel::<Reply>();
-                let mut cmd_txs = Vec::with_capacity(workers.len());
-                let mut handles = Vec::with_capacity(workers.len());
+                let mut cmd_txs = Vec::with_capacity(p);
+                let mut handles = Vec::with_capacity(p);
                 for (wid, mut wk) in workers.into_iter().enumerate() {
                     let (tx, rx) = mpsc::channel::<Cmd>();
                     cmd_txs.push(tx);
                     let res_tx = res_tx.clone();
+                    let mut faults = std::mem::take(&mut per_worker[wid]);
                     handles.push(std::thread::spawn(move || {
-                        while let Ok(cmd) = rx.recv() {
-                            match cmd {
-                                Cmd::Stop => break,
-                                Cmd::Step(input) => {
-                                    let t0 = Instant::now();
-                                    let stats = wk.step(&input);
-                                    let step_time = t0.elapsed();
-                                    // drop our share of the broadcast
-                                    // *before* replying, so once the
-                                    // leader holds all P replies its Arc
-                                    // is unique again (MLT mutates the
-                                    // weight block in place via make_mut)
-                                    drop(input);
-                                    if res_tx
-                                        .send(Reply::Stepped { wid, stats, step_time })
-                                        .is_err()
-                                    {
-                                        break;
-                                    }
-                                }
-                                Cmd::Merge(slot, mut dst, src) => {
-                                    dst.merge(&src);
-                                    if res_tx.send(Reply::Merged { slot, stats: dst }).is_err() {
-                                        break;
-                                    }
-                                }
-                                Cmd::Ingest(chunk) => {
-                                    let res = wk.ingest(&chunk);
-                                    // release our share before replying so
-                                    // the chunk frees as soon as the last
-                                    // worker is done with it
-                                    drop(chunk);
-                                    if res_tx.send(Reply::Ingested { wid, res }).is_err() {
-                                        break;
-                                    }
-                                }
-                                Cmd::Seal => {
-                                    let res = wk.seal();
-                                    if res_tx.send(Reply::Ingested { wid, res }).is_err() {
-                                        break;
-                                    }
-                                }
-                            }
-                        }
+                        worker_loop(wid, &mut *wk, &rx, &res_tx, &mut faults)
                     }));
                 }
-                Pool { mode: Mode::Threads { cmd_txs, res_rx, handles } }
+                Mode::Threads { cmd_txs, res_rx, handles }
             }
+        };
+        Pool {
+            mode,
+            shards: opts.shards,
+            alive: vec![true; p],
+            adopted: (0..p).map(|_| Vec::new()).collect(),
+            round: 0,
+            step_timeout: opts.step_timeout.max(Duration::from_millis(1)),
+            step_retries: opts.step_retries,
+            fault_stats: FaultStats::default(),
+            faulty,
         }
     }
 
-    /// Number of workers.
+    /// Number of workers (the worker-id space; includes evicted ones).
     pub fn len(&self) -> usize {
         match &self.mode {
             Mode::Threads { cmd_txs, .. } => cmd_txs.len(),
-            Mode::Simulate { workers } => workers.len(),
+            Mode::Simulate { workers, .. } => workers.len(),
         }
     }
 
@@ -168,65 +251,50 @@ impl Pool {
         self.len() == 0
     }
 
-    /// One broadcast + collect round: every worker steps on `input`;
-    /// partials come back ordered by worker id. Timing goes to the
-    /// `Broadcast` / `LocalStats` phases (max over workers, per §4.1).
+    /// Workers still trusted with step commands.
+    pub fn alive(&self) -> usize {
+        self.alive.iter().filter(|&&a| a).count()
+    }
+
+    /// This pool's retry/eviction counters (the pool-local twin of the
+    /// `worker_retries_total` / `worker_evictions_total` series).
+    pub fn fault_counters(&self) -> FaultStats {
+        self.fault_stats
+    }
+
+    /// Running degraded: a fault plan is armed or a worker has been
+    /// evicted. Reduces then run leader-side (same pairing order, so
+    /// still bit-identical to the in-pool tree) — the merge dispatch is
+    /// the one pool path with no retry story, so it is bypassed rather
+    /// than hardened.
+    pub fn degraded(&self) -> bool {
+        self.faulty || self.fault_stats.evictions > 0
+    }
+
+    /// One broadcast + collect round: every live worker steps on `input`
+    /// (plus its adopted ranges); partials come back ordered by worker
+    /// id, one per live worker. Timing goes to the `Broadcast` /
+    /// `LocalStats` phases (max over workers, per §4.1).
     pub fn step_all(
         &mut self,
         input: StepInput,
         metrics: &mut Metrics,
     ) -> Result<Vec<PartialStats>> {
+        let ctx = StepCtx {
+            alive: &mut self.alive,
+            adopted: &mut self.adopted,
+            shards: &self.shards,
+            round: &mut self.round,
+            timeout: self.step_timeout,
+            retries: self.step_retries,
+            fstats: &mut self.fault_stats,
+        };
         match &mut self.mode {
-            Mode::Simulate { workers } => {
-                let mut max_step = Duration::ZERO;
-                let mut out = Vec::with_capacity(workers.len());
-                for wk in workers.iter_mut() {
-                    let t0 = Instant::now();
-                    out.push(wk.step(&input)?);
-                    max_step = max_step.max(t0.elapsed());
-                }
-                metrics.add(Phase::LocalStats, max_step);
-                pool_metrics().step_nanos.observe_duration(max_step);
-                Ok(out)
+            Mode::Simulate { workers, faults } => {
+                step_all_simulate(workers, faults, ctx, &input, metrics)
             }
             Mode::Threads { cmd_txs, res_rx, .. } => {
-                let p = cmd_txs.len();
-                let input = Arc::new(input);
-                let t0 = Instant::now();
-                for tx in cmd_txs.iter() {
-                    tx.send(Cmd::Step(input.clone()))
-                        .map_err(|_| anyhow!("worker hung up"))?;
-                }
-                drop(input);
-                metrics.add(Phase::Broadcast, t0.elapsed());
-                let mut slots: Vec<Option<PartialStats>> = (0..p).map(|_| None).collect();
-                let mut max_step = Duration::ZERO;
-                // Consume all P replies even if one step failed: a reply
-                // left queued in the shared channel would be read by the
-                // *next* session on this persistent pool as if current.
-                let mut first_err: Option<anyhow::Error> = None;
-                for _ in 0..p {
-                    match res_rx.recv().context("worker died")? {
-                        Reply::Stepped { wid, stats, step_time } => match stats {
-                            Ok(s) => {
-                                slots[wid] = Some(s);
-                                max_step = max_step.max(step_time);
-                            }
-                            Err(e) => {
-                                if first_err.is_none() {
-                                    first_err = Some(e);
-                                }
-                            }
-                        },
-                        _ => return Err(anyhow!("protocol error: unexpected reply during step")),
-                    }
-                }
-                if let Some(e) = first_err {
-                    return Err(e);
-                }
-                metrics.add(Phase::LocalStats, max_step);
-                pool_metrics().step_nanos.observe_duration(max_step);
-                Ok(slots.into_iter().map(Option::unwrap).collect())
+                step_all_threads(cmd_txs, res_rx, ctx, input, metrics)
             }
         }
     }
@@ -240,7 +308,7 @@ impl Pool {
     /// would otherwise leak into the next command round).
     pub fn ingest_all(&mut self, chunk: ParsedChunk) -> Result<()> {
         match &mut self.mode {
-            Mode::Simulate { workers } => {
+            Mode::Simulate { workers, .. } => {
                 for wk in workers.iter_mut() {
                     wk.ingest(&chunk)?;
                 }
@@ -262,7 +330,7 @@ impl Pool {
     /// the pool steppable.
     pub fn seal_all(&mut self) -> Result<()> {
         match &mut self.mode {
-            Mode::Simulate { workers } => {
+            Mode::Simulate { workers, .. } => {
                 for wk in workers.iter_mut() {
                     wk.seal()?;
                 }
@@ -277,10 +345,11 @@ impl Pool {
         }
     }
 
-    /// Reduce the P partials to one. `Flat` folds at the leader; `Tree`
+    /// Reduce the partials to one. `Flat` folds at the leader; `Tree`
     /// merges pairs — dispatched to the pool's worker threads in the
     /// threaded topology, serially (identical pairing order, hence
-    /// bit-identical sums) in the simulated one.
+    /// bit-identical sums) in the simulated one or when the pool is
+    /// [`degraded`](Pool::degraded).
     pub fn reduce(
         &mut self,
         kind: ReduceKind,
@@ -288,9 +357,12 @@ impl Pool {
         metrics: &mut Metrics,
     ) -> Result<PartialStats> {
         metrics.reduces += 1;
+        let degraded = self.degraded();
         let t0 = Instant::now();
         let out = match (&mut self.mode, kind) {
-            (Mode::Threads { cmd_txs, res_rx, .. }, ReduceKind::Tree) if partials.len() > 1 => {
+            (Mode::Threads { cmd_txs, res_rx, .. }, ReduceKind::Tree)
+                if partials.len() > 1 && !degraded =>
+            {
                 in_pool_tree(cmd_txs, res_rx, partials)?
             }
             (_, kind) => reduce::reduce(kind, partials),
@@ -299,6 +371,92 @@ impl Pool {
         metrics.add(Phase::Reduce, elapsed);
         pool_metrics().reduce_nanos.observe_duration(elapsed);
         Ok(out)
+    }
+
+    /// Capture every live worker's sampler-RNG state (checkpointing).
+    /// Entries are `None` for evicted workers, backends without a
+    /// restorable RNG, or (defensively) workers that fail to answer
+    /// within the step timeout.
+    pub fn rng_states(&mut self) -> Result<Vec<Option<RngState>>> {
+        let timeout = self.step_timeout;
+        match &mut self.mode {
+            Mode::Simulate { workers, .. } => Ok(workers
+                .iter()
+                .zip(&self.alive)
+                .map(|(w, &a)| if a { w.rng_state() } else { None })
+                .collect()),
+            Mode::Threads { cmd_txs, res_rx, .. } => {
+                let p = cmd_txs.len();
+                let mut out: Vec<Option<RngState>> = vec![None; p];
+                let mut expect = 0usize;
+                for (wid, tx) in cmd_txs.iter().enumerate() {
+                    if self.alive[wid] && tx.send(Cmd::GetRng).is_ok() {
+                        expect += 1;
+                    }
+                }
+                let mut got = 0usize;
+                while got < expect {
+                    match res_rx.recv_timeout(timeout) {
+                        Ok(Reply::Rng { wid, state }) => {
+                            out[wid] = state;
+                            got += 1;
+                        }
+                        // a straggler's stale step reply from an aborted
+                        // round; harmless here
+                        Ok(Reply::Stepped { .. }) => {}
+                        Ok(_) => bail!("protocol error: unexpected reply during rng capture"),
+                        Err(_) => break, // dead worker: leave its slot None
+                    }
+                }
+                Ok(out)
+            }
+        }
+    }
+
+    /// Restore states captured by [`rng_states`](Pool::rng_states);
+    /// `None` entries are skipped. Errors if any worker rejects or
+    /// fails to acknowledge the restore — a checkpoint resumed onto a
+    /// half-restored pool would silently diverge.
+    pub fn set_rng_states(&mut self, states: &[Option<RngState>]) -> Result<()> {
+        let timeout = self.step_timeout;
+        match &mut self.mode {
+            Mode::Simulate { workers, .. } => {
+                for (wid, wk) in workers.iter_mut().enumerate() {
+                    if let Some(s) = states.get(wid).copied().flatten() {
+                        if self.alive[wid] {
+                            wk.set_rng_state(s)
+                                .with_context(|| format!("restoring RNG of worker {wid}"))?;
+                        }
+                    }
+                }
+                Ok(())
+            }
+            Mode::Threads { cmd_txs, res_rx, .. } => {
+                let mut expect = 0usize;
+                for (wid, tx) in cmd_txs.iter().enumerate() {
+                    if let Some(s) = states.get(wid).copied().flatten() {
+                        if self.alive[wid] {
+                            tx.send(Cmd::SetRng(s))
+                                .map_err(|_| anyhow!("worker {wid} hung up during restore"))?;
+                            expect += 1;
+                        }
+                    }
+                }
+                let mut got = 0usize;
+                while got < expect {
+                    match res_rx.recv_timeout(timeout) {
+                        Ok(Reply::RngSet { wid, res }) => {
+                            res.with_context(|| format!("restoring RNG of worker {wid}"))?;
+                            got += 1;
+                        }
+                        Ok(Reply::Stepped { .. }) => {} // stale straggler reply
+                        Ok(_) => bail!("protocol error: unexpected reply during rng restore"),
+                        Err(_) => bail!("worker did not acknowledge RNG restore"),
+                    }
+                }
+                Ok(())
+            }
+        }
     }
 }
 
@@ -315,19 +473,363 @@ impl Drop for Pool {
     }
 }
 
+/// The worker-thread command loop, with the fault injector inline: a
+/// production pool carries an empty [`WorkerFaults`], so the injection
+/// seam costs one `Vec::is_empty`-grade scan per step command.
+fn worker_loop(
+    wid: usize,
+    wk: &mut dyn WorkerBackend,
+    rx: &Receiver<Cmd>,
+    res_tx: &Sender<Reply>,
+    faults: &mut WorkerFaults,
+) {
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            Cmd::Stop => break,
+            Cmd::Step { input, round, extra } => {
+                let fault = faults.fire(round);
+                match fault {
+                    // the worker "panics": leave the loop for good; the
+                    // leader observes the dead channel and evicts
+                    Some(FaultKind::PanicAt) => break,
+                    // lost message: never reply, let the timeout fire
+                    Some(FaultKind::DropReply) => continue,
+                    _ => {}
+                }
+                if let Some(FaultKind::DelayStep { millis }) = fault {
+                    std::thread::sleep(Duration::from_millis(millis));
+                }
+                let t0 = Instant::now();
+                let mut stats = wk.step_ranges(&input, &extra);
+                let step_time = t0.elapsed();
+                if matches!(fault, Some(FaultKind::CorruptStats)) {
+                    if let Ok(s) = stats.as_mut() {
+                        s.obj = f64::NAN;
+                        if let Some(m) = s.mu.first_mut() {
+                            *m = f32::NAN;
+                        }
+                    }
+                }
+                // drop our share of the broadcast *before* replying, so
+                // once the leader holds all replies its Arc is unique
+                // again (MLT mutates the weight block in place)
+                drop(input);
+                if res_tx.send(Reply::Stepped { wid, round, stats, step_time }).is_err() {
+                    break;
+                }
+            }
+            Cmd::Merge(slot, mut dst, src) => {
+                dst.merge(&src);
+                if res_tx.send(Reply::Merged { slot, stats: dst }).is_err() {
+                    break;
+                }
+            }
+            Cmd::Ingest(chunk) => {
+                let res = wk.ingest(&chunk);
+                // release our share before replying so the chunk frees
+                // as soon as the last worker is done with it
+                drop(chunk);
+                if res_tx.send(Reply::Ingested { wid, res }).is_err() {
+                    break;
+                }
+            }
+            Cmd::Seal => {
+                let res = wk.seal();
+                if res_tx.send(Reply::Ingested { wid, res }).is_err() {
+                    break;
+                }
+            }
+            Cmd::GetRng => {
+                if res_tx.send(Reply::Rng { wid, state: wk.rng_state() }).is_err() {
+                    break;
+                }
+            }
+            Cmd::SetRng(s) => {
+                if res_tx.send(Reply::RngSet { wid, res: wk.set_rng_state(s) }).is_err() {
+                    break;
+                }
+            }
+        }
+    }
+}
+
+/// The mutable pool state one step round threads through its helpers —
+/// split out of [`Pool`] so the borrow of `Pool::mode` stays disjoint.
+struct StepCtx<'a> {
+    alive: &'a mut Vec<bool>,
+    adopted: &'a mut Vec<Vec<Range<usize>>>,
+    shards: &'a Option<Vec<Range<usize>>>,
+    round: &'a mut u64,
+    timeout: Duration,
+    retries: usize,
+    fstats: &'a mut FaultStats,
+}
+
+impl StepCtx<'_> {
+    fn note_retry(&mut self) {
+        self.fstats.retries += 1;
+        fault_metrics().retries.inc();
+    }
+
+    /// Evict `wid`: stop trusting it and re-split its rows (own shard +
+    /// anything it had already adopted) across the survivors. Errors if
+    /// no survivor remains or the pool has no shard map (streamed pools,
+    /// whose workers hold only their own rows).
+    fn evict(&mut self, wid: usize) -> Result<()> {
+        if !self.alive[wid] {
+            return Ok(());
+        }
+        self.alive[wid] = false;
+        self.fstats.evictions += 1;
+        fault_metrics().evictions.inc();
+        let survivors: Vec<usize> =
+            self.alive.iter().enumerate().filter(|&(_, &a)| a).map(|(i, _)| i).collect();
+        if survivors.is_empty() {
+            bail!("worker {wid} failed and no worker survives it");
+        }
+        let Some(shards) = self.shards else {
+            bail!(
+                "worker {wid} failed and this pool cannot re-shard its rows (streamed \
+                 shards live only in their worker; restart ingestion)"
+            );
+        };
+        crate::log_warn!(
+            "pool: evicting worker {wid}; re-sharding {} rows across {} survivors",
+            shards[wid].len(),
+            survivors.len()
+        );
+        let mut orphaned = vec![shards[wid].clone()];
+        orphaned.append(&mut self.adopted[wid]);
+        for r in orphaned {
+            if r.is_empty() {
+                continue;
+            }
+            // same balanced split the initial sharding used, offset into
+            // the orphaned range; survivor j adopts piece j
+            let pieces = crate::data::shard_ranges(r.len(), survivors.len());
+            for (j, s) in pieces.into_iter().enumerate() {
+                let piece = r.start + s.range.start..r.start + s.range.end;
+                if !piece.is_empty() {
+                    self.adopted[survivors[j]].push(piece);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Threaded step round: broadcast with round tags, collect under a
+/// bounded (doubling) timeout, retry stragglers/corruption, evict and
+/// re-shard on exhaustion, and restart the round whenever membership
+/// changed so every partial reflects the final assignment.
+fn step_all_threads(
+    cmd_txs: &[Sender<Cmd>],
+    res_rx: &Receiver<Reply>,
+    mut ctx: StepCtx<'_>,
+    input: StepInput,
+    metrics: &mut Metrics,
+) -> Result<Vec<PartialStats>> {
+    let p = cmd_txs.len();
+    let input = Arc::new(input);
+    'round: loop {
+        *ctx.round += 1;
+        let round = *ctx.round;
+        let t0 = Instant::now();
+        let mut send_failed: Vec<usize> = Vec::new();
+        for wid in 0..p {
+            if !ctx.alive[wid] {
+                continue;
+            }
+            let cmd =
+                Cmd::Step { input: input.clone(), round, extra: ctx.adopted[wid].clone() };
+            if cmd_txs[wid].send(cmd).is_err() {
+                send_failed.push(wid);
+            }
+        }
+        metrics.add(Phase::Broadcast, t0.elapsed());
+        if !send_failed.is_empty() {
+            for wid in send_failed {
+                ctx.evict(wid)?;
+            }
+            continue 'round; // assignment changed: re-broadcast
+        }
+
+        let mut slots: Vec<Option<PartialStats>> = (0..p).map(|_| None).collect();
+        let mut errored: Vec<bool> = vec![false; p];
+        let mut attempts: Vec<usize> = vec![1; p];
+        let mut first_err: Option<anyhow::Error> = None;
+        let mut max_step = Duration::ZERO;
+        let mut timeout = ctx.timeout;
+        loop {
+            let missing = (0..p)
+                .filter(|&w| ctx.alive[w] && slots[w].is_none() && !errored[w])
+                .count();
+            if missing == 0 {
+                break;
+            }
+            match res_rx.recv_timeout(timeout) {
+                Ok(Reply::Stepped { wid, round: r, stats, step_time }) => {
+                    if r != round || !ctx.alive[wid] || slots[wid].is_some() || errored[wid] {
+                        continue; // stale round, evicted sender, or duplicate
+                    }
+                    match stats {
+                        Ok(s) if s.is_finite() => {
+                            slots[wid] = Some(s);
+                            max_step = max_step.max(step_time);
+                        }
+                        Ok(_corrupt) => {
+                            // NaN/inf partial: retry, then evict
+                            attempts[wid] += 1;
+                            if attempts[wid] > ctx.retries + 1 {
+                                ctx.evict(wid)?;
+                                continue 'round;
+                            }
+                            ctx.note_retry();
+                            let cmd = Cmd::Step {
+                                input: input.clone(),
+                                round,
+                                extra: ctx.adopted[wid].clone(),
+                            };
+                            if cmd_txs[wid].send(cmd).is_err() {
+                                ctx.evict(wid)?;
+                                continue 'round;
+                            }
+                        }
+                        Err(e) => {
+                            // a deterministic backend error (not injected
+                            // noise): retrying cannot heal it — surface it
+                            errored[wid] = true;
+                            if first_err.is_none() {
+                                first_err = Some(e);
+                            }
+                        }
+                    }
+                }
+                // replies of other kinds can only be stragglers from an
+                // aborted earlier round; skip them
+                Ok(_) => continue,
+                Err(RecvTimeoutError::Timeout) => {
+                    let mut evicted = false;
+                    for wid in 0..p {
+                        if !ctx.alive[wid] || slots[wid].is_some() || errored[wid] {
+                            continue;
+                        }
+                        attempts[wid] += 1;
+                        if attempts[wid] > ctx.retries + 1 {
+                            ctx.evict(wid)?;
+                            evicted = true;
+                            continue;
+                        }
+                        ctx.note_retry();
+                        let cmd = Cmd::Step {
+                            input: input.clone(),
+                            round,
+                            extra: ctx.adopted[wid].clone(),
+                        };
+                        if cmd_txs[wid].send(cmd).is_err() {
+                            ctx.evict(wid)?;
+                            evicted = true;
+                        }
+                    }
+                    if evicted {
+                        continue 'round; // assignment changed: re-broadcast
+                    }
+                    timeout = timeout.saturating_mul(2); // backoff
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    bail!("all worker threads hung up mid-round")
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        metrics.add(Phase::LocalStats, max_step);
+        pool_metrics().step_nanos.observe_duration(max_step);
+        return Ok((0..p).filter(|&w| ctx.alive[w]).map(|w| slots[w].take().unwrap()).collect());
+    }
+}
+
+/// Simulated step round: the same fault semantics run serially — a
+/// dropped reply or corrupt partial costs a retry (immediate, there is
+/// no wire to wait on), a "panicked" worker is evicted and the round
+/// restarts with its rows re-sharded.
+fn step_all_simulate(
+    workers: &mut [Box<dyn WorkerBackend>],
+    faults: &mut [WorkerFaults],
+    mut ctx: StepCtx<'_>,
+    input: &StepInput,
+    metrics: &mut Metrics,
+) -> Result<Vec<PartialStats>> {
+    'round: loop {
+        *ctx.round += 1;
+        let round = *ctx.round;
+        let mut out = Vec::with_capacity(workers.len());
+        let mut max_step = Duration::ZERO;
+        for wid in 0..workers.len() {
+            if !ctx.alive[wid] {
+                continue;
+            }
+            let mut attempts = 0usize;
+            loop {
+                attempts += 1;
+                if attempts > ctx.retries + 1 {
+                    ctx.evict(wid)?;
+                    continue 'round;
+                }
+                let fault = faults[wid].fire(round);
+                match fault {
+                    Some(FaultKind::PanicAt) => {
+                        ctx.evict(wid)?;
+                        continue 'round;
+                    }
+                    Some(FaultKind::DropReply) => {
+                        ctx.note_retry();
+                        continue;
+                    }
+                    Some(FaultKind::DelayStep { millis }) => {
+                        std::thread::sleep(Duration::from_millis(millis));
+                    }
+                    _ => {}
+                }
+                let t0 = Instant::now();
+                // a hard backend error is deterministic: propagate, as
+                // the threaded path does
+                let mut stats = workers[wid].step_ranges(input, &ctx.adopted[wid])?;
+                if matches!(fault, Some(FaultKind::CorruptStats)) {
+                    stats.obj = f64::NAN;
+                }
+                if !stats.is_finite() {
+                    ctx.note_retry();
+                    continue;
+                }
+                max_step = max_step.max(t0.elapsed());
+                out.push(stats);
+                break;
+            }
+        }
+        metrics.add(Phase::LocalStats, max_step);
+        pool_metrics().step_nanos.observe_duration(max_step);
+        return Ok(out);
+    }
+}
+
 /// Collect the P `Ingested` replies of one ingest/seal round,
 /// propagating the first worker error after draining all replies.
 fn collect_ingest_replies(p: usize, res_rx: &Receiver<Reply>, what: &str) -> Result<()> {
     let mut first_err: Option<anyhow::Error> = None;
-    for _ in 0..p {
+    let mut got = 0usize;
+    while got < p {
         match res_rx.recv().with_context(|| format!("worker died during {what}"))? {
             Reply::Ingested { wid, res } => {
+                got += 1;
                 if let Err(e) = res {
                     if first_err.is_none() {
                         first_err = Some(e.context(format!("worker {wid} {what}")));
                     }
                 }
             }
+            Reply::Stepped { .. } => {} // straggler from an aborted round
             _ => return Err(anyhow!("protocol error: unexpected reply during {what}")),
         }
     }
@@ -365,9 +867,14 @@ fn in_pool_tree(
             inflight += 1;
             i += 2 * stride;
         }
-        for _ in 0..inflight {
+        let mut got = 0usize;
+        while got < inflight {
             match res_rx.recv().context("worker died during reduce")? {
-                Reply::Merged { slot, stats } => slots[slot] = Some(stats),
+                Reply::Merged { slot, stats } => {
+                    slots[slot] = Some(stats);
+                    got += 1;
+                }
+                Reply::Stepped { .. } => {} // straggler from an aborted round
                 _ => return Err(anyhow!("protocol error: unexpected reply during reduce")),
             }
         }

@@ -33,7 +33,7 @@ use pemsvm::cli::Args;
 use pemsvm::config::{ModelKind, TaskKind, TrainConfig};
 use pemsvm::data::stream::{self, StreamOpts, StreamReader};
 use pemsvm::data::{libsvm, synth, Dataset, Task};
-use pemsvm::engine::{Cluster, WarmStart};
+use pemsvm::engine::{CheckpointCfg, Cluster, WarmStart};
 use pemsvm::serve::{self, ModelBody, SavedModel, Scorer};
 use pemsvm::telemetry::{self, TraceWriter};
 
@@ -83,6 +83,15 @@ USAGE:
                [--stream-chunk-rows R] [--dims N,K]
                [--trace spans.jsonl] [--metrics-out metrics.prom]
                [--verbosity 0|1|2]
+               [--checkpoint every-N] [--checkpoint-path run.ckpt] [--resume]
+               [--step-timeout-ms T] [--step-retries R]
+               --checkpoint every-N writes the full session state
+               (weights, sampler RNG streams, stopping rule) atomically
+               every N iterations to --checkpoint-path (default
+               <model-out>.ckpt); --resume continues a killed run from
+               it **bit-identically**. --step-timeout-ms/--step-retries
+               bound the per-round wait on a worker before it is retried
+               and then evicted (its rows re-shard onto survivors)
                --trace writes one JSON line per training iteration
                (phase timings, objective, weight-delta norm);
                --metrics-out dumps the Prometheus exposition of the
@@ -128,14 +137,17 @@ fn build_config(args: &Args) -> Result<TrainConfig> {
         let k = key.replace('-', "_");
         match k.as_str() {
             "config" | "model_out" | "test" | "lambdas" | "stream_chunk_rows" | "dims"
-            | "trace" | "metrics_out" | "verbosity" => continue,
+            | "trace" | "metrics_out" | "verbosity" | "checkpoint" | "checkpoint_path"
+            | "resume" => continue,
             "simulate_cluster" => {
                 bail!("--simulate-cluster was removed; use --topology threads|simulate")
             }
             "max_iters" | "options" | "lambda" | "workers" | "seed" | "tol" | "backend"
             | "reduce" | "burn_in" | "num_classes" | "eps_clamp" | "eps_insensitive"
             | "artifacts_dir" | "verbose" | "kernel" | "kernel_sigma" | "algo" | "task"
-            | "model" | "topology" | "warm_start" => cfg.set(&k, val)?,
+            | "model" | "topology" | "warm_start" | "step_timeout_ms" | "step_retries" => {
+                cfg.set(&k, val)?
+            }
             other => bail!("unknown flag --{other}"),
         }
     }
@@ -176,6 +188,38 @@ fn stream_opts_of(args: &Args) -> Result<Option<StreamOpts>> {
 /// §12); `None` when tracing is off.
 fn trace_writer_of(args: &Args) -> Result<Option<TraceWriter>> {
     args.get("trace").map(|p| TraceWriter::create(Path::new(p))).transpose()
+}
+
+/// `--checkpoint every-N` / `--checkpoint-path <p>` / `--resume` parsed
+/// into the session checkpoint options (DESIGN.md §13); `None` when
+/// checkpointing is off. The path defaults to `<model-out>.ckpt`.
+fn checkpoint_cfg_of(args: &Args) -> Result<Option<CheckpointCfg>> {
+    let every_s = args.get("checkpoint");
+    let resume = args.get("resume").map(|v| v != "false").unwrap_or(false);
+    if every_s.is_none() && !resume {
+        if args.get("checkpoint-path").is_some() {
+            bail!("--checkpoint-path needs --checkpoint every-N and/or --resume");
+        }
+        return Ok(None);
+    }
+    let every = match every_s {
+        None => 0, // --resume alone: continue the run, write no new checkpoints
+        Some(s) => {
+            let num = s.strip_prefix("every-").unwrap_or(s);
+            let v: usize = num
+                .parse()
+                .with_context(|| format!("bad --checkpoint `{s}` (want every-N)"))?;
+            if v == 0 {
+                bail!("--checkpoint every-N needs N >= 1");
+            }
+            v
+        }
+    };
+    let path = match args.get("checkpoint-path") {
+        Some(p) => PathBuf::from(p),
+        None => PathBuf::from(format!("{}.ckpt", args.get("model-out").unwrap_or("model.txt"))),
+    };
+    Ok(Some(CheckpointCfg { every, path, resume }))
 }
 
 /// `--metrics-out <path>`: dump the full Prometheus exposition of the
@@ -275,8 +319,23 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.backend
     );
     let mut trace = trace_writer_of(args)?;
+    let ck = checkpoint_cfg_of(args)?;
+    if let Some(c) = &ck {
+        println!(
+            "# checkpoint: {}{}{}",
+            if c.resume { "resuming from " } else { "" },
+            c.path.display(),
+            if c.every > 0 { format!(", writing every {} iters", c.every) } else { String::new() }
+        );
+    }
     let t_train = std::time::Instant::now();
-    let out = pemsvm::coordinator::train_full_traced(&ds, test.as_ref(), &cfg, trace.as_mut())?;
+    let out = pemsvm::coordinator::train_full_checkpointed(
+        &ds,
+        test.as_ref(),
+        &cfg,
+        trace.as_mut(),
+        ck.as_ref(),
+    )?;
     let train_secs = t_train.elapsed().as_secs_f64();
 
     print_history(&out, cfg.verbose);
@@ -343,8 +402,15 @@ fn cmd_train_streamed(
     let mut cluster = Cluster::from_stream(reader, cfg)?;
     let ingest_secs = t_ingest.elapsed().as_secs_f64();
     let mut trace = trace_writer_of(args)?;
+    let ck = checkpoint_cfg_of(args)?;
     let t_train = std::time::Instant::now();
-    let out = cluster.run_session_traced(cfg, test.as_ref(), WarmStart::Cold, trace.as_mut())?;
+    let out = cluster.run_session_checkpointed(
+        cfg,
+        test.as_ref(),
+        WarmStart::Cold,
+        trace.as_mut(),
+        ck.as_ref(),
+    )?;
     let train_secs = t_train.elapsed().as_secs_f64();
 
     print_history(&out, cfg.verbose);

@@ -19,6 +19,18 @@ impl NormalSource {
         NormalSource { spare: None }
     }
 
+    /// Rebuild a source from a checkpointed spare (see [`Self::spare`]).
+    pub fn with_spare(spare: Option<f64>) -> Self {
+        NormalSource { spare }
+    }
+
+    /// The cached polar-method spare, if any — together with the raw
+    /// [`Pcg64`] state this pins the draw sequence exactly, which is
+    /// what makes `train --resume` bit-identical for the MC sampler.
+    pub fn spare(&self) -> Option<f64> {
+        self.spare
+    }
+
     /// One N(0,1) draw, consuming entropy from `g`.
     #[inline]
     pub fn next(&mut self, g: &mut Pcg64) -> f64 {

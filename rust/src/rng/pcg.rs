@@ -66,6 +66,18 @@ impl Pcg64 {
             xs.swap(i, j);
         }
     }
+
+    /// Raw `(state, inc)` pair for checkpointing: restoring it via
+    /// [`Pcg64::from_raw`] resumes the stream bit-exactly.
+    pub fn to_raw(&self) -> (u128, u128) {
+        (self.state, self.inc)
+    }
+
+    /// Rebuild a generator from [`Pcg64::to_raw`] output. `inc` must be
+    /// odd (every generator this module constructs satisfies that).
+    pub fn from_raw(state: u128, inc: u128) -> Self {
+        Pcg64 { state, inc: inc | 1 }
+    }
 }
 
 #[cfg(test)]

@@ -12,7 +12,7 @@
 
 use std::collections::BTreeMap;
 use std::path::Path;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 use std::time::Duration;
 
@@ -142,6 +142,9 @@ pub struct ModelEntry {
     pub stats: ModelStats,
     /// how many times this slot has been (re)published
     versions: AtomicU64,
+    /// set by [`Registry::unload`]: connections still holding this entry
+    /// get a structured error instead of scores from a ghost model
+    retired: AtomicBool,
 }
 
 impl ModelEntry {
@@ -159,6 +162,13 @@ impl ModelEntry {
     /// Number of publishes into this slot (1 for a freshly loaded model).
     pub fn version(&self) -> u64 {
         self.versions.load(Ordering::Acquire)
+    }
+
+    /// Has this slot been removed from its registry? A connection (or a
+    /// queued micro-batch) holding the entry across an unload should
+    /// answer with an error, not score against the ghost model.
+    pub fn is_retired(&self) -> bool {
+        self.retired.load(Ordering::Acquire)
     }
 
     fn swap(&self, next: Arc<SavedModel>) {
@@ -193,6 +203,7 @@ impl Registry {
             model: RwLock::new(model),
             stats: ModelStats::for_model(name),
             versions: AtomicU64::new(1),
+            retired: AtomicBool::new(false),
         });
         map.insert(name.to_string(), entry.clone());
         entry
@@ -209,10 +220,18 @@ impl Registry {
         self.inner.read().expect("registry lock poisoned").get(name).cloned()
     }
 
-    /// Remove a slot; in-flight requests holding the entry finish
-    /// against their snapshot.
+    /// Remove a slot and mark its entry retired: requests still holding
+    /// the entry (a connection that selected it, a micro-batch already
+    /// queued) get a structured `error: model ... unloaded` reply
+    /// instead of scores from a model the operator withdrew.
     pub fn unload(&self, name: &str) -> bool {
-        self.inner.write().expect("registry lock poisoned").remove(name).is_some()
+        match self.inner.write().expect("registry lock poisoned").remove(name) {
+            Some(entry) => {
+                entry.retired.store(true, Ordering::Release);
+                true
+            }
+            None => false,
+        }
     }
 
     pub fn names(&self) -> Vec<String> {
@@ -281,6 +300,20 @@ mod tests {
             }
             _ => panic!("wrong bodies"),
         }
+    }
+
+    #[test]
+    fn unload_retires_held_entries() {
+        let reg = Registry::new();
+        let held = reg.publish("retire-me", linear(vec![1.0]));
+        assert!(!held.is_retired());
+        assert!(reg.unload("retire-me"));
+        // the Arc we held across the unload is flagged...
+        assert!(held.is_retired());
+        // ...but a republish under the same name starts a fresh entry
+        let fresh = reg.publish("retire-me", linear(vec![2.0]));
+        assert!(!fresh.is_retired());
+        assert!(held.is_retired(), "old entry stays retired");
     }
 
     #[test]

@@ -267,6 +267,24 @@ fn score_and_reply(scorer: &mut Scorer, rows: Vec<RowMsg>) {
     }
     let mut replies: Vec<(usize, String, Sender<String>)> = Vec::new();
     for (entry, group) in groups {
+        // the model was unloaded after these rows were queued (or after
+        // the connection selected it): answer with a structured error
+        // per row rather than scoring against the withdrawn model
+        if entry.is_retired() {
+            for (pos, row) in group {
+                let msg = match &row.payload {
+                    Payload::BadRow(e) => e.clone(),
+                    // the exposition needs no model; still answerable
+                    Payload::Metrics => render_exposition(),
+                    Payload::Row(_) | Payload::Stats => {
+                        server_metrics().protocol_errors.inc();
+                        format!("error: model `{}` unloaded", entry.name())
+                    }
+                };
+                replies.push((pos, msg, row.reply));
+            }
+            continue;
+        }
         let model = entry.current();
         // assemble the scorable rows into one CSR batch, wide enough
         // for the model and for any stray larger feature index

@@ -5,7 +5,7 @@
 use std::sync::{Arc, OnceLock};
 use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::linalg::{cholesky_in_place, solve_lower, solve_upper, Mat};
 use crate::telemetry::{self, Counter, Histogram};
@@ -17,6 +17,7 @@ use super::PartialStats;
 struct MasterMetrics {
     solve_nanos: Arc<Histogram>,
     jitter_retries: Arc<Counter>,
+    nonfinite_stats: Arc<Counter>,
 }
 
 fn master_metrics() -> &'static MasterMetrics {
@@ -27,6 +28,10 @@ fn master_metrics() -> &'static MasterMetrics {
         jitter_retries: telemetry::global().counter(
             "master_jitter_retries_total",
             "Cholesky retries with escalated diagonal jitter.",
+        ),
+        nonfinite_stats: telemetry::global().counter(
+            "master_nonfinite_stats_total",
+            "Master solves rejected because the reduced statistics held NaN/inf.",
         ),
     })
 }
@@ -49,6 +54,13 @@ pub fn solve_native(
     mc_noise: Option<&[f32]>,
 ) -> Result<Vec<f32>> {
     let t_solve = Instant::now();
+    // A NaN anywhere in the reduced statistics would silently survive
+    // the Cholesky (NaN comparisons are all-false) and poison every
+    // later iteration; reject it here, where the failure is attributable.
+    if !stats.is_finite() {
+        master_metrics().nonfinite_stats.inc();
+        bail!("master solve: reduced statistics contain NaN/inf (corrupt worker reply?)");
+    }
     let k = stats.mu.len();
     let mut a = stats.sigma.unpack();
     match reg {

@@ -55,6 +55,18 @@ impl PartialStats {
         self.obj += other.obj;
         self.aux += other.aux;
     }
+
+    /// Every entry finite? The fault-tolerant pool validates each
+    /// worker reply with this before accepting it — a corrupted partial
+    /// (NaN/inf from a faulted worker or a numeric blow-up) is retried
+    /// instead of silently poisoning the reduce and every later
+    /// iteration.
+    pub fn is_finite(&self) -> bool {
+        self.obj.is_finite()
+            && self.aux.is_finite()
+            && self.mu.iter().all(|v| v.is_finite())
+            && self.sigma.data.iter().all(|v| v.is_finite())
+    }
 }
 
 #[cfg(test)]

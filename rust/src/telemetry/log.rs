@@ -28,6 +28,16 @@ pub fn verbosity() -> u8 {
     VERBOSITY.load(Ordering::Relaxed)
 }
 
+/// `eprintln!` that always prints: degraded-mode events (worker
+/// evictions, retries exhausted) the operator should see even at
+/// `--verbosity 0`.
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        eprintln!($($arg)*);
+    };
+}
+
 /// `eprintln!` at info level (suppressed by `--verbosity 0`).
 #[macro_export]
 macro_rules! log_info {

@@ -1,0 +1,336 @@
+//! The deterministic chaos harness (DESIGN.md §13): seeded fault plans
+//! driven through the live engine, asserting the three fault-tolerance
+//! guarantees end to end —
+//!
+//! 1. **Recoverable faults are invisible.** A straggler, a dropped
+//!    reply, or a corrupt partial costs retries, never numerics: the EM
+//!    trajectory is bit-identical to the fault-free run, on both
+//!    topologies, for every task.
+//! 2. **A worker death degrades, it does not derail.** The dead
+//!    worker's rows are re-sharded onto survivors mid-session; the run
+//!    terminates with a finite objective close to the fault-free one
+//!    (only the f32 association order changed — the statistics are
+//!    exact sums either way).
+//! 3. **Resume is exact.** A run killed after a checkpoint and resumed
+//!    on a fresh cluster finishes bit-identical to one that was never
+//!    interrupted — EM and MC, including the sampler's RNG streams.
+//!
+//! Everything here is seeded: a failure reproduces with `cargo test
+//! --test chaos` alone, no flaky-retry loop required.
+
+use std::path::PathBuf;
+
+use pemsvm::config::{Algo, TaskKind, Topology, TrainConfig};
+use pemsvm::data::{synth, Dataset};
+use pemsvm::engine::{
+    CheckpointCfg, Cluster, FaultKind, FaultPlan, FaultStats, TrainOutput, WarmStart,
+};
+use pemsvm::model::Weights;
+
+/// Small-but-nondegenerate config: tol < 0 disarms the stopping rule so
+/// every run executes exactly `max_iters` iterations (fixed round
+/// schedule for the fault plans), and the tight timeout makes injected
+/// stragglers trip the leader's deadline in milliseconds, not minutes.
+fn chaos_cfg(options: &str) -> TrainConfig {
+    let mut cfg = TrainConfig::default().with_options(options).unwrap();
+    cfg.workers = 3;
+    cfg.max_iters = 6;
+    cfg.tol = -1.0;
+    cfg.num_classes = 3;
+    cfg.step_timeout_ms = 150;
+    cfg.step_retries = 2;
+    cfg
+}
+
+fn dataset_for(task: TaskKind) -> Dataset {
+    match task {
+        TaskKind::Cls => synth::alpha_like(600, 10, 7),
+        TaskKind::Svr => synth::year_like(600, 10, 7),
+        TaskKind::Mlt => synth::mnist_like(600, 10, 3, 7),
+    }
+}
+
+/// Flat view over either weight shape, for bit comparisons.
+fn flat(w: &Weights) -> &[f32] {
+    match w {
+        Weights::Single(v) => v,
+        Weights::PerClass(m) => &m.data,
+    }
+}
+
+fn bits(w: &Weights) -> Vec<u32> {
+    flat(w).iter().map(|x| x.to_bits()).collect()
+}
+
+/// The per-iteration trajectory, bit-for-bit (f64 objectives included).
+fn history_bits(out: &TrainOutput) -> Vec<(usize, u64, u64)> {
+    out.history
+        .iter()
+        .map(|h| (h.iter, h.objective.to_bits(), h.train_loss.to_bits()))
+        .collect()
+}
+
+fn run_with_plan(ds: &Dataset, cfg: &TrainConfig, plan: FaultPlan) -> (TrainOutput, FaultStats) {
+    let mut cl = Cluster::new_with_faults(ds, cfg, plan).unwrap();
+    let out = cl.run_session(cfg, None, WarmStart::Cold).unwrap();
+    let stats = cl.fault_counters();
+    assert_eq!(cl.alive_workers() + stats.evictions as usize, cfg.workers);
+    (out, stats)
+}
+
+fn ckpt_path(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("pemsvm_chaos_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(format!("{}_{}.ckpt", tag, std::process::id()))
+}
+
+/// Guarantee 1: every recoverable fault kind, on every task and both
+/// topologies, leaves the EM trajectory bit-identical to the fault-free
+/// run. Round 2 is the second broadcast: mid-flight for CLS/SVR, the
+/// second class block of iteration 0 for MLT.
+#[test]
+fn recoverable_faults_leave_em_trajectories_bit_identical() {
+    for task in [TaskKind::Cls, TaskKind::Svr, TaskKind::Mlt] {
+        let ds = dataset_for(task);
+        for topology in [Topology::Threads, Topology::Simulate] {
+            let mut cfg = chaos_cfg("LIN-EM-CLS");
+            cfg.task = task;
+            cfg.topology = topology;
+            let (clean, cstats) = run_with_plan(&ds, &cfg, FaultPlan::none());
+            assert_eq!(cstats.retries, 0);
+            assert_eq!(cstats.evictions, 0);
+            for kind in [
+                FaultKind::DelayStep { millis: 300 },
+                FaultKind::DropReply,
+                FaultKind::CorruptStats,
+            ] {
+                let plan = FaultPlan::none().with(1, 2, kind);
+                let (out, stats) = run_with_plan(&ds, &cfg, plan);
+                let tag = format!("{task:?}/{topology:?}/{kind:?}");
+                assert_eq!(stats.evictions, 0, "{tag}: recoverable fault must not evict");
+                // a delayed step never misses a deadline in the serial
+                // simulator — there is no wire to time out on
+                let silent =
+                    topology == Topology::Simulate && matches!(kind, FaultKind::DelayStep { .. });
+                if !silent {
+                    assert!(stats.retries >= 1, "{tag}: fault should have cost a retry");
+                }
+                assert_eq!(bits(&out.weights), bits(&clean.weights), "{tag}: weights drifted");
+                assert_eq!(history_bits(&out), history_bits(&clean), "{tag}: history drifted");
+            }
+        }
+    }
+}
+
+/// Guarantee 2: a worker death mid-session is survived. The run
+/// terminates (no deadlock on the dead channel), exactly one eviction is
+/// counted, the survivors adopt the orphaned rows, and the objective
+/// stays finite and close to the fault-free run — re-sharding changes
+/// only the f32 summation order of exact statistics.
+#[test]
+fn worker_death_evicts_and_run_completes() {
+    for topology in [Topology::Threads, Topology::Simulate] {
+        let ds = dataset_for(TaskKind::Cls);
+        let mut cfg = chaos_cfg("LIN-EM-CLS");
+        cfg.topology = topology;
+        let (clean, _) = run_with_plan(&ds, &cfg, FaultPlan::none());
+        let plan = FaultPlan::none().with(2, 2, FaultKind::PanicAt);
+        let (out, stats) = run_with_plan(&ds, &cfg, plan);
+        assert_eq!(stats.evictions, 1, "{topology:?}");
+        assert_eq!(out.iterations, cfg.max_iters, "{topology:?}: run cut short");
+        assert!(out.objective.is_finite(), "{topology:?}");
+        assert!(out.history.iter().all(|h| h.objective.is_finite()), "{topology:?}");
+        assert!(flat(&out.weights).iter().all(|x| x.is_finite()), "{topology:?}");
+        let rel = (out.objective - clean.objective).abs() / clean.objective.abs().max(1.0);
+        assert!(
+            rel < 5e-2,
+            "{topology:?}: degraded objective {} too far from fault-free {}",
+            out.objective,
+            clean.objective
+        );
+    }
+}
+
+/// A dead worker also cannot corrupt checkpoint capture: the RNG
+/// snapshot leaves the evicted slot `None` instead of hanging on the
+/// dead channel, and an EM resume from such a checkpoint still works
+/// (onto a fresh full-strength cluster).
+#[test]
+fn checkpoint_after_eviction_resumes_on_a_fresh_cluster() {
+    let ds = dataset_for(TaskKind::Cls);
+    let cfg = chaos_cfg("LIN-EM-CLS");
+    let path = ckpt_path("postkill_em_cls");
+    let mut half = cfg.clone();
+    half.max_iters = 4;
+    let plan = FaultPlan::none().with(0, 2, FaultKind::PanicAt);
+    let mut cl = Cluster::new_with_faults(&ds, &half, plan).unwrap();
+    let ck = CheckpointCfg { every: 4, path: path.clone(), resume: false };
+    cl.run_session_checkpointed(&half, None, WarmStart::Cold, None, Some(&ck)).unwrap();
+    assert_eq!(cl.fault_counters().evictions, 1);
+    drop(cl);
+
+    // resume twice on fresh, fault-free clusters: both continuations
+    // must agree bit-for-bit (EM resume is deterministic)
+    let ck = CheckpointCfg { every: 0, path: path.clone(), resume: true };
+    let mut outs = Vec::new();
+    for _ in 0..2 {
+        let mut fresh = Cluster::new(&ds, &cfg).unwrap();
+        let out = fresh
+            .run_session_checkpointed(&cfg, None, WarmStart::Cold, None, Some(&ck))
+            .unwrap();
+        assert_eq!(fresh.fault_counters().evictions, 0);
+        assert!(out.objective.is_finite());
+        assert_eq!(out.history.first().map(|h| h.iter), Some(4), "resumed at iteration 4");
+        outs.push(out);
+    }
+    assert_eq!(bits(&outs[0].weights), bits(&outs[1].weights));
+    assert_eq!(history_bits(&outs[0]), history_bits(&outs[1]));
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Guarantee 3, the headline: kill-and-resume is **bit-identical** to an
+/// uninterrupted run — for EM (CLS), for the MC sampler (SVR, where the
+/// master *and* every worker consume RNG streams), and for the
+/// multi-weight MLT driver.
+#[test]
+fn resume_after_interrupt_is_bit_identical() {
+    for (options, task, burn_in) in [
+        ("LIN-EM-CLS", TaskKind::Cls, 0usize),
+        ("LIN-MC-SVR", TaskKind::Svr, 2),
+        ("LIN-EM-MLT", TaskKind::Mlt, 0),
+    ] {
+        let ds = dataset_for(task);
+        let mut cfg = chaos_cfg(options);
+        cfg.max_iters = 8;
+        cfg.burn_in = burn_in;
+
+        // the uninterrupted twin
+        let mut full = Cluster::new(&ds, &cfg).unwrap();
+        let want = full.run_session(&cfg, None, WarmStart::Cold).unwrap();
+        drop(full);
+
+        // the interrupted run: killed right after the iteration-4
+        // checkpoint (max_iters = 4 plays the part of `kill -9`)
+        let path = ckpt_path(&format!("resume_{options}"));
+        let mut half = cfg.clone();
+        half.max_iters = 4;
+        let ck = CheckpointCfg { every: 4, path: path.clone(), resume: false };
+        let mut interrupted = Cluster::new(&ds, &half).unwrap();
+        interrupted
+            .run_session_checkpointed(&half, None, WarmStart::Cold, None, Some(&ck))
+            .unwrap();
+        drop(interrupted);
+
+        // a fresh process's cluster picks the checkpoint up
+        let ck = CheckpointCfg { every: 4, path: path.clone(), resume: true };
+        let mut fresh = Cluster::new(&ds, &cfg).unwrap();
+        let got = fresh
+            .run_session_checkpointed(&cfg, None, WarmStart::Cold, None, Some(&ck))
+            .unwrap();
+
+        assert_eq!(
+            got.history.first().map(|h| h.iter),
+            Some(4),
+            "{options}: resume did not start at the checkpoint"
+        );
+        assert_eq!(
+            history_bits(&got),
+            history_bits(&want)[4..].to_vec(),
+            "{options}: resumed tail diverged from the uninterrupted run"
+        );
+        assert_eq!(
+            bits(&got.weights),
+            bits(&want.weights),
+            "{options}: final weights are not bit-identical"
+        );
+        let _ = std::fs::remove_file(&path);
+    }
+}
+
+/// A resume must refuse a checkpoint from a different configuration —
+/// silently continuing someone else's run is worse than failing.
+#[test]
+fn resume_rejects_mismatched_config() {
+    let ds = dataset_for(TaskKind::Cls);
+    let mut cfg = chaos_cfg("LIN-EM-CLS");
+    cfg.max_iters = 4;
+    let path = ckpt_path("mismatch_em_cls");
+    let ck = CheckpointCfg { every: 4, path: path.clone(), resume: false };
+    let mut cl = Cluster::new(&ds, &cfg).unwrap();
+    cl.run_session_checkpointed(&cfg, None, WarmStart::Cold, None, Some(&ck)).unwrap();
+    drop(cl);
+
+    let mut other = cfg.clone();
+    other.lambda = 2.0; // fingerprint drift: lambda is bit-compared
+    let ck = CheckpointCfg { every: 0, path: path.clone(), resume: true };
+    let mut fresh = Cluster::new(&ds, &other).unwrap();
+    let err = fresh
+        .run_session_checkpointed(&other, None, WarmStart::Cold, None, Some(&ck))
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("lambda"), "{err:#}");
+    let _ = std::fs::remove_file(&path);
+}
+
+/// The MC sampler under recoverable chaos: retries re-draw worker noise,
+/// so the trajectory legitimately differs from the fault-free one — the
+/// guarantee is termination, finite objectives, and a model that still
+/// learns (same bound the coordinator tests use for clean MC runs).
+#[test]
+fn mc_chaos_run_terminates_and_stays_finite() {
+    let ds = dataset_for(TaskKind::Cls);
+    let mut cfg = chaos_cfg("LIN-MC-CLS");
+    cfg.burn_in = 2;
+    let plan = FaultPlan::none()
+        .with(0, 2, FaultKind::DropReply)
+        .with(1, 3, FaultKind::DelayStep { millis: 300 })
+        .with(2, 5, FaultKind::CorruptStats);
+    let (out, stats) = run_with_plan(&ds, &cfg, plan);
+    assert!(stats.retries >= 2);
+    assert_eq!(stats.evictions, 0);
+    assert_eq!(out.iterations, cfg.max_iters);
+    assert!(out.history.iter().all(|h| h.objective.is_finite()));
+    // short run (4 averaged samples), so a loose learning floor: the
+    // point is that chaos did not wreck the model, not peak accuracy
+    assert!(pemsvm::model::accuracy_cls(&ds, out.weights.single()) > 0.6);
+}
+
+/// The seeded sweep: random-but-reproducible fault schedules, the whole
+/// point of [`FaultPlan::seeded`]. Every seed must terminate within the
+/// fixed iteration budget with finite objectives; at most one worker is
+/// ever killed by construction, so at least one survivor always remains.
+#[test]
+fn seeded_fault_sweep_terminates_with_finite_objectives() {
+    for algo in [Algo::Em, Algo::Mc] {
+        for seed in 1u64..=5 {
+            let ds = dataset_for(TaskKind::Cls);
+            let mut cfg = chaos_cfg("LIN-EM-CLS");
+            cfg.algo = algo;
+            cfg.burn_in = 2;
+            // 6 iterations of CLS = broadcast rounds 1..=6 (plus
+            // restarts); schedule across 12 so some faults also land on
+            // post-eviction rounds
+            let plan = FaultPlan::seeded(seed, cfg.workers, 12, 4);
+            let mut cl = Cluster::new_with_faults(&ds, &cfg, plan).unwrap();
+            let out = cl.run_session(&cfg, None, WarmStart::Cold).unwrap();
+            let stats = cl.fault_counters();
+            let tag = format!("{algo:?}/seed {seed}");
+            assert!(cl.alive_workers() >= 1, "{tag}");
+            assert!(stats.evictions <= 2, "{tag}: {stats:?}");
+            assert_eq!(out.iterations, cfg.max_iters, "{tag}: run cut short");
+            assert!(out.history.iter().all(|h| h.objective.is_finite()), "{tag}");
+            assert!(flat(&out.weights).iter().all(|x| x.is_finite()), "{tag}");
+
+            // determinism of the harness itself: the same seed replays
+            // the same retry/eviction schedule
+            let plan = FaultPlan::seeded(seed, cfg.workers, 12, 4);
+            let mut cl2 = Cluster::new_with_faults(&ds, &cfg, plan).unwrap();
+            let out2 = cl2.run_session(&cfg, None, WarmStart::Cold).unwrap();
+            assert_eq!(cl2.fault_counters().evictions, stats.evictions, "{tag}");
+            if algo == Algo::Em && stats.evictions == 0 {
+                // no eviction and deterministic steps: full bit-equality
+                assert_eq!(bits(&out2.weights), bits(&out.weights), "{tag}");
+                assert_eq!(history_bits(&out2), history_bits(&out), "{tag}");
+            }
+        }
+    }
+}

@@ -290,6 +290,64 @@ fn tcp_protocol_matches_batch_scorer() {
     assert!(exposition.contains("# TYPE predict_requests_total counter"));
 }
 
+/// A model unloaded while a connection is mid-stream answers further
+/// rows on that connection with a structured error line instead of
+/// scoring against the withdrawn model — and the connection survives.
+#[test]
+fn unload_mid_stream_yields_structured_errors() {
+    // unique model name: telemetry series are process-global
+    let name = "unload-mid-batch";
+    let registry = Arc::new(Registry::new());
+    registry.publish(name, linear_model(TaskKind::Cls, Weights::Single(vec![1.0, 0.0]), 2, 1));
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let reg = registry.clone();
+    std::thread::spawn(move || {
+        let opts =
+            ServeOpts { max_batch: 8, max_wait: Duration::from_micros(500), workers: 1 };
+        let _ = serve::serve(listener, reg, "unload-mid-batch".into(), opts);
+    });
+
+    let stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+
+    // healthy rows score normally
+    writer.write_all(b"1 1:2\n").unwrap();
+    writer.flush().unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(!line.starts_with("error:"), "got `{line}`");
+
+    // operator withdraws the model while the connection still holds it
+    assert!(registry.unload(name));
+    for _ in 0..3 {
+        writer.write_all(b"1 1:2\n").unwrap();
+    }
+    writer.write_all(b"#stats\n").unwrap();
+    writer.flush().unwrap();
+    // every queued row answers with the structured unload error, in
+    // order, and #stats gets the same treatment
+    for _ in 0..4 {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert_eq!(
+            line.trim(),
+            "error: model `unload-mid-batch` unloaded",
+            "connection must get a structured error after unload"
+        );
+    }
+    // the connection is still alive: switch to a republished model
+    registry.publish(name, linear_model(TaskKind::Cls, Weights::Single(vec![0.0, 1.0]), 2, 1));
+    writer.write_all(b"#model unload-mid-batch\n1 1:2\n").unwrap();
+    writer.flush().unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(!line.starts_with("error:"), "fresh entry scores again, got `{line}`");
+}
+
 /// Serving counters are keyed by model *name* in the global telemetry
 /// registry, so they stay monotone across a hot reload mid-stream AND
 /// across a full unload + republish (which allocates a new entry).
