@@ -4,11 +4,13 @@
 //! >= 2x at 4 workers on the mnist-like batch; results are recorded in
 //! EXPERIMENTS.md (§Serving).
 //!
-//! `SCALE=0.2` shrinks the workload like the other benches.
+//! `SCALE=0.2` shrinks the workload like the other benches (`--quick`
+//! is the CI smoke preset). A `BENCH_serve.json` snapshot lands at the
+//! repo root via [`benchutil::write_bench_json`].
 
 use std::sync::Arc;
 
-use pemsvm::benchutil::{header, scaled, time};
+use pemsvm::benchutil::{header, scaled, time, write_bench_json};
 use pemsvm::config::TaskKind;
 use pemsvm::data::synth;
 use pemsvm::linalg::Mat;
@@ -18,18 +20,20 @@ use pemsvm::serve::{metric_of, ModelBody, ModelMeta, SavedModel, Scorer};
 
 fn saved(task: TaskKind, body: Weights, k: usize, m: usize) -> Arc<SavedModel> {
     Arc::new(SavedModel::new(
-        ModelMeta { task, k, m, lambda: 1.0, options: String::new(), legacy: false },
+        ModelMeta { task, k, m, lambda: 1.0, options: String::new(), verdict: None, legacy: false },
         ModelBody::Linear(body),
     ))
 }
 
+/// Run the worker sweep and return `(workers, rows_per_sec, speedup)`
+/// per point for the JSON snapshot.
 fn bench_rows(
     label: &str,
     n: usize,
     per_row_secs: f64,
     model: &Arc<SavedModel>,
     batch: &Arc<pemsvm::data::Dataset>,
-) {
+) -> Vec<(usize, f64, f64)> {
     println!(
         "   {:<22} {:>9} {:>12.0} {:>10}",
         label,
@@ -37,6 +41,7 @@ fn bench_rows(
         n as f64 / per_row_secs,
         "1.00x"
     );
+    let mut points = Vec::new();
     for workers in [1usize, 2, 4, 8] {
         let mut scorer = Scorer::new(workers);
         // one warmup dispatch so thread startup is off the clock
@@ -49,8 +54,25 @@ fn bench_rows(
             n as f64 / secs,
             per_row_secs / secs
         );
+        points.push((workers, n as f64 / secs, per_row_secs / secs));
         drop(out);
     }
+    points
+}
+
+/// One section of the JSON snapshot.
+fn section_json(n: usize, k: usize, per_row_secs: f64, points: &[(usize, f64, f64)]) -> String {
+    let rows: Vec<String> = points
+        .iter()
+        .map(|(w, rps, sp)| {
+            format!("{{\"workers\":{w},\"rows_per_sec\":{rps:.0},\"speedup\":{sp:.3}}}")
+        })
+        .collect();
+    format!(
+        "{{\"n\": {n}, \"k\": {k}, \"per_row_rows_per_sec\": {:.0}, \"scorer\": [{}]}}",
+        n as f64 / per_row_secs,
+        rows.join(",")
+    )
 }
 
 fn main() {
@@ -71,7 +93,8 @@ fn main() {
     let model = saved(TaskKind::Mlt, weights, k, m);
     println!("\nMLT mnist-like N={n} K={k} M={m}");
     println!("   {:<22} {:>9} {:>12} {:>10}", "path", "secs", "rows/s", "speedup");
-    bench_rows("per-row evaluate", n, t_row, &model, &ds);
+    let mlt_points = bench_rows("per-row evaluate", n, t_row, &model, &ds);
+    let mlt_json = section_json(n, k, t_row, &mlt_points);
     // the batched path must agree with the per-row loop bit-for-bit
     let scores = Scorer::new(4).score_batch(&model, &ds).unwrap().scores;
     assert_eq!(metric_of(TaskKind::Mlt, &ds.labels, &scores), acc_row);
@@ -86,7 +109,15 @@ fn main() {
     let model = saved(TaskKind::Cls, weights, k, 1);
     println!("\nCLS alpha-like N={n} K={k}");
     println!("   {:<22} {:>9} {:>12} {:>10}", "path", "secs", "rows/s", "speedup");
-    bench_rows("per-row evaluate", n, t_row, &model, &ds);
+    let cls_points = bench_rows("per-row evaluate", n, t_row, &model, &ds);
+    let cls_json = section_json(n, k, t_row, &cls_points);
     let scores = Scorer::new(4).score_batch(&model, &ds).unwrap().scores;
     assert_eq!(metric_of(TaskKind::Cls, &ds.labels, &scores), acc_row);
+
+    let json = format!(
+        "{{\n  \"bench\": \"serve_throughput\",\n  \"scale\": {},\n  \
+         \"mlt\": {mlt_json},\n  \"cls\": {cls_json}\n}}\n",
+        pemsvm::benchutil::scale()
+    );
+    write_bench_json("serve", &json);
 }

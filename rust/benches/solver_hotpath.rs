@@ -5,14 +5,19 @@
 //! trajectory number); (2) per-iteration worker-step wall-clock for the
 //! three tasks (CLS / SVR / MLT) at a representative shape, using one
 //! reused [`StepWorkspace`] exactly like the engine loop does; (3) the
-//! cost of the telemetry layer's per-iteration instrumentation bundle,
-//! asserted < 1% of one CLS iteration (ISSUE acceptance).
+//! cost of the telemetry layer's per-iteration instrumentation bundle —
+//! now including a `--diag-every 1` [`ChainDiag`] observation —
+//! asserted < 1% of one CLS iteration (ISSUE acceptance). The budget
+//! denominator is measured at a **fixed** N=20,000 reference shape so
+//! the assert means the same thing under `--quick` / `SCALE` smoke
+//! runs as at full scale.
 //!
-//! Results are printed AND appended-as-snapshot to `BENCH_solver.json`
-//! at the repo root (one self-contained JSON object; later runs
-//! overwrite it — the git history is the trajectory).
+//! Results are printed AND written as a snapshot to `BENCH_solver.json`
+//! at the repo root via [`benchutil::write_bench_json`] (one
+//! self-contained JSON object; later runs overwrite it — the git
+//! history / CI artifacts are the trajectory).
 
-use pemsvm::benchutil::{header, scaled, time};
+use pemsvm::benchutil::{header, scaled, time, write_bench_json};
 use pemsvm::data::synth;
 use pemsvm::linalg::{active_isa, rank_update_dense, rank_update_dense_scalar, Mat, SymPacked};
 use pemsvm::rng::Pcg64;
@@ -118,13 +123,34 @@ fn main() {
     println!("    MLT {:>9.2} ms", mlt_it * 1e3);
 
     // --- section 3: telemetry overhead per iteration ---
+    // The budget denominator: one CLS iteration at the FIXED reference
+    // shape (N=20,000, K=128), re-measured here so --quick/SCALE runs
+    // assert against the same baseline as full-scale runs.
+    let ref_cls_it = {
+        let (rn, rk) = (20_000usize, 128usize);
+        let ds = synth::alpha_like(rn, rk, 2);
+        let w = vec![0.01f32; rk];
+        let mut st = PartialStats::zeros(rk);
+        local::lin_step(&ds, 0..rn, &w, eps, &mut GammaMode::Em, &mut ws, &mut st); // warm
+        let (t, _) = time(|| {
+            for _ in 0..3 {
+                st.reset();
+                local::lin_step(&ds, 0..rn, &w, eps, &mut GammaMode::Em, &mut ws, &mut st);
+            }
+        });
+        t / 3.0
+    };
+
     // Replays exactly what `run_session_traced` adds around one
     // iteration: two Instant reads, a phase_totals diff, the
     // weight-delta norm over K weights, a counter inc, six counter
-    // adds, and a histogram observe — all against live registry series.
+    // adds, a histogram observe — all against live registry series —
+    // plus one full `--diag-every 1` ChainDiag observation (Welford
+    // over K coords, projection dot, three scalar-chain pushes,
+    // verdict checks).
     let (tel_per_iter, overhead_pct) = {
         use pemsvm::metrics::{Metrics, Phase, NPHASES};
-        use pemsvm::telemetry::{self, Counter, Histogram};
+        use pemsvm::telemetry::{self, ChainDiag, Counter, Histogram, IterObs};
         use std::sync::Arc;
 
         let reg = telemetry::global();
@@ -143,11 +169,14 @@ fn main() {
         metrics.add(Phase::LocalStats, std::time::Duration::from_micros(3));
         let w_prev = vec![0.01f32; k];
         let w_cur = vec![0.02f32; k];
+        // detached: same arithmetic as the engine's diag path, no
+        // global-gauge writes from a bench binary
+        let mut diag = ChainDiag::new_detached(true, 0, k, 42);
 
         let tel_reps = 100_000u32;
         let mut sink = 0f64;
         let (t_tel, _) = time(|| {
-            for _ in 0..tel_reps {
+            for it in 0..tel_reps {
                 let t0 = std::time::Instant::now();
                 let before = metrics.phase_totals();
                 let cur = std::hint::black_box(&w_cur);
@@ -162,20 +191,30 @@ fn main() {
                 for (i, c) in phases.iter().enumerate() {
                     c.add(after[i].saturating_sub(before[i]).as_nanos() as u64);
                 }
+                diag.observe(&IterObs {
+                    iter: it as usize,
+                    objective: 100.0 + acc,
+                    weights: cur,
+                    weight_delta: acc.sqrt(),
+                    step_max: 1.1e-3,
+                    step_mean: 1.0e-3,
+                });
                 hist.observe_duration(t0.elapsed());
             }
         });
+        std::hint::black_box(diag.samples());
         std::hint::black_box(sink);
         let per_iter = t_tel / tel_reps as f64;
-        (per_iter, 100.0 * per_iter / cls_it)
+        (per_iter, 100.0 * per_iter / ref_cls_it)
     };
     println!(
-        "  telemetry bundle: {:.0} ns/iter = {overhead_pct:.4}% of one CLS iteration",
+        "  telemetry+diag bundle: {:.0} ns/iter = {overhead_pct:.4}% of one reference CLS \
+         iteration (N=20000)",
         tel_per_iter * 1e9
     );
     assert!(
         overhead_pct < 1.0,
-        "telemetry instrumentation costs {overhead_pct:.3}% of a CLS iteration (budget: 1%)"
+        "telemetry+diag instrumentation costs {overhead_pct:.3}% of a CLS iteration (budget: 1%)"
     );
 
     // --- JSON snapshot ---
@@ -195,13 +234,10 @@ fn main() {
          \"scale\": {},\n  \"rank_update\": [{rows}],\n  \
          \"iteration_secs\": {{\"n\": {n}, \"k\": {k}, \"m\": {m}, \
          \"cls\": {cls_it:.6}, \"svr\": {svr_it:.6}, \"mlt\": {mlt_it:.6}}},\n  \
-         \"telemetry\": {{\"per_iter_nanos\": {:.1}, \"overhead_pct_cls\": {overhead_pct:.5}}}\n}}\n",
+         \"telemetry\": {{\"per_iter_nanos\": {:.1}, \"overhead_pct_cls\": {overhead_pct:.5}, \
+         \"ref_cls_iter_secs\": {ref_cls_it:.6}}}\n}}\n",
         pemsvm::benchutil::scale(),
         tel_per_iter * 1e9
     );
-    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_solver.json");
-    match std::fs::write(&path, &json) {
-        Ok(()) => println!("  wrote {}", path.display()),
-        Err(e) => println!("  could not write {}: {e}", path.display()),
-    }
+    write_bench_json("solver", &json);
 }

@@ -4,10 +4,21 @@
 
 use std::time::Instant;
 
-/// Global workload scale from `SCALE` (default 1.0). `SCALE=0.2
-//  cargo bench` shrinks every bench's N by 5x for smoke runs.
+/// `--quick` on the bench command line (`cargo bench --bench X --
+/// --quick`): CI smoke mode. Shrinks the default workload scale so the
+/// bench finishes in seconds while still emitting its JSON snapshot.
+pub fn quick() -> bool {
+    std::env::args().any(|a| a == "--quick")
+}
+
+/// Global workload scale: the `SCALE` env var wins when set (`SCALE=0.2
+/// cargo bench` shrinks every bench's N by 5x), else 0.05 under
+/// `--quick`, else 1.0.
 pub fn scale() -> f64 {
-    std::env::var("SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(1.0)
+    std::env::var("SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if quick() { 0.05 } else { 1.0 })
 }
 
 /// `n` scaled by `SCALE`, at least `min`.
@@ -65,6 +76,20 @@ pub fn modeled_sim_secs(out: &crate::coordinator::TrainOutput, p: usize, k: usiz
         + m.total(Phase::Other);
     let rounds = (p.max(2) as f64).log2().ceil();
     serial.as_secs_f64() + m.reduces as f64 * rounds * pair_merge_secs(k)
+}
+
+/// Write a bench's JSON snapshot to `BENCH_<name>.json` at the repo
+/// root (one self-contained object per bench; later runs overwrite it —
+/// the git history / CI artifacts are the trajectory). Both bench
+/// binaries route through here so the filenames stay uniform and CI can
+/// `test -s` + parse them.
+pub fn write_bench_json(name: &str, json: &str) {
+    let path =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(format!("../BENCH_{name}.json"));
+    match std::fs::write(&path, json) {
+        Ok(()) => println!("  wrote {}", path.display()),
+        Err(e) => println!("  could not write {}: {e}", path.display()),
+    }
 }
 
 /// Print a bench header in a common format.

@@ -118,6 +118,10 @@ pub struct TrainConfig {
     /// retries per worker per round before the worker is evicted and its
     /// rows re-sharded onto the survivors
     pub step_retries: usize,
+    /// convergence diagnostics cadence (DESIGN.md §14): feed the
+    /// `ChainDiag` accumulator every N iterations; 0 (default) disables
+    /// diagnostics entirely and keeps train output byte-identical
+    pub diag_every: usize,
 }
 
 impl Default for TrainConfig {
@@ -145,6 +149,7 @@ impl Default for TrainConfig {
             xla_use_pallas: true,
             step_timeout_ms: 30_000,
             step_retries: 2,
+            diag_every: 0,
         }
     }
 }
@@ -251,6 +256,7 @@ impl TrainConfig {
             "xla_use_pallas" => self.xla_use_pallas = v.parse()?,
             "step_timeout_ms" => self.step_timeout_ms = v.parse()?,
             "step_retries" => self.step_retries = v.parse()?,
+            "diag_every" => self.diag_every = v.parse()?,
             "backend" => {
                 self.backend = match v.to_ascii_lowercase().as_str() {
                     "native" => BackendKind::Native,

@@ -1,0 +1,559 @@
+//! `pemsvm diagnose` — render a convergence report from a trace file.
+//!
+//! Input is the JSONL emitted by `train/sweep --trace` (one
+//! [`crate::telemetry::IterSpan`] per line). The report pipeline
+//! re-derives every estimator offline with the brute-force
+//! [`crate::telemetry::diag::reference`] implementations — the same
+//! definitions the streaming accumulator uses — so a report over a
+//! `--diag-every 1` trace reproduces the live values, and the embedded
+//! per-iteration `diag` objects (when the run recorded them) are
+//! surfaced alongside for cross-checking.
+//!
+//! No serde: trace records are flat, so a small recursive-descent JSON
+//! parser ([`json`]) covers the grammar the tracer emits (and any
+//! well-formed JSON, for robustness against hand-edited files).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::telemetry::diag::{reference, HealthVerdict, LAGS};
+
+/// A parsed JSON value — just enough structure for trace records.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Jv {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Jv>),
+    Obj(Vec<(String, Jv)>),
+}
+
+impl Jv {
+    /// Object field lookup (None for non-objects / missing keys).
+    pub fn get(&self, key: &str) -> Option<&Jv> {
+        match self {
+            Jv::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// The numeric value, if this is a number.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Jv::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Jv::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+/// Minimal recursive-descent JSON parser for trace lines.
+pub mod json {
+    use super::Jv;
+    use anyhow::{bail, Result};
+
+    pub fn parse(text: &str) -> Result<Jv> {
+        let mut p = Parser { b: text.as_bytes(), i: 0 };
+        p.ws();
+        let v = p.value()?;
+        p.ws();
+        if p.i != p.b.len() {
+            bail!("trailing bytes after JSON value at offset {}", p.i);
+        }
+        Ok(v)
+    }
+
+    struct Parser<'a> {
+        b: &'a [u8],
+        i: usize,
+    }
+
+    impl Parser<'_> {
+        fn ws(&mut self) {
+            while self.i < self.b.len() && self.b[self.i].is_ascii_whitespace() {
+                self.i += 1;
+            }
+        }
+
+        fn peek(&self) -> Option<u8> {
+            self.b.get(self.i).copied()
+        }
+
+        fn eat(&mut self, c: u8) -> Result<()> {
+            if self.peek() == Some(c) {
+                self.i += 1;
+                Ok(())
+            } else {
+                bail!("expected `{}` at offset {}", c as char, self.i)
+            }
+        }
+
+        fn lit(&mut self, s: &str, v: Jv) -> Result<Jv> {
+            if self.b[self.i..].starts_with(s.as_bytes()) {
+                self.i += s.len();
+                Ok(v)
+            } else {
+                bail!("bad literal at offset {}", self.i)
+            }
+        }
+
+        fn value(&mut self) -> Result<Jv> {
+            match self.peek() {
+                Some(b'{') => self.object(),
+                Some(b'[') => self.array(),
+                Some(b'"') => Ok(Jv::Str(self.string()?)),
+                Some(b'n') => self.lit("null", Jv::Null),
+                Some(b't') => self.lit("true", Jv::Bool(true)),
+                Some(b'f') => self.lit("false", Jv::Bool(false)),
+                Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+                _ => bail!("unexpected byte at offset {}", self.i),
+            }
+        }
+
+        fn object(&mut self) -> Result<Jv> {
+            self.eat(b'{')?;
+            let mut fields = Vec::new();
+            self.ws();
+            if self.peek() == Some(b'}') {
+                self.i += 1;
+                return Ok(Jv::Obj(fields));
+            }
+            loop {
+                self.ws();
+                let key = self.string()?;
+                self.ws();
+                self.eat(b':')?;
+                self.ws();
+                let val = self.value()?;
+                fields.push((key, val));
+                self.ws();
+                match self.peek() {
+                    Some(b',') => self.i += 1,
+                    Some(b'}') => {
+                        self.i += 1;
+                        return Ok(Jv::Obj(fields));
+                    }
+                    _ => bail!("expected `,` or `}}` at offset {}", self.i),
+                }
+            }
+        }
+
+        fn array(&mut self) -> Result<Jv> {
+            self.eat(b'[')?;
+            let mut items = Vec::new();
+            self.ws();
+            if self.peek() == Some(b']') {
+                self.i += 1;
+                return Ok(Jv::Arr(items));
+            }
+            loop {
+                self.ws();
+                items.push(self.value()?);
+                self.ws();
+                match self.peek() {
+                    Some(b',') => self.i += 1,
+                    Some(b']') => {
+                        self.i += 1;
+                        return Ok(Jv::Arr(items));
+                    }
+                    _ => bail!("expected `,` or `]` at offset {}", self.i),
+                }
+            }
+        }
+
+        fn string(&mut self) -> Result<String> {
+            self.eat(b'"')?;
+            let mut out = String::new();
+            loop {
+                match self.peek() {
+                    None => bail!("unterminated string"),
+                    Some(b'"') => {
+                        self.i += 1;
+                        return Ok(out);
+                    }
+                    Some(b'\\') => {
+                        self.i += 1;
+                        match self.peek() {
+                            Some(b'"') => out.push('"'),
+                            Some(b'\\') => out.push('\\'),
+                            Some(b'/') => out.push('/'),
+                            Some(b'n') => out.push('\n'),
+                            Some(b't') => out.push('\t'),
+                            Some(b'r') => out.push('\r'),
+                            Some(b'b') => out.push('\u{8}'),
+                            Some(b'f') => out.push('\u{c}'),
+                            Some(b'u') => {
+                                if self.i + 4 >= self.b.len() {
+                                    bail!("truncated \\u escape");
+                                }
+                                let hex =
+                                    std::str::from_utf8(&self.b[self.i + 1..self.i + 5])?;
+                                let cp = u32::from_str_radix(hex, 16)?;
+                                out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                                self.i += 4;
+                            }
+                            _ => bail!("bad escape at offset {}", self.i),
+                        }
+                        self.i += 1;
+                    }
+                    Some(_) => {
+                        // copy the full UTF-8 character, not just a byte
+                        let rest = std::str::from_utf8(&self.b[self.i..])?;
+                        let c = rest.chars().next().unwrap();
+                        out.push(c);
+                        self.i += c.len_utf8();
+                    }
+                }
+            }
+        }
+
+        fn number(&mut self) -> Result<Jv> {
+            let start = self.i;
+            while let Some(c) = self.peek() {
+                if c.is_ascii_digit()
+                    || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E')
+                {
+                    self.i += 1;
+                } else {
+                    break;
+                }
+            }
+            let s = std::str::from_utf8(&self.b[start..self.i])?;
+            Ok(Jv::Num(s.parse()?))
+        }
+    }
+}
+
+/// One trace record, reduced to what the report needs.
+struct Rec {
+    iter: usize,
+    objective: Option<f64>,
+    weight_delta: Option<f64>,
+    /// the embedded `diag` object's (ess, rhat, verdict), when present
+    diag: Option<(f64, f64, HealthVerdict)>,
+}
+
+/// Parse the trace file into per-session record lists.
+fn load_sessions(path: &Path) -> Result<BTreeMap<usize, Vec<Rec>>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading trace {}", path.display()))?;
+    let mut sessions: BTreeMap<usize, Vec<Rec>> = BTreeMap::new();
+    for (lineno, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = json::parse(line)
+            .with_context(|| format!("{}:{}: bad trace line", path.display(), lineno + 1))?;
+        let session = v.get("session").and_then(Jv::as_f64).unwrap_or(0.0) as usize;
+        let iter = v
+            .get("iter")
+            .and_then(Jv::as_f64)
+            .with_context(|| format!("{}:{}: record has no iter", path.display(), lineno + 1))?
+            as usize;
+        let diag = v.get("diag").and_then(|d| {
+            let verdict = HealthVerdict::parse(d.get("verdict")?.as_str()?)?;
+            Some((
+                d.get("ess").and_then(Jv::as_f64).unwrap_or(f64::NAN),
+                d.get("rhat").and_then(Jv::as_f64).unwrap_or(f64::NAN),
+                verdict,
+            ))
+        });
+        sessions.entry(session).or_default().push(Rec {
+            iter,
+            objective: v.get("objective").and_then(Jv::as_f64),
+            weight_delta: v.get("weight_delta").and_then(Jv::as_f64),
+            diag,
+        });
+    }
+    if sessions.is_empty() {
+        bail!("{}: no trace records", path.display());
+    }
+    Ok(sessions)
+}
+
+/// Unicode block sparkline of `xs`, downsampled to at most `width`
+/// buckets (bucket mean). Constant series render as a flat low line.
+pub fn sparkline(xs: &[f64], width: usize) -> String {
+    const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    let finite: Vec<f64> = xs.iter().copied().filter(|x| x.is_finite()).collect();
+    if finite.is_empty() {
+        return String::new();
+    }
+    let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &x in &finite {
+        lo = lo.min(x);
+        hi = hi.max(x);
+    }
+    let buckets = finite.len().min(width.max(1));
+    let mut out = String::with_capacity(buckets * 3);
+    for b in 0..buckets {
+        let s = b * finite.len() / buckets;
+        let e = ((b + 1) * finite.len() / buckets).max(s + 1);
+        let mean = finite[s..e].iter().sum::<f64>() / (e - s) as f64;
+        let level = if hi > lo {
+            (((mean - lo) / (hi - lo)) * 7.0).round() as usize
+        } else {
+            0
+        };
+        out.push(BARS[level.min(7)]);
+    }
+    out
+}
+
+/// Derive a verdict offline from the post-burn-in objective chain —
+/// the subset of the live thresholds (DESIGN.md §14) computable from a
+/// trace alone (no step timings, no weight vectors).
+fn derive_verdict(xs: &[f64], any_nonfinite: bool) -> HealthVerdict {
+    if any_nonfinite {
+        return HealthVerdict::Diverged;
+    }
+    let n = xs.len();
+    if n >= 5 {
+        // smoothed-objective explosion, mirroring the live detector
+        let smooth: Vec<f64> =
+            xs.windows(5).map(|w| w.iter().sum::<f64>() / 5.0).collect();
+        let best = smooth.iter().cloned().fold(f64::INFINITY, f64::min);
+        if smooth.iter().any(|&j| j > 10.0 * best + 1e-12) && best.is_finite() {
+            return HealthVerdict::Diverged;
+        }
+    }
+    if n >= 16 {
+        if reference::sd(xs) == 0.0 {
+            return HealthVerdict::Stalled;
+        }
+        let lag1 = reference::autocorr(xs, 1);
+        let ess = reference::ess(xs);
+        let rhat = reference::split_rhat(xs);
+        if lag1 > 0.98 || ess < 0.02 * n as f64 || rhat > 1.5 {
+            return HealthVerdict::MixingSlow;
+        }
+    }
+    HealthVerdict::Healthy
+}
+
+/// Render the full diagnose report for a trace file. `burn_in` drops
+/// the first iterations of each session from the chains (traces do not
+/// carry the training burn-in, so the CLI takes it as a flag).
+pub fn report(path: &Path, burn_in: usize) -> Result<String> {
+    use std::fmt::Write;
+    let sessions = load_sessions(path)?;
+    let total: usize = sessions.values().map(Vec::len).sum();
+    let mut out = String::new();
+    writeln!(out, "pemsvm diagnose — {}", path.display())?;
+    writeln!(
+        out,
+        "{} session(s), {} record(s), burn-in {} (post-burn-in chains)",
+        sessions.len(),
+        total,
+        burn_in
+    )?;
+    writeln!(out)?;
+    writeln!(
+        out,
+        "{:>7}  {:>6}  {:>8}  {:>6}  {:>6}  {:>10}  {:>9}  verdict",
+        "session", "iters", "ess", "tau", "lag1", "split-rhat", "mcse"
+    )?;
+    let mut details = String::new();
+    for (sid, recs) in &sessions {
+        let xs: Vec<f64> = recs
+            .iter()
+            .filter(|r| r.iter >= burn_in)
+            .filter_map(|r| r.objective)
+            .filter(|x| x.is_finite())
+            .collect();
+        let any_nonfinite = recs
+            .iter()
+            .filter(|r| r.iter >= burn_in)
+            .any(|r| r.objective.is_none());
+        let n = xs.len();
+        let (ess, tau, lag1, rhat, mcse) = if n >= 2 {
+            (
+                reference::ess(&xs),
+                reference::tau(&xs),
+                reference::autocorr(&xs, 1),
+                reference::split_rhat(&xs),
+                reference::mcse(&xs),
+            )
+        } else {
+            (n as f64, 1.0, 0.0, 1.0, f64::NAN)
+        };
+        // the run's own verdict (last embedded diag object) wins; a
+        // plain trace gets the offline derivation
+        let embedded = recs.iter().rev().find_map(|r| r.diag);
+        let verdict = embedded
+            .map(|(_, _, v)| v)
+            .unwrap_or_else(|| derive_verdict(&xs, any_nonfinite));
+        writeln!(
+            out,
+            "{:>7}  {:>6}  {:>8.1}  {:>6.2}  {:>6.3}  {:>10.4}  {:>9.3e}  {}",
+            sid,
+            recs.len(),
+            ess,
+            tau,
+            lag1,
+            rhat,
+            mcse,
+            verdict.display()
+        )?;
+
+        writeln!(details, "session {sid}: {} iters, {} post-burn-in samples", recs.len(), n)?;
+        writeln!(
+            details,
+            "  objective  mean={:.6}  sd={:.3e}  mcse={:.3e}  ess={:.1}",
+            reference::mean(&xs),
+            reference::sd(&xs),
+            mcse,
+            ess
+        )?;
+        let rho: Vec<String> = LAGS
+            .iter()
+            .filter(|&&l| n > l)
+            .map(|&l| format!("{l}:{:+.3}", reference::autocorr(&xs, l)))
+            .collect();
+        writeln!(details, "  autocorr   {}", rho.join("  "))?;
+        match embedded {
+            Some((e_ess, e_rhat, v)) => writeln!(
+                details,
+                "  verdict    {} (recorded in trace; live ess={e_ess:.1} rhat={e_rhat:.3})",
+                v.display()
+            )?,
+            None => writeln!(details, "  verdict    {} (derived offline)", verdict.display())?,
+        }
+        writeln!(details, "  J          {}", sparkline(&xs, 60))?;
+        let wd: Vec<f64> = recs
+            .iter()
+            .filter(|r| r.iter >= burn_in)
+            .filter_map(|r| r.weight_delta)
+            .collect();
+        if !wd.is_empty() {
+            writeln!(details, "  |dw|       {}", sparkline(&wd, 60))?;
+        }
+        writeln!(details)?;
+    }
+    writeln!(out)?;
+    out.push_str(&details);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_parser_handles_trace_shapes() {
+        let v = json::parse(
+            r#"{"session":0,"iter":3,"objective":12.5,"test_metric":null,
+                "phases":{"draw_gamma":0.001},"arr":[1,-2.5e3,true,false,"x\n"]}"#,
+        )
+        .unwrap();
+        assert_eq!(v.get("session").and_then(Jv::as_f64), Some(0.0));
+        assert_eq!(v.get("objective").and_then(Jv::as_f64), Some(12.5));
+        assert_eq!(v.get("test_metric"), Some(&Jv::Null));
+        assert_eq!(
+            v.get("phases").and_then(|p| p.get("draw_gamma")).and_then(Jv::as_f64),
+            Some(0.001)
+        );
+        match v.get("arr") {
+            Some(Jv::Arr(items)) => {
+                assert_eq!(items[1], Jv::Num(-2500.0));
+                assert_eq!(items[4], Jv::Str("x\n".into()));
+            }
+            other => panic!("bad arr: {other:?}"),
+        }
+        assert!(json::parse("{\"a\":1,}").is_err());
+        assert!(json::parse("{\"a\"").is_err());
+        assert!(json::parse("12 34").is_err());
+    }
+
+    #[test]
+    fn sparkline_spans_levels() {
+        let xs: Vec<f64> = (0..8).map(|i| i as f64).collect();
+        let s = sparkline(&xs, 8);
+        assert_eq!(s.chars().count(), 8);
+        assert!(s.starts_with('▁') && s.ends_with('█'));
+        assert_eq!(sparkline(&[5.0; 10], 4).chars().count(), 4);
+        assert_eq!(sparkline(&[], 10), "");
+    }
+
+    #[test]
+    fn report_on_synthetic_trace_matches_reference() {
+        let dir = std::env::temp_dir().join("pemsvm_diag_report_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.jsonl");
+        // a well-mixing pseudo-chain: deterministic LCG noise
+        let mut text = String::new();
+        let mut x = 7u64;
+        let mut xs = Vec::new();
+        for i in 0..64 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let obj = 100.0 + (x >> 40) as f64 / 1e6;
+            xs.push(obj);
+            text.push_str(&format!(
+                "{{\"session\":0,\"iter\":{i},\"objective\":{obj},\"weight_delta\":0.1}}\n"
+            ));
+        }
+        std::fs::write(&path, text).unwrap();
+        let rep = report(&path, 0).unwrap();
+        let want_ess = reference::ess(&xs);
+        assert!(
+            rep.contains(&format!("ess={want_ess:.1}")),
+            "report should carry the reference ESS {want_ess:.1}:\n{rep}"
+        );
+        assert!(rep.contains("Healthy"), "{rep}");
+        // burn-in drops leading iterations from the chain
+        let rep2 = report(&path, 32).unwrap();
+        let want2 = reference::ess(&xs[32..]);
+        assert!(rep2.contains(&format!("ess={want2:.1}")), "{rep2}");
+    }
+
+    #[test]
+    fn stuck_and_exploding_traces_get_flagged() {
+        let dir = std::env::temp_dir().join("pemsvm_diag_report_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let stuck = dir.join("stuck.jsonl");
+        let mut text = String::new();
+        for i in 0..32 {
+            text.push_str(&format!("{{\"session\":0,\"iter\":{i},\"objective\":5.0}}\n"));
+        }
+        std::fs::write(&stuck, text).unwrap();
+        assert!(report(&stuck, 0).unwrap().contains("Stalled"));
+
+        let bad = dir.join("diverged.jsonl");
+        let mut text = String::new();
+        for i in 0..12 {
+            let obj = if i < 10 { "2.0".into() } else { "null".to_string() };
+            text.push_str(&format!("{{\"session\":0,\"iter\":{i},\"objective\":{obj}}}\n"));
+        }
+        std::fs::write(&bad, text).unwrap();
+        assert!(report(&bad, 0).unwrap().contains("Diverged"));
+    }
+
+    #[test]
+    fn embedded_verdict_wins_over_derivation() {
+        let dir = std::env::temp_dir().join("pemsvm_diag_report_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("embedded.jsonl");
+        let mut text = String::new();
+        for i in 0..20 {
+            text.push_str(&format!(
+                "{{\"session\":0,\"iter\":{i},\"objective\":5.0,\"diag\":{{\"ess\":3.5,\
+                 \"tau\":2,\"lag1\":0.9,\"rhat\":1.2,\"mcse\":0.1,\"skew\":1.0,\
+                 \"verdict\":\"mixing-slow\"}}}}\n"
+            ));
+        }
+        std::fs::write(&path, text).unwrap();
+        let rep = report(&path, 0).unwrap();
+        // a constant chain would derive Stalled; the recorded verdict wins
+        assert!(rep.contains("Mixing-Slow"), "{rep}");
+        assert!(rep.contains("recorded in trace"), "{rep}");
+    }
+}

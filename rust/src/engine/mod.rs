@@ -40,7 +40,7 @@ use anyhow::{bail, Result};
 pub use checkpoint::{Checkpoint, CheckpointCfg};
 pub use driver::{BinaryDriver, CsBlockDriver, IterDriver, IterStats, SvrDriver};
 pub use fault::{FaultKind, FaultPlan};
-pub use pool::{FaultStats, Pool, PoolOpts};
+pub use pool::{FaultStats, Pool, PoolOpts, StepTiming};
 
 use crate::backend::{self, MasterBackend, RngState, StepInput};
 use crate::config::{Algo, ModelKind, TaskKind, TrainConfig};
@@ -51,6 +51,7 @@ use crate::metrics::{Metrics, Phase, NPHASES, PHASES};
 use crate::model::Weights;
 use crate::rng::{NormalSource, Pcg64};
 use crate::solver::{KernelModel, PartialStats};
+use crate::telemetry::diag::{ChainDiag, HealthVerdict, IterObs};
 use crate::telemetry::{self, Counter, Histogram, IterSpan, TraceWriter};
 
 /// Per-iteration record (drives Figures 5 and 6).
@@ -117,6 +118,9 @@ pub struct TrainOutput {
     pub history: Vec<IterRecord>,
     /// populated for KRN runs: the dual model for prediction
     pub kernel_model: Option<KernelModel>,
+    /// final convergence-health verdict (DESIGN.md §14) when the
+    /// session ran with `diag_every > 0`; stamped into saved models
+    pub verdict: Option<HealthVerdict>,
 }
 
 /// How a session initializes its weights.
@@ -518,6 +522,22 @@ impl Cluster {
         let mut avg: Option<Vec<f32>> = None;
         let mut avg_count = 0usize;
 
+        // convergence diagnostics (DESIGN.md §14): observer-only — not
+        // part of the checkpoint fingerprint or payload, so resumed
+        // weights stay bit-identical whatever the cadence
+        let mut diag = (cfg.diag_every > 0).then(|| {
+            // drain step timing left over from a previous session on
+            // this cluster so the first skew sample is this session's
+            self.pool.take_step_timing();
+            ChainDiag::new(
+                cfg.algo == Algo::Mc,
+                cfg.burn_in,
+                drv.current().len(),
+                cfg.seed,
+            )
+        });
+        let mut last_verdict = HealthVerdict::Healthy;
+
         let n = self.n;
         let mut stop = StopRule::new(cfg, n);
         let mut start_iter = 0usize;
@@ -634,6 +654,37 @@ impl Cluster {
                 c.add(delta.as_nanos() as u64);
             }
 
+            // diagnostics cadence: iterations at the --diag-every
+            // stride feed the accumulator; step timing accrued since
+            // the last observation folds into the straggler skew
+            let mut diag_span = None;
+            if let Some(d) = diag.as_mut() {
+                if iter % cfg.diag_every == 0 {
+                    let t = self.pool.take_step_timing();
+                    d.observe(&IterObs {
+                        iter,
+                        objective: st.objective,
+                        weights: drv.current(),
+                        weight_delta,
+                        step_max: t.max.as_secs_f64(),
+                        step_mean: t.mean_secs(),
+                    });
+                    let s = d.summary();
+                    if s.verdict != last_verdict {
+                        crate::log_info!(
+                            "diag: verdict {} -> {} at iteration {iter} (ess {:.1}, \
+                             rhat {:.3})",
+                            last_verdict.name(),
+                            s.verdict.name(),
+                            s.ess,
+                            s.rhat
+                        );
+                        last_verdict = s.verdict;
+                    }
+                    diag_span = Some(s);
+                }
+            }
+
             let rec = IterRecord {
                 iter,
                 objective: st.objective,
@@ -652,6 +703,7 @@ impl Cluster {
                     weight_delta: rec.weight_delta,
                     test_metric: rec.test_metric,
                     phase_secs: rec.phase_secs,
+                    diag: diag_span,
                 })?;
             }
             history.push(rec);
@@ -701,6 +753,20 @@ impl Cluster {
         }
         engine_metrics().sessions.inc();
 
+        let verdict = diag.as_mut().map(|d| {
+            let s = d.snapshot();
+            crate::log_info!(
+                "diag: session verdict {} ({} samples, ess {:.1}, rhat {:.3}, \
+                 mcse {:.3e}, skew {:.2})",
+                s.verdict.name(),
+                s.samples,
+                s.objective.ess,
+                s.objective.rhat.max(s.wnorm.rhat).max(s.wproj.rhat),
+                s.objective.mcse,
+                s.skew
+            );
+            s.verdict
+        });
         let weights = drv.snapshot(self.k, avg.as_deref());
         let objective = history.last().map(|h| h.objective).unwrap_or(f64::INFINITY);
         let iterations = history.len();
@@ -711,6 +777,14 @@ impl Cluster {
         metrics.sessions = 1;
         self.sessions += 1;
         self.last = Some(weights.clone());
-        Ok(TrainOutput { weights, objective, iterations, metrics, history, kernel_model: None })
+        Ok(TrainOutput {
+            weights,
+            objective,
+            iterations,
+            metrics,
+            history,
+            kernel_model: None,
+            verdict,
+        })
     }
 }

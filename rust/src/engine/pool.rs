@@ -188,6 +188,37 @@ pub struct Pool {
     fault_stats: FaultStats,
     /// a non-empty fault plan was compiled in: reduces run leader-side
     faulty: bool,
+    /// per-worker step wall-clock accumulated since the last
+    /// [`take_step_timing`](Pool::take_step_timing) (straggler-skew
+    /// diagnostics, DESIGN.md §14)
+    timing: StepTiming,
+}
+
+/// Worker step wall-clock accumulated across step rounds: the slowest
+/// single step, the sum over all (worker, round) steps, and their
+/// count. `max / (sum / n)` is the straggler skew the diagnostics
+/// EWMA tracks. Drained by [`Pool::take_step_timing`]; when nothing
+/// drains it the accumulation is a few scalar adds per round and never
+/// grows.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepTiming {
+    /// slowest single worker step
+    pub max: Duration,
+    /// sum of per-worker step durations
+    pub sum: Duration,
+    /// number of (worker, round) steps folded into `sum`
+    pub n: u64,
+}
+
+impl StepTiming {
+    /// Mean per-worker step duration in seconds (0 when empty).
+    pub fn mean_secs(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum.as_secs_f64() / self.n as f64
+        }
+    }
 }
 
 impl Pool {
@@ -236,6 +267,7 @@ impl Pool {
             step_retries: opts.step_retries,
             fault_stats: FaultStats::default(),
             faulty,
+            timing: StepTiming::default(),
         }
     }
 
@@ -260,6 +292,14 @@ impl Pool {
     /// `worker_retries_total` / `worker_evictions_total` series).
     pub fn fault_counters(&self) -> FaultStats {
         self.fault_stats
+    }
+
+    /// Drain the per-worker step-timing accumulator: returns everything
+    /// folded in since the previous call and resets it. The engine's
+    /// diagnostics cadence calls this once per diagnosed iteration, so
+    /// MLT's per-class collects aggregate naturally.
+    pub fn take_step_timing(&mut self) -> StepTiming {
+        std::mem::take(&mut self.timing)
     }
 
     /// Running degraded: a fault plan is armed or a worker has been
@@ -288,6 +328,7 @@ impl Pool {
             timeout: self.step_timeout,
             retries: self.step_retries,
             fstats: &mut self.fault_stats,
+            timing: &mut self.timing,
         };
         match &mut self.mode {
             Mode::Simulate { workers, faults } => {
@@ -563,6 +604,7 @@ struct StepCtx<'a> {
     timeout: Duration,
     retries: usize,
     fstats: &'a mut FaultStats,
+    timing: &'a mut StepTiming,
 }
 
 impl StepCtx<'_> {
@@ -659,6 +701,8 @@ fn step_all_threads(
         let mut attempts: Vec<usize> = vec![1; p];
         let mut first_err: Option<anyhow::Error> = None;
         let mut max_step = Duration::ZERO;
+        let mut sum_step = Duration::ZERO;
+        let mut n_step = 0u64;
         let mut timeout = ctx.timeout;
         loop {
             let missing = (0..p)
@@ -676,6 +720,8 @@ fn step_all_threads(
                         Ok(s) if s.is_finite() => {
                             slots[wid] = Some(s);
                             max_step = max_step.max(step_time);
+                            sum_step += step_time;
+                            n_step += 1;
                         }
                         Ok(_corrupt) => {
                             // NaN/inf partial: retry, then evict
@@ -746,6 +792,9 @@ fn step_all_threads(
         }
         metrics.add(Phase::LocalStats, max_step);
         pool_metrics().step_nanos.observe_duration(max_step);
+        ctx.timing.max = ctx.timing.max.max(max_step);
+        ctx.timing.sum += sum_step;
+        ctx.timing.n += n_step;
         return Ok((0..p).filter(|&w| ctx.alive[w]).map(|w| slots[w].take().unwrap()).collect());
     }
 }
@@ -766,6 +815,8 @@ fn step_all_simulate(
         let round = *ctx.round;
         let mut out = Vec::with_capacity(workers.len());
         let mut max_step = Duration::ZERO;
+        let mut sum_step = Duration::ZERO;
+        let mut n_step = 0u64;
         for wid in 0..workers.len() {
             if !ctx.alive[wid] {
                 continue;
@@ -803,13 +854,19 @@ fn step_all_simulate(
                     ctx.note_retry();
                     continue;
                 }
-                max_step = max_step.max(t0.elapsed());
+                let step_time = t0.elapsed();
+                max_step = max_step.max(step_time);
+                sum_step += step_time;
+                n_step += 1;
                 out.push(stats);
                 break;
             }
         }
         metrics.add(Phase::LocalStats, max_step);
         pool_metrics().step_nanos.observe_duration(max_step);
+        ctx.timing.max = ctx.timing.max.max(max_step);
+        ctx.timing.sum += sum_step;
+        ctx.timing.n += n_step;
         return Ok(out);
     }
 }

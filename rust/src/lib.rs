@@ -64,6 +64,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod diag_report;
 pub mod engine;
 pub mod linalg;
 pub mod metrics;

@@ -10,6 +10,7 @@
 //! predict <data.svm> <model>  batch scoring via the serve scorer
 //! serve <model...> --port N   TCP serving with micro-batching
 //! eval <data.svm> <model>
+//! diagnose <spans.jsonl>      convergence report from a --trace file
 //! info
 //! ```
 //!
@@ -61,6 +62,7 @@ fn run(argv: Vec<String>) -> Result<()> {
         "predict" => cmd_predict(&args),
         "serve" => cmd_serve(&args),
         "eval" => cmd_eval(&args),
+        "diagnose" => cmd_diagnose(&args),
         "info" => cmd_info(&args),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -82,9 +84,16 @@ USAGE:
                [--topology threads|simulate]
                [--stream-chunk-rows R] [--dims N,K]
                [--trace spans.jsonl] [--metrics-out metrics.prom]
-               [--verbosity 0|1|2]
+               [--verbosity 0|1|2] [--diag-every N]
                [--checkpoint every-N] [--checkpoint-path run.ckpt] [--resume]
                [--step-timeout-ms T] [--step-retries R]
+               [--algo em|mc] [--task cls|svr|mlt] [--model lin|krn]
+               [--burn-in B] [--kernel rbf] [--kernel-sigma S]
+               [--eps-clamp E] [--eps-insensitive E]
+               --options bundles --model/--algo/--task (LIN-EM-CLS);
+               the split flags override individual parts. --burn-in
+               discards the first B MC iterations from the running
+               average (and from the diagnostics chains)
                --checkpoint every-N writes the full session state
                (weights, sampler RNG streams, stopping rule) atomically
                every N iterations to --checkpoint-path (default
@@ -98,6 +107,11 @@ USAGE:
                process telemetry registry after training;
                --verbosity gates diagnostic stderr (0 quiet, 1 default,
                2 debug)
+               --diag-every N feeds the online convergence diagnostics
+               (ESS, split-Rhat, MCSE, health verdict — DESIGN.md §14)
+               every N iterations; with --trace, each observed record
+               carries a `diag` object, and the model header records
+               the final session verdict. 0 (default) disables
                --stream-chunk-rows streams ingestion in R-row chunks:
                no file-sized text buffer or duplicate dataset copy,
                loader buffers bounded at 2R parsed rows, and trained
@@ -119,10 +133,17 @@ USAGE:
                [--max-wait-us U]
                newline-delimited libsvm rows over TCP; --port 0 picks an
                ephemeral port (printed on stdout). `#model <name>`,
-               `#stats` and `#metrics` (Prometheus exposition, ends at
-               `# EOF`) are in-band control lines
+               `#stats`, `#health` (training verdict + live latency
+               p50/p90/p99) and `#metrics` (Prometheus exposition, ends
+               at `# EOF`) are in-band control lines
   pemsvm eval <data.svm> <model> [--task cls|svr|mlt] [--num-classes M]
                [--workers P]
+  pemsvm diagnose <spans.jsonl> [--burn-in B]
+               convergence report from a --trace file: per-session ESS,
+               integrated autocorrelation time, split-Rhat, MCSE,
+               objective sparklines and a health verdict. --burn-in
+               drops the first B iterations of each session (traces do
+               not record the training burn-in)
   pemsvm info [--artifacts-dir artifacts]"
     );
 }
@@ -145,9 +166,8 @@ fn build_config(args: &Args) -> Result<TrainConfig> {
             "max_iters" | "options" | "lambda" | "workers" | "seed" | "tol" | "backend"
             | "reduce" | "burn_in" | "num_classes" | "eps_clamp" | "eps_insensitive"
             | "artifacts_dir" | "verbose" | "kernel" | "kernel_sigma" | "algo" | "task"
-            | "model" | "topology" | "warm_start" | "step_timeout_ms" | "step_retries" => {
-                cfg.set(&k, val)?
-            }
+            | "model" | "topology" | "warm_start" | "step_timeout_ms" | "step_retries"
+            | "diag_every" => cfg.set(&k, val)?,
             other => bail!("unknown flag --{other}"),
         }
     }
@@ -695,6 +715,19 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let out = scorer.score_batch(&model, &ds)?;
     let metric = serve::metric_of(model.meta.task, &ds.labels, &out.scores);
     println!("{} = {metric:.4}", metric_name(model.meta.task));
+    Ok(())
+}
+
+/// `pemsvm diagnose <spans.jsonl>`: offline convergence report over a
+/// `--trace` file (DESIGN.md §14). Estimators are recomputed with the
+/// brute-force reference implementations; embedded per-iteration `diag`
+/// objects (from `--diag-every` runs) are surfaced for cross-checking.
+fn cmd_diagnose(args: &Args) -> Result<()> {
+    let Some(trace_path) = args.positional.first() else {
+        bail!("diagnose: missing <spans.jsonl> (produced by train/sweep --trace)");
+    };
+    let burn_in = args.get_usize("burn-in", 0)?;
+    print!("{}", pemsvm::diag_report::report(Path::new(trace_path), burn_in)?);
     Ok(())
 }
 

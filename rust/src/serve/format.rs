@@ -23,6 +23,7 @@ use crate::data::{libsvm, Dataset, Task};
 use crate::linalg::Mat;
 use crate::model::Weights;
 use crate::solver::KernelModel;
+use crate::telemetry::HealthVerdict;
 
 /// Format version written by [`save`].
 pub const FORMAT_VERSION: u32 = 1;
@@ -39,6 +40,9 @@ pub struct ModelMeta {
     pub lambda: f32,
     /// the paper's option string, e.g. "LIN-EM-CLS"
     pub options: String,
+    /// training convergence verdict (DESIGN.md §14), stamped when the
+    /// run used `--diag-every`; the serve `#health` verb reports it
+    pub verdict: Option<HealthVerdict>,
     /// true when loaded through the pre-v1 `model.txt` read-path (the
     /// old header carries no task, so callers may override it)
     pub legacy: bool,
@@ -95,6 +99,7 @@ impl SavedModel {
             m,
             lambda: cfg.lambda,
             options: cfg.options_string(),
+            verdict: out.verdict,
             legacy: false,
         };
         let body = match out.kernel_model {
@@ -144,6 +149,11 @@ pub fn save(model: &SavedModel, path: &Path) -> Result<()> {
     writeln!(w, "m {}", meta.m)?;
     writeln!(w, "lambda {}", meta.lambda)?;
     writeln!(w, "options {}", meta.options)?;
+    // optional: only runs trained with --diag-every carry a verdict, so
+    // default-trained model files stay byte-identical to pre-diag ones
+    if let Some(v) = meta.verdict {
+        writeln!(w, "verdict {}", v.name())?;
+    }
     match &model.body {
         ModelBody::Linear(Weights::Single(v)) => {
             writeln!(w, "weights single {}", v.len())?;
@@ -263,9 +273,20 @@ pub fn load(path: &Path) -> Result<SavedModel> {
     let m: usize = field("m")?.parse().context("bad m")?;
     let lambda: f32 = field("lambda")?.parse().context("bad lambda")?;
     let options = field("options")?;
-    let meta = ModelMeta { task, k, m, lambda, options, legacy: false };
 
-    let body_line = ls.line("weights/kernel block")?;
+    // the optional `verdict` header line sits between the fixed fields
+    // and the body block
+    let mut body_line = ls.line("weights/kernel block")?;
+    let verdict = match body_line.strip_prefix("verdict ") {
+        Some(rest) => {
+            let v = HealthVerdict::parse(rest.trim())
+                .with_context(|| format!("line {}: bad verdict `{rest}`", ls.lineno))?;
+            body_line = ls.line("weights/kernel block")?;
+            Some(v)
+        }
+        None => None,
+    };
+    let meta = ModelMeta { task, k, m, lambda, options, verdict, legacy: false };
     let parts: Vec<&str> = body_line.split_whitespace().collect();
     let body = match parts.as_slice() {
         ["weights", "single", n] => {
@@ -418,7 +439,15 @@ fn load_legacy(text: &str) -> Result<SavedModel> {
     };
     let task = if m > 1 { TaskKind::Mlt } else { TaskKind::Cls };
     Ok(SavedModel::new(
-        ModelMeta { task, k, m, lambda: f32::NAN, options: String::new(), legacy: true },
+        ModelMeta {
+            task,
+            k,
+            m,
+            lambda: f32::NAN,
+            options: String::new(),
+            verdict: None,
+            legacy: true,
+        },
         ModelBody::Linear(weights),
     ))
 }
@@ -489,6 +518,41 @@ mod tests {
         .unwrap();
         let err = load(&p).unwrap_err().to_string();
         assert!(err.contains("non-finite"), "{err}");
+    }
+
+    #[test]
+    fn verdict_header_roundtrips_and_stays_optional() {
+        let p = tmp("verdict.txt");
+        let meta = ModelMeta {
+            task: TaskKind::Cls,
+            k: 2,
+            m: 1,
+            lambda: 1.0,
+            options: "LIN-MC-CLS".into(),
+            verdict: Some(HealthVerdict::Healthy),
+            legacy: false,
+        };
+        let model = SavedModel::new(meta, ModelBody::Linear(Weights::Single(vec![0.5, -0.25])));
+        save(&model, &p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.contains("\nverdict healthy\n"));
+        let loaded = load(&p).unwrap();
+        assert_eq!(loaded.meta.verdict, Some(HealthVerdict::Healthy));
+
+        // without a verdict the header line is absent entirely
+        let q = tmp("no_verdict.txt");
+        let mut meta2 = loaded.meta.clone();
+        meta2.verdict = None;
+        let model2 =
+            SavedModel::new(meta2, ModelBody::Linear(Weights::Single(vec![0.5, -0.25])));
+        save(&model2, &q).unwrap();
+        let text2 = std::fs::read_to_string(&q).unwrap();
+        assert!(!text2.contains("verdict"));
+        assert_eq!(load(&q).unwrap().meta.verdict, None);
+
+        // a corrupt verdict value is rejected, not ignored
+        std::fs::write(&p, text.replace("verdict healthy", "verdict sideways")).unwrap();
+        assert!(load(&p).unwrap_err().to_string().contains("bad verdict"));
     }
 
     #[test]

@@ -90,6 +90,12 @@ impl ModelStats {
             max_batch: Duration::from_nanos(self.batch_nanos.peak() as u64),
         }
     }
+
+    /// The batch-latency distribution (the `#health` verb derives its
+    /// p50/p90/p99 from this).
+    pub fn latency_snapshot(&self) -> crate::telemetry::HistogramSnapshot {
+        self.latency.snapshot()
+    }
 }
 
 /// A point-in-time read of [`ModelStats`].
@@ -262,6 +268,7 @@ mod tests {
                 m: 1,
                 lambda: 1.0,
                 options: "LIN-EM-CLS".into(),
+                verdict: None,
                 legacy: false,
             },
             ModelBody::Linear(Weights::Single(w)),

@@ -280,7 +280,15 @@ mod tests {
 
     fn linear_model(task: TaskKind, w: Weights, k: usize, m: usize) -> Arc<SavedModel> {
         Arc::new(SavedModel::new(
-            ModelMeta { task, k, m, lambda: 1.0, options: String::new(), legacy: false },
+            ModelMeta {
+                task,
+                k,
+                m,
+                lambda: 1.0,
+                options: String::new(),
+                verdict: None,
+                legacy: false,
+            },
             ModelBody::Linear(w),
         ))
     }

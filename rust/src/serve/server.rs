@@ -13,6 +13,9 @@
 //! * `#metrics` — reply with the full Prometheus text exposition of
 //!   the process telemetry registry (DESIGN.md §12), terminated by a
 //!   `# EOF` line so in-band scrapers know where the block ends.
+//! * `#health` — reply with the current model's training convergence
+//!   verdict (stamped into the model header by `train --diag-every`,
+//!   DESIGN.md §14) plus live scorer-latency percentiles.
 //! * blank lines / other `#...` lines — ignored, no reply.
 //! * a malformed row — replies `error: <why>`, the connection stays up.
 //!
@@ -95,6 +98,9 @@ enum Payload {
     /// the `#metrics` verb: the full exposition, ordered like `#stats`
     /// so the counters cover every row queued before it
     Metrics,
+    /// the `#health` verb: training verdict + latency percentiles,
+    /// ordered like `#stats`
+    Health,
 }
 
 /// One protocol message en route to the dispatcher.
@@ -177,6 +183,21 @@ fn handle_conn(
                     Some(entry) => {
                         let msg =
                             RowMsg { payload: Payload::Stats, entry, reply: reply_tx.clone() };
+                        if row_tx.send(msg).is_err() {
+                            break;
+                        }
+                    }
+                    None => {
+                        server_metrics().protocol_errors.inc();
+                        let _ = reply_tx.send("error: no model selected".into());
+                    }
+                },
+                Some("health") => match entry.clone() {
+                    // ordered behind queued rows, like #stats, so the
+                    // latency percentiles cover them
+                    Some(entry) => {
+                        let msg =
+                            RowMsg { payload: Payload::Health, entry, reply: reply_tx.clone() };
                         if row_tx.send(msg).is_err() {
                             break;
                         }
@@ -276,7 +297,7 @@ fn score_and_reply(scorer: &mut Scorer, rows: Vec<RowMsg>) {
                     Payload::BadRow(e) => e.clone(),
                     // the exposition needs no model; still answerable
                     Payload::Metrics => render_exposition(),
-                    Payload::Row(_) | Payload::Stats => {
+                    Payload::Row(_) | Payload::Stats | Payload::Health => {
                         server_metrics().protocol_errors.inc();
                         format!("error: model `{}` unloaded", entry.name())
                     }
@@ -326,6 +347,21 @@ fn score_and_reply(scorer: &mut Scorer, rows: Vec<RowMsg>) {
                 (Payload::BadRow(e), _) => e.clone(),
                 (Payload::Stats, _) => {
                     format!("stats {}: {}", entry.name(), entry.stats.snapshot().report())
+                }
+                (Payload::Health, _) => {
+                    // training verdict from the model header plus live
+                    // scorer-latency percentiles (bucket upper bounds of
+                    // the batch-latency histogram, DESIGN.md §14)
+                    let verdict = model.meta.verdict.map_or("unknown", |v| v.name());
+                    let lat = entry.stats.latency_snapshot();
+                    format!(
+                        "health {}: verdict={verdict} batches={} p50={}us p90={}us p99={}us",
+                        entry.name(),
+                        lat.count(),
+                        lat.quantile(0.5) / 1_000,
+                        lat.quantile(0.9) / 1_000,
+                        lat.quantile(0.99) / 1_000,
+                    )
                 }
                 // multi-line reply: the per-connection writer sends the
                 // whole block plus the trailing newline in one message

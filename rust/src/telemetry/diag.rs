@@ -1,0 +1,817 @@
+//! Online sampler convergence diagnostics (DESIGN.md §14).
+//!
+//! The paper's central claim is that the data-augmentation Gibbs
+//! sampler *mixes fast* (Figures 5/6); this module is how the repo
+//! measures that claim instead of assuming it. A [`ChainDiag`] is fed
+//! once per (diagnosed) iteration by the engine session loop and
+//! maintains, allocation-light and in O(k) per observation:
+//!
+//! * per-coordinate running mean/variance of the weight trajectory
+//!   (Welford);
+//! * lag-{1,2,4,...,64} autocorrelation of three projected scalar
+//!   summaries — the objective J, `||w||`, and a fixed seeded random
+//!   projection of w — via ring-buffer cross-product accumulators;
+//! * integrated autocorrelation time τ, effective sample size
+//!   ESS = n/τ, and the Monte-Carlo standard error of the running
+//!   average, MCSE = sd/√ESS;
+//! * split-R̂ over the two halves of the post-burn-in chain;
+//! * cross-worker straggler skew (EWMA of max/mean step time) and
+//!   objective plateau/divergence detectors.
+//!
+//! Everything folds into one [`HealthVerdict`]
+//! (Healthy / Mixing-Slow / Stalled / Diverged). The MC sampler gets
+//! the full battery; EM — a deterministic fixed-point iteration, not a
+//! chain — is judged only on plateau/divergence and straggler skew.
+//!
+//! The streaming estimators are *defined* to compute exactly what a
+//! brute-force pass over the stored series computes (same moments, same
+//! lag pairs), so `pemsvm diagnose` — which re-derives everything from
+//! a trace file via the [`reference`] implementations — agrees with the
+//! live values to floating-point rounding (`tests/diagnostics.rs`).
+
+use std::sync::{Arc, OnceLock};
+
+use super::metrics::Gauge;
+
+/// Tracked autocorrelation lags (powers of two up to [`MAX_LAG`]).
+pub const LAGS: [usize; 7] = [1, 2, 4, 8, 16, 32, 64];
+
+/// Largest tracked lag; also the scalar ring-buffer capacity.
+pub const MAX_LAG: usize = 64;
+
+/// Autocorrelation below this is treated as noise: the τ integration
+/// truncates at the first tracked lag under it (Geyer-style cutoff).
+pub const RHO_CUTOFF: f64 = 0.05;
+
+/// The folded health state of a training run, in increasing severity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum HealthVerdict {
+    /// chain moves, mixes acceptably, objective finite and non-exploding
+    Healthy,
+    /// the sampler is moving but autocorrelation/ESS/R̂ or worker skew
+    /// says the iterations buy little independent information
+    MixingSlow,
+    /// objective and weights have been frozen for many iterations while
+    /// the stopping rule has not fired
+    Stalled,
+    /// non-finite objective, or the smoothed objective exploded past
+    /// 10x its best value
+    Diverged,
+}
+
+impl HealthVerdict {
+    /// Stable lower-case name (model header, JSON, gauges).
+    pub fn name(self) -> &'static str {
+        match self {
+            HealthVerdict::Healthy => "healthy",
+            HealthVerdict::MixingSlow => "mixing-slow",
+            HealthVerdict::Stalled => "stalled",
+            HealthVerdict::Diverged => "diverged",
+        }
+    }
+
+    /// Human display name (`pemsvm diagnose` report).
+    pub fn display(self) -> &'static str {
+        match self {
+            HealthVerdict::Healthy => "Healthy",
+            HealthVerdict::MixingSlow => "Mixing-Slow",
+            HealthVerdict::Stalled => "Stalled",
+            HealthVerdict::Diverged => "Diverged",
+        }
+    }
+
+    /// Parse [`name`](HealthVerdict::name) back (model header read-path).
+    pub fn parse(s: &str) -> Option<HealthVerdict> {
+        Some(match s {
+            "healthy" => HealthVerdict::Healthy,
+            "mixing-slow" => HealthVerdict::MixingSlow,
+            "stalled" => HealthVerdict::Stalled,
+            "diverged" => HealthVerdict::Diverged,
+            _ => None?,
+        })
+    }
+
+    /// Numeric severity for the `diag_verdict` gauge (0..=3).
+    pub fn severity(self) -> usize {
+        match self {
+            HealthVerdict::Healthy => 0,
+            HealthVerdict::MixingSlow => 1,
+            HealthVerdict::Stalled => 2,
+            HealthVerdict::Diverged => 3,
+        }
+    }
+}
+
+/// One scalar summary chain with streaming moment + lag accumulators.
+///
+/// Per push: a Welford mean/variance update, one multiply-add per
+/// tracked lag against the ring buffer, and an append to the stored
+/// series (used only for split-R̂, which needs the halves, and for the
+/// diagnose-time cross-check). Nothing else allocates after the first
+/// [`MAX_LAG`] pushes.
+#[derive(Clone, Debug)]
+pub struct ScalarChain {
+    n: usize,
+    mean: f64,
+    m2: f64,
+    ring: [f64; MAX_LAG],
+    /// `Σ x_t * x_{t-L}` over all pairs seen, per tracked lag
+    cross: [f64; LAGS.len()],
+    cross_n: [u64; LAGS.len()],
+    series: Vec<f64>,
+}
+
+impl Default for ScalarChain {
+    fn default() -> Self {
+        ScalarChain {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            ring: [0.0; MAX_LAG],
+            cross: [0.0; LAGS.len()],
+            cross_n: [0; LAGS.len()],
+            series: Vec::new(),
+        }
+    }
+}
+
+impl ScalarChain {
+    pub fn new() -> ScalarChain {
+        ScalarChain::default()
+    }
+
+    /// Observations so far.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// The stored series (for split-R̂ and offline cross-checks).
+    pub fn series(&self) -> &[f64] {
+        &self.series
+    }
+
+    /// Feed one observation.
+    pub fn push(&mut self, x: f64) {
+        // lag pairs first: slot (n - L) % MAX_LAG still holds x_{n-L}
+        // for every tracked L <= MAX_LAG, including L == MAX_LAG (that
+        // is exactly the slot this push will overwrite)
+        for (i, &lag) in LAGS.iter().enumerate() {
+            if self.n >= lag {
+                self.cross[i] += x * self.ring[(self.n - lag) % MAX_LAG];
+                self.cross_n[i] += 1;
+            }
+        }
+        self.ring[self.n % MAX_LAG] = x;
+        self.series.push(x);
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Population variance `m2 / n` (the normalization the ρ̂ estimator
+    /// uses, so streaming and brute-force agree exactly).
+    pub fn variance(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    /// Sample standard deviation (`m2 / (n-1)`).
+    pub fn sd(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            (self.m2 / (self.n - 1) as f64).sqrt()
+        }
+    }
+
+    /// `ρ̂_L = ((1/(n-L)) Σ x_t·x_{t-L} − μ²) / σ²` at tracked lag
+    /// index `i` — identical, term for term, to
+    /// [`reference::autocorr`] over the stored series.
+    pub fn autocorr_at(&self, i: usize) -> f64 {
+        let var = self.variance();
+        if self.cross_n[i] == 0 || var <= 0.0 {
+            return 0.0;
+        }
+        (self.cross[i] / self.cross_n[i] as f64 - self.mean * self.mean) / var
+    }
+
+    /// `(lag, ρ̂)` for every tracked lag the chain is long enough for.
+    pub fn autocorrs(&self) -> Vec<(usize, f64)> {
+        LAGS.iter()
+            .enumerate()
+            .filter(|&(_, &lag)| self.n > lag)
+            .map(|(i, &lag)| (lag, self.autocorr_at(i)))
+            .collect()
+    }
+
+    /// Integrated autocorrelation time τ from the tracked lags.
+    pub fn tau(&self) -> f64 {
+        if self.variance() <= 0.0 {
+            // a frozen chain carries no information at all
+            return self.n.max(1) as f64;
+        }
+        tau_from_lags(&self.autocorrs())
+    }
+
+    /// Effective sample size `n / τ`, clamped to `[1, n]`.
+    pub fn ess(&self) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        if self.variance() <= 0.0 {
+            return 1.0; // stuck chain: one effective sample
+        }
+        (self.n as f64 / self.tau()).clamp(1.0, self.n as f64)
+    }
+
+    /// Monte-Carlo standard error of the running mean: `sd / √ESS`.
+    pub fn mcse(&self) -> f64 {
+        if self.n < 2 {
+            return f64::INFINITY;
+        }
+        self.sd() / self.ess().sqrt()
+    }
+
+    /// Split-R̂ over the two halves of the stored series (brute-force
+    /// by construction: the halves' midpoint moves every push).
+    pub fn split_rhat(&self) -> f64 {
+        reference::split_rhat(&self.series)
+    }
+
+    /// Full derived statistics for this chain.
+    pub fn stats(&self) -> ChainStats {
+        ChainStats {
+            n: self.n,
+            mean: self.mean(),
+            sd: self.sd(),
+            lag1: if self.n > 1 { self.autocorr_at(0) } else { 0.0 },
+            tau: if self.n > 1 { self.tau() } else { 1.0 },
+            ess: self.ess(),
+            mcse: self.mcse(),
+            rhat: self.split_rhat(),
+        }
+    }
+}
+
+/// τ = 2 · ∫₀^cut ρ̃(x) dx with ρ̃ the piecewise-linear interpolation
+/// through `(0, 1)` and the tracked `(lag, ρ̂)` points, truncated at
+/// the first lag whose ρ̂ drops under [`RHO_CUTOFF`] (the trapezoid
+/// into that lag decays to 0). The identity `τ = 1 + 2·Σ_{L≥1} ρ_L ≈
+/// 2·∫₀ ρ̃` absorbs the half-weight of ρ₀ = 1 exactly.
+fn tau_from_lags(rhos: &[(usize, f64)]) -> f64 {
+    let mut s = 0.0f64;
+    let (mut prev_lag, mut prev_rho) = (0usize, 1.0f64);
+    for &(lag, rho) in rhos {
+        let r = if rho.is_finite() { rho } else { 0.0 };
+        if r < RHO_CUTOFF {
+            // decay to zero across this interval, then truncate
+            s += 0.5 * prev_rho * (lag - prev_lag) as f64;
+            break;
+        }
+        s += 0.5 * (prev_rho + r) * (lag - prev_lag) as f64;
+        prev_lag = lag;
+        prev_rho = r;
+    }
+    (2.0 * s).max(1.0)
+}
+
+/// Derived statistics of one scalar summary chain.
+#[derive(Clone, Copy, Debug)]
+pub struct ChainStats {
+    pub n: usize,
+    pub mean: f64,
+    pub sd: f64,
+    pub lag1: f64,
+    pub tau: f64,
+    pub ess: f64,
+    pub mcse: f64,
+    pub rhat: f64,
+}
+
+/// The compact per-iteration diagnostics embedded in trace records
+/// (the span's optional `diag` object): the **objective chain**'s
+/// mixing numbers, the worst split-R̂ across the three summary chains,
+/// the straggler-skew EWMA, and the folded verdict.
+#[derive(Clone, Copy, Debug)]
+pub struct DiagSummary {
+    pub ess: f64,
+    pub tau: f64,
+    pub lag1: f64,
+    pub rhat: f64,
+    pub mcse: f64,
+    pub skew: f64,
+    pub verdict: HealthVerdict,
+}
+
+/// A full point-in-time read of a [`ChainDiag`].
+#[derive(Clone, Debug)]
+pub struct DiagSnapshot {
+    /// iterations observed (including burn-in)
+    pub iters: usize,
+    /// post-burn-in observations feeding the chains
+    pub samples: usize,
+    pub objective: ChainStats,
+    pub wnorm: ChainStats,
+    pub wproj: ChainStats,
+    pub skew: f64,
+    pub verdict: HealthVerdict,
+}
+
+/// What the engine hands the accumulator each diagnosed iteration.
+#[derive(Clone, Copy, Debug)]
+pub struct IterObs<'a> {
+    pub iter: usize,
+    /// primal objective J at the pre-update weights
+    pub objective: f64,
+    /// the driver's current flat weight view
+    pub weights: &'a [f32],
+    /// `||w_t - w_{t-1}||` as already computed by the session loop
+    pub weight_delta: f64,
+    /// slowest worker step since the previous observation, seconds
+    pub step_max: f64,
+    /// mean worker step since the previous observation, seconds
+    pub step_mean: f64,
+}
+
+/// Verdict thresholds (DESIGN.md §14 documents the rationale).
+mod thresholds {
+    /// smoothed J above `DIVERGE_FACTOR ×` its best smoothed value
+    pub const DIVERGE_FACTOR: f64 = 10.0;
+    /// objective moving by less than this relative amount...
+    pub const PLATEAU_REL: f64 = 1e-8;
+    /// ...with a weight delta under `PLATEAU_W_REL × (1 + ||w||)`...
+    pub const PLATEAU_W_REL: f64 = 1e-8;
+    /// ...for this many consecutive observations => Stalled
+    pub const PLATEAU_RUN: usize = 8;
+    /// MC lag-1 autocorrelation above this => Mixing-Slow
+    pub const LAG1_MAX: f64 = 0.98;
+    /// MC ESS under this fraction of the post-burn-in samples
+    pub const ESS_FRACTION: f64 = 0.02;
+    /// split-R̂ above this (checked at snapshot time) => Mixing-Slow
+    pub const RHAT_MAX: f64 = 1.5;
+    /// straggler-skew EWMA (max/mean step time) above this
+    pub const SKEW_MAX: f64 = 4.0;
+    /// minimum post-burn-in samples before mixing criteria apply
+    pub const MIN_SAMPLES: usize = 16;
+    /// minimum observations before the skew EWMA is trusted
+    pub const MIN_SKEW_OBS: usize = 8;
+    /// EWMA smoothing factor for the straggler skew
+    pub const SKEW_ALPHA: f64 = 0.2;
+}
+
+/// `diag_*` gauges in the global telemetry registry, registered once
+/// per process (DESIGN.md §12): ESS and τ/R̂/skew in milli-units
+/// (gauges are integers), plus the verdict severity.
+struct DiagGauges {
+    ess: Arc<Gauge>,
+    rhat_milli: Arc<Gauge>,
+    tau_milli: Arc<Gauge>,
+    skew_milli: Arc<Gauge>,
+    verdict: Arc<Gauge>,
+}
+
+fn diag_gauges() -> &'static DiagGauges {
+    static G: OnceLock<DiagGauges> = OnceLock::new();
+    G.get_or_init(|| {
+        let reg = super::global();
+        DiagGauges {
+            ess: reg.gauge("diag_ess", "Effective sample size of the objective chain."),
+            rhat_milli: reg
+                .gauge("diag_split_rhat_milli", "Worst split R-hat across summary chains, x1000."),
+            tau_milli: reg.gauge(
+                "diag_tau_milli",
+                "Integrated autocorrelation time of the objective chain, x1000.",
+            ),
+            skew_milli: reg
+                .gauge("diag_straggler_skew_milli", "EWMA of max/mean worker step time, x1000."),
+            verdict: reg.gauge(
+                "diag_verdict",
+                "Health verdict severity: 0 healthy, 1 mixing-slow, 2 stalled, 3 diverged.",
+            ),
+        }
+    })
+}
+
+/// The streaming convergence-diagnostics accumulator the engine feeds
+/// once per diagnosed iteration (`--diag-every N`).
+pub struct ChainDiag {
+    mc: bool,
+    burn_in: usize,
+    k: usize,
+    iters: usize,
+    /// per-coordinate Welford over the weight trajectory
+    w_n: usize,
+    w_mean: Vec<f64>,
+    w_m2: Vec<f64>,
+    /// fixed random ±1/√k projection (seeded, so runs are reproducible)
+    proj: Vec<f32>,
+    obj: ScalarChain,
+    wnorm: ScalarChain,
+    wproj: ScalarChain,
+    // plateau / divergence detectors (these see burn-in iterations too)
+    smooth: [f64; 5],
+    smooth_n: usize,
+    best_smooth: f64,
+    last_obj: f64,
+    plateau_run: usize,
+    diverged: bool,
+    // straggler skew
+    skew_ewma: f64,
+    skew_n: usize,
+    /// worst verdict from cheap per-observe signals (R̂ folds in at
+    /// snapshot time; see [`ChainDiag::snapshot`])
+    inline_verdict: HealthVerdict,
+    /// last snapshot-time R̂ (cached for the gauges)
+    last_rhat: f64,
+    export_gauges: bool,
+}
+
+impl ChainDiag {
+    /// `mc` selects the full battery (vs the EM plateau/divergence
+    /// subset), `burn_in` is the iteration the summary chains start at
+    /// (0 for EM), `k` the flat weight length, `seed` fixes the random
+    /// projection.
+    pub fn new(mc: bool, burn_in: usize, k: usize, seed: u64) -> ChainDiag {
+        let mut rng = crate::rng::Pcg64::new_stream(seed, 0xd1a6);
+        let scale = 1.0 / (k.max(1) as f32).sqrt();
+        let proj = (0..k)
+            .map(|_| if rng.next_f32() < 0.5 { -scale } else { scale })
+            .collect();
+        ChainDiag {
+            mc,
+            burn_in: if mc { burn_in } else { 0 },
+            k,
+            iters: 0,
+            w_n: 0,
+            w_mean: vec![0.0; k],
+            w_m2: vec![0.0; k],
+            proj,
+            obj: ScalarChain::new(),
+            wnorm: ScalarChain::new(),
+            wproj: ScalarChain::new(),
+            smooth: [0.0; 5],
+            smooth_n: 0,
+            best_smooth: f64::INFINITY,
+            last_obj: f64::INFINITY,
+            plateau_run: 0,
+            diverged: false,
+            skew_ewma: 1.0,
+            skew_n: 0,
+            inline_verdict: HealthVerdict::Healthy,
+            last_rhat: 1.0,
+            export_gauges: true,
+        }
+    }
+
+    /// A [`new`](ChainDiag::new) that never touches the global metric
+    /// registry (benches measuring the bundle in isolation).
+    pub fn new_detached(mc: bool, burn_in: usize, k: usize, seed: u64) -> ChainDiag {
+        let mut d = ChainDiag::new(mc, burn_in, k, seed);
+        d.export_gauges = false;
+        d
+    }
+
+    /// Observations so far (including burn-in ones).
+    pub fn iters(&self) -> usize {
+        self.iters
+    }
+
+    /// Post-burn-in observations feeding the summary chains.
+    pub fn samples(&self) -> usize {
+        self.obj.len()
+    }
+
+    /// The objective summary chain (read-only).
+    pub fn objective_chain(&self) -> &ScalarChain {
+        &self.obj
+    }
+
+    /// Feed one iteration. O(k) plus a handful of scalar updates; the
+    /// only allocation is the amortized series append inside each
+    /// [`ScalarChain`].
+    pub fn observe(&mut self, obs: &IterObs<'_>) {
+        self.iters += 1;
+
+        // --- divergence: non-finite, or smoothed J exploding ---
+        let finite = obs.objective.is_finite();
+        if !finite {
+            self.diverged = true;
+        } else {
+            self.smooth[self.smooth_n % 5] = obs.objective;
+            self.smooth_n += 1;
+            let m = self.smooth_n.min(5);
+            let j_s = self.smooth[..m].iter().sum::<f64>() / m as f64;
+            if self.smooth_n >= 5 {
+                if j_s > thresholds::DIVERGE_FACTOR * self.best_smooth + 1e-12
+                    && self.best_smooth.is_finite()
+                {
+                    self.diverged = true;
+                }
+                self.best_smooth = self.best_smooth.min(j_s);
+            }
+        }
+
+        // --- plateau: frozen objective AND frozen weights ---
+        let mut wnorm_sq = 0.0f64;
+        for &w in obs.weights {
+            wnorm_sq += w as f64 * w as f64;
+        }
+        let wnorm = wnorm_sq.sqrt();
+        let d_obj = (obs.objective - self.last_obj).abs();
+        let frozen = finite
+            && d_obj <= thresholds::PLATEAU_REL * obs.objective.abs().max(1.0)
+            && obs.weight_delta <= thresholds::PLATEAU_W_REL * (1.0 + wnorm);
+        self.plateau_run = if frozen { self.plateau_run + 1 } else { 0 };
+        self.last_obj = obs.objective;
+
+        // --- straggler skew EWMA ---
+        if obs.step_mean > 0.0 && obs.step_max.is_finite() {
+            let skew = (obs.step_max / obs.step_mean).max(1.0);
+            self.skew_ewma += thresholds::SKEW_ALPHA * (skew - self.skew_ewma);
+            self.skew_n += 1;
+        }
+
+        // --- per-coordinate Welford + summary chains (post-burn-in) ---
+        if obs.iter >= self.burn_in {
+            self.w_n += 1;
+            let inv_n = 1.0 / self.w_n as f64;
+            let mut p = 0.0f64;
+            for (i, &w) in obs.weights.iter().enumerate().take(self.k) {
+                let w = w as f64;
+                let d = w - self.w_mean[i];
+                self.w_mean[i] += d * inv_n;
+                self.w_m2[i] += d * (w - self.w_mean[i]);
+                p += w * self.proj[i] as f64;
+            }
+            if finite {
+                self.obj.push(obs.objective);
+            }
+            self.wnorm.push(wnorm);
+            self.wproj.push(p);
+        }
+
+        self.inline_verdict = self.inline_verdict.max(self.verdict_inline());
+        if self.export_gauges {
+            let g = diag_gauges();
+            g.ess.set(self.obj.ess().round() as usize);
+            g.tau_milli.set((self.obj.tau() * 1e3).round() as usize);
+            g.rhat_milli
+                .set((self.last_rhat.min(1e6) * 1e3).round() as usize);
+            g.skew_milli.set((self.skew_ewma * 1e3).round() as usize);
+            g.verdict.set(self.inline_verdict.severity());
+        }
+    }
+
+    /// The verdict from streaming-only signals (O(1)): everything
+    /// except split-R̂, which needs the chain halves and is folded in
+    /// by [`snapshot`](ChainDiag::snapshot).
+    fn verdict_inline(&self) -> HealthVerdict {
+        if self.diverged {
+            return HealthVerdict::Diverged;
+        }
+        if self.plateau_run >= thresholds::PLATEAU_RUN {
+            return HealthVerdict::Stalled;
+        }
+        if self.skew_n >= thresholds::MIN_SKEW_OBS && self.skew_ewma > thresholds::SKEW_MAX {
+            return HealthVerdict::MixingSlow;
+        }
+        if self.mc && self.samples() >= thresholds::MIN_SAMPLES {
+            let n = self.samples() as f64;
+            let lag1 = self.obj.autocorr_at(0).max(self.wproj.autocorr_at(0));
+            let ess = self.obj.ess().min(self.wproj.ess());
+            if lag1 > thresholds::LAG1_MAX || ess < thresholds::ESS_FRACTION * n {
+                return HealthVerdict::MixingSlow;
+            }
+        }
+        HealthVerdict::Healthy
+    }
+
+    /// Worst per-coordinate weight variance seen so far (a zero here
+    /// with MC means the sampler is not actually sampling).
+    pub fn max_coord_variance(&self) -> f64 {
+        if self.w_n < 2 {
+            return 0.0;
+        }
+        self.w_m2.iter().fold(0.0f64, |a, &m| a.max(m)) / (self.w_n - 1) as f64
+    }
+
+    /// Full snapshot: chain statistics (including the O(n) split-R̂)
+    /// plus the final verdict with the R̂ criterion folded in.
+    pub fn snapshot(&mut self) -> DiagSnapshot {
+        let objective = self.obj.stats();
+        let wnorm = self.wnorm.stats();
+        let wproj = self.wproj.stats();
+        let rhat = objective.rhat.max(wnorm.rhat).max(wproj.rhat);
+        self.last_rhat = if rhat.is_finite() { rhat } else { 1e6 };
+        let mut verdict = self.inline_verdict.max(self.verdict_inline());
+        if verdict == HealthVerdict::Healthy
+            && self.mc
+            && self.samples() >= thresholds::MIN_SAMPLES
+            && rhat > thresholds::RHAT_MAX
+        {
+            verdict = HealthVerdict::MixingSlow;
+        }
+        if self.export_gauges {
+            let g = diag_gauges();
+            g.rhat_milli.set((self.last_rhat.min(1e6) * 1e3).round() as usize);
+            g.verdict.set(verdict.severity());
+        }
+        DiagSnapshot {
+            iters: self.iters,
+            samples: self.samples(),
+            objective,
+            wnorm,
+            wproj,
+            skew: self.skew_ewma,
+            verdict,
+        }
+    }
+
+    /// The compact per-span summary (computes a [`snapshot`](ChainDiag::snapshot)).
+    pub fn summary(&mut self) -> DiagSummary {
+        let s = self.snapshot();
+        DiagSummary {
+            ess: s.objective.ess,
+            tau: s.objective.tau,
+            lag1: s.objective.lag1,
+            rhat: s.objective.rhat.max(s.wnorm.rhat).max(s.wproj.rhat),
+            mcse: s.objective.mcse,
+            skew: s.skew,
+            verdict: s.verdict,
+        }
+    }
+}
+
+/// Brute-force reference implementations over a full series — the
+/// golden standard the streaming accumulators are tested against
+/// (`tests/diagnostics.rs`) and the estimators `pemsvm diagnose` runs
+/// over trace files. Definitions are identical to the streaming ones,
+/// so agreement is exact up to floating-point rounding.
+pub mod reference {
+    use super::{tau_from_lags, LAGS};
+
+    pub fn mean(xs: &[f64]) -> f64 {
+        if xs.is_empty() {
+            return 0.0;
+        }
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+
+    /// Population variance.
+    pub fn variance(xs: &[f64]) -> f64 {
+        let m = mean(xs);
+        if xs.is_empty() {
+            return 0.0;
+        }
+        xs.iter().map(|&x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64
+    }
+
+    /// Sample standard deviation.
+    pub fn sd(xs: &[f64]) -> f64 {
+        if xs.len() < 2 {
+            return 0.0;
+        }
+        let m = mean(xs);
+        (xs.iter().map(|&x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+    }
+
+    /// `ρ̂_L = ((1/(n-L)) Σ_{t=L}^{n-1} x_t·x_{t-L} − μ²) / σ²`, with
+    /// μ and σ² taken over the **full** series.
+    pub fn autocorr(xs: &[f64], lag: usize) -> f64 {
+        let n = xs.len();
+        if n <= lag {
+            return 0.0;
+        }
+        let var = variance(xs);
+        if var <= 0.0 {
+            return 0.0;
+        }
+        let m = mean(xs);
+        let cross =
+            (lag..n).map(|t| xs[t] * xs[t - lag]).sum::<f64>() / (n - lag) as f64;
+        (cross - m * m) / var
+    }
+
+    /// Integrated autocorrelation time over the same tracked
+    /// power-of-two lags and trapezoid rule as the streaming estimator.
+    pub fn tau(xs: &[f64]) -> f64 {
+        if variance(xs) <= 0.0 {
+            return xs.len().max(1) as f64;
+        }
+        let rhos: Vec<(usize, f64)> = LAGS
+            .iter()
+            .filter(|&&lag| xs.len() > lag)
+            .map(|&lag| (lag, autocorr(xs, lag)))
+            .collect();
+        tau_from_lags(&rhos)
+    }
+
+    /// Effective sample size `n / τ`, clamped to `[1, n]`.
+    pub fn ess(xs: &[f64]) -> f64 {
+        if xs.is_empty() {
+            return 0.0;
+        }
+        if variance(xs) <= 0.0 {
+            return 1.0;
+        }
+        (xs.len() as f64 / tau(xs)).clamp(1.0, xs.len() as f64)
+    }
+
+    /// Monte-Carlo standard error `sd / √ESS`.
+    pub fn mcse(xs: &[f64]) -> f64 {
+        if xs.len() < 2 {
+            return f64::INFINITY;
+        }
+        sd(xs) / ess(xs).sqrt()
+    }
+
+    /// Split-R̂ (Gelman et al.): the series is split into two halves of
+    /// `m = n/2` (the first element is dropped when `n` is odd), and
+    /// `R̂ = √(var⁺ / W)` with `W` the mean within-half variance,
+    /// `B/m` the between-half variance of the half means, and
+    /// `var⁺ = (m−1)/m · W + B/m`. A constant series reports 1.
+    pub fn split_rhat(xs: &[f64]) -> f64 {
+        let m = xs.len() / 2;
+        if m < 2 {
+            return 1.0;
+        }
+        let xs = &xs[xs.len() - 2 * m..];
+        let (a, b) = (&xs[..m], &xs[m..]);
+        let (ma, mb) = (mean(a), mean(b));
+        let sample_var = |h: &[f64], mh: f64| {
+            h.iter().map(|&x| (x - mh) * (x - mh)).sum::<f64>() / (m - 1) as f64
+        };
+        let w = 0.5 * (sample_var(a, ma) + sample_var(b, mb));
+        let g = 0.5 * (ma + mb);
+        let b_var = m as f64 * ((ma - g) * (ma - g) + (mb - g) * (mb - g));
+        if w <= 0.0 {
+            return if b_var <= 0.0 { 1.0 } else { f64::INFINITY };
+        }
+        let var_plus = (m - 1) as f64 / m as f64 * w + b_var / m as f64;
+        (var_plus / w).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn verdict_roundtrip_and_order() {
+        for v in [
+            HealthVerdict::Healthy,
+            HealthVerdict::MixingSlow,
+            HealthVerdict::Stalled,
+            HealthVerdict::Diverged,
+        ] {
+            assert_eq!(HealthVerdict::parse(v.name()), Some(v));
+        }
+        assert!(HealthVerdict::Diverged > HealthVerdict::Stalled);
+        assert!(HealthVerdict::Stalled > HealthVerdict::MixingSlow);
+        assert!(HealthVerdict::MixingSlow > HealthVerdict::Healthy);
+        assert_eq!(HealthVerdict::parse("nonsense"), None);
+    }
+
+    #[test]
+    fn streaming_matches_reference_on_short_series() {
+        let xs: Vec<f64> = (0..200).map(|i| ((i * 37 + 11) % 101) as f64 / 101.0).collect();
+        let mut c = ScalarChain::new();
+        for &x in &xs {
+            c.push(x);
+        }
+        assert!((c.mean() - reference::mean(&xs)).abs() < 1e-12);
+        assert!((c.variance() - reference::variance(&xs)).abs() < 1e-12);
+        for (i, &lag) in LAGS.iter().enumerate() {
+            let want = reference::autocorr(&xs, lag);
+            assert!(
+                (c.autocorr_at(i) - want).abs() < 1e-10,
+                "lag {lag}: streaming {} vs reference {want}",
+                c.autocorr_at(i)
+            );
+        }
+        assert!((c.ess() - reference::ess(&xs)).abs() < 1e-8);
+        assert!((c.mcse() - reference::mcse(&xs)).abs() < 1e-10);
+    }
+
+    #[test]
+    fn stuck_chain_is_one_effective_sample() {
+        let mut c = ScalarChain::new();
+        for _ in 0..100 {
+            c.push(4.25);
+        }
+        assert_eq!(c.ess(), 1.0);
+        assert_eq!(c.split_rhat(), 1.0);
+    }
+}

@@ -210,6 +210,27 @@ impl HistogramSnapshot {
         }
         self.sum += other.sum;
     }
+
+    /// Upper bound of the bucket the `q`-quantile observation falls in
+    /// (`q` in `[0, 1]`): the resolution is the bucket width, which is
+    /// plenty for the order-of-magnitude latency reporting `#health`
+    /// does. Returns 0 for an empty histogram and `u64::MAX` when the
+    /// quantile lands in the overflow bucket.
+    pub fn quantile(&self, q: f64) -> u64 {
+        let count = self.count();
+        if count == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return bucket_upper_bound(i).unwrap_or(u64::MAX);
+            }
+        }
+        u64::MAX
+    }
 }
 
 #[cfg(test)]
@@ -238,6 +259,20 @@ mod tests {
         assert_eq!(g.peak(), 8); // set below the peak does not lower it
         g.set(20);
         assert_eq!(g.peak(), 20);
+    }
+
+    #[test]
+    fn quantile_walks_cumulative_buckets() {
+        let h = Histogram::new();
+        assert_eq!(h.snapshot().quantile(0.5), 0);
+        for v in [10u64, 20, 100, 1000, 5000] {
+            h.observe(v);
+        }
+        let s = h.snapshot();
+        // 5 observations: p50 is the 3rd (value 100, bucket bound 127)
+        assert_eq!(s.quantile(0.5), 127);
+        assert_eq!(s.quantile(0.0), 15); // first observation's bucket
+        assert_eq!(s.quantile(1.0), 8191); // last observation's bucket
     }
 
     #[test]

@@ -22,17 +22,23 @@
 //!   data behind the paper's Figures 2/5/6 as a byproduct of any run.
 //! * [`log`] — `log_info!` / `log_debug!` macros gated by the
 //!   process verbosity (`--verbosity`); default output is unchanged.
+//! * [`diag`] — online sampler convergence diagnostics
+//!   (DESIGN.md §14): the streaming [`ChainDiag`] accumulator (ESS,
+//!   split-R̂, MCSE, straggler skew) folding into a [`HealthVerdict`],
+//!   fed per-iteration when `--diag-every N` is set.
 //!
 //! Everything here is `std`-only and allocation-free on the hot paths:
 //! recording into a counter or histogram is a handful of relaxed
 //! atomic operations, and registration (the only locking path) happens
 //! once per metric at first use.
 
+pub mod diag;
 pub mod log;
 pub mod metrics;
 pub mod registry;
 pub mod span;
 
+pub use diag::{ChainDiag, DiagSnapshot, DiagSummary, HealthVerdict, IterObs, ScalarChain};
 pub use metrics::{Counter, Gauge, Histogram, HistogramSnapshot, HIST_BUCKETS};
 pub use registry::{global, label, MetricRegistry};
 pub use span::{IterSpan, TraceWriter};

@@ -15,6 +15,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
+use super::diag::DiagSummary;
 use crate::metrics::{NPHASES, PHASES};
 
 /// Everything one training iteration reports into the trace.
@@ -34,6 +35,9 @@ pub struct IterSpan {
     pub test_metric: Option<f64>,
     /// this iteration's wall-clock per phase, [`PHASES`] order, seconds
     pub phase_secs: [f64; NPHASES],
+    /// convergence diagnostics as of this iteration, when the run was
+    /// started with `--diag-every N` (self-describing traces)
+    pub diag: Option<DiagSummary>,
 }
 
 /// Appends [`IterSpan`]s as JSONL. Records carry a session id so a
@@ -86,11 +90,43 @@ impl TraceWriter {
             }
             line.push_str(&format!("\"{}\":{}", p.name(), json_f64(span.phase_secs[i])));
         }
-        line.push_str("}}\n");
+        line.push('}');
+        if let Some(d) = &span.diag {
+            line.push_str(&format!(
+                ",\"diag\":{{\"ess\":{},\"tau\":{},\"lag1\":{},\"rhat\":{},\"mcse\":{},\
+                 \"skew\":{},\"verdict\":\"{}\"}}",
+                json_f64(d.ess),
+                json_f64(d.tau),
+                json_f64(d.lag1),
+                json_f64(d.rhat),
+                json_f64(d.mcse),
+                json_f64(d.skew),
+                d.verdict.name(),
+            ));
+        }
+        line.push_str("}\n");
         self.out
             .write_all(line.as_bytes())
             .and_then(|()| self.out.flush())
             .with_context(|| format!("writing trace record to {}", self.path.display()))
+    }
+
+    /// Flush any buffered bytes and surface the error. [`Drop`] does
+    /// the same best-effort, so an early-exiting or panicking run still
+    /// leaves a parseable file; call this on the happy path to turn a
+    /// silent flush failure into a hard error.
+    pub fn finish(mut self) -> Result<()> {
+        self.out
+            .flush()
+            .with_context(|| format!("flushing trace file {}", self.path.display()))
+    }
+}
+
+impl Drop for TraceWriter {
+    fn drop(&mut self) {
+        // best-effort: every record() already flushed, so this only
+        // matters if a future write path buffers without flushing
+        let _ = self.out.flush();
     }
 }
 
@@ -124,6 +160,7 @@ mod tests {
             weight_delta: 0.5,
             test_metric: None,
             phase_secs,
+            diag: None,
         })
         .unwrap();
         tw.set_session(1);
@@ -135,6 +172,7 @@ mod tests {
             weight_delta: 0.0,
             test_metric: Some(0.75),
             phase_secs: [0.0; NPHASES],
+            diag: None,
         })
         .unwrap();
         drop(tw);
@@ -152,6 +190,76 @@ mod tests {
             let open = l.matches('{').count();
             assert_eq!(open, l.matches('}').count());
             assert_eq!(open, 2); // the record object + its phases object
+        }
+    }
+
+    #[test]
+    fn diag_object_is_embedded_when_present() {
+        use crate::telemetry::diag::{DiagSummary, HealthVerdict};
+        let dir = std::env::temp_dir().join("pemsvm_telemetry_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace_diag.jsonl");
+        let mut tw = TraceWriter::create(&path).unwrap();
+        tw.record(&IterSpan {
+            iter: 3,
+            objective: 1.0,
+            train_loss: 1.0,
+            train_err: 0.0,
+            weight_delta: 0.1,
+            test_metric: None,
+            phase_secs: [0.0; NPHASES],
+            diag: Some(DiagSummary {
+                ess: 12.5,
+                tau: 2.0,
+                lag1: 0.25,
+                rhat: 1.01,
+                mcse: 0.125,
+                skew: 1.5,
+                verdict: HealthVerdict::Healthy,
+            }),
+        })
+        .unwrap();
+        tw.finish().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let line = text.lines().next().unwrap();
+        assert!(line.contains(
+            "\"diag\":{\"ess\":12.5,\"tau\":2,\"lag1\":0.25,\"rhat\":1.01,\
+             \"mcse\":0.125,\"skew\":1.5,\"verdict\":\"healthy\"}"
+        ));
+        let open = line.matches('{').count();
+        assert_eq!(open, line.matches('}').count());
+        assert_eq!(open, 3); // record + phases + diag objects
+    }
+
+    #[test]
+    fn dropped_writer_leaves_a_parseable_file() {
+        let dir = std::env::temp_dir().join("pemsvm_telemetry_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace_dropped.jsonl");
+        {
+            let mut tw = TraceWriter::create(&path).unwrap();
+            for i in 0..5 {
+                tw.record(&IterSpan {
+                    iter: i,
+                    objective: i as f64,
+                    train_loss: 0.0,
+                    train_err: 0.0,
+                    weight_delta: 0.0,
+                    test_metric: None,
+                    phase_secs: [0.0; NPHASES],
+                    diag: None,
+                })
+                .unwrap();
+            }
+            // dropped without finish(): simulates an early bail-out
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.ends_with('\n'), "last record must be newline-terminated");
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 5);
+        for l in &lines {
+            assert!(l.starts_with('{') && l.ends_with('}'));
+            assert_eq!(l.matches('{').count(), l.matches('}').count());
         }
     }
 }

@@ -1,0 +1,244 @@
+//! Golden tests for the convergence diagnostics (DESIGN.md §14):
+//! streaming estimators vs the brute-force [`reference`] pass on
+//! chains with known behavior (AR(1), iid, stuck, two-regime), the
+//! [`ChainDiag`] verdict logic end to end, and the engine wiring
+//! (`diag_every` producing a session verdict).
+
+use pemsvm::rng::Pcg64;
+use pemsvm::telemetry::diag::{reference, LAGS};
+use pemsvm::telemetry::{ChainDiag, HealthVerdict, IterObs, ScalarChain};
+
+/// Approximately-normal noise (Irwin–Hall of 4 uniforms, centered).
+fn noise(g: &mut Pcg64) -> f64 {
+    (0..4).map(|_| g.next_f32() as f64).sum::<f64>() - 2.0
+}
+
+/// A seeded AR(1) chain `x_{t+1} = phi * x_t + e_t`.
+fn ar1(phi: f64, n: usize, seed: u64) -> Vec<f64> {
+    let mut g = Pcg64::new(seed);
+    let mut x = 0.0f64;
+    (0..n)
+        .map(|_| {
+            x = phi * x + noise(&mut g);
+            x
+        })
+        .collect()
+}
+
+/// Push a series through a fresh [`ScalarChain`].
+fn chain_of(xs: &[f64]) -> ScalarChain {
+    let mut c = ScalarChain::new();
+    for &x in xs {
+        c.push(x);
+    }
+    c
+}
+
+#[test]
+fn streaming_equals_brute_force_on_ar1_chains() {
+    for (phi, seed) in [(0.9, 11u64), (0.5, 12), (0.0, 13)] {
+        let xs = ar1(phi, 2_000, seed);
+        let c = chain_of(&xs);
+        assert!((c.mean() - reference::mean(&xs)).abs() < 1e-9, "phi={phi}");
+        assert!((c.variance() - reference::variance(&xs)).abs() < 1e-9, "phi={phi}");
+        for (i, &lag) in LAGS.iter().enumerate() {
+            let want = reference::autocorr(&xs, lag);
+            assert!(
+                (c.autocorr_at(i) - want).abs() < 1e-9,
+                "phi={phi} lag={lag}: streaming {} vs reference {want}",
+                c.autocorr_at(i)
+            );
+        }
+        assert!((c.tau() - reference::tau(&xs)).abs() < 1e-9, "phi={phi}");
+        assert!((c.ess() - reference::ess(&xs)).abs() < 1e-6, "phi={phi}");
+        assert!((c.mcse() - reference::mcse(&xs)).abs() < 1e-9, "phi={phi}");
+        assert!((c.split_rhat() - reference::split_rhat(&xs)).abs() < 1e-12, "phi={phi}");
+    }
+}
+
+#[test]
+fn ar1_ess_lands_in_the_theoretical_band() {
+    // ESS/n -> (1-phi)/(1+phi) for AR(1); the truncated power-of-two
+    // trapezoid is an approximation, so assert a generous band around
+    // the theoretical value rather than a point.
+    let n = 4_000;
+    for (phi, lo, hi) in [(0.9f64, 0.02, 0.12), (0.5, 0.15, 0.55)] {
+        let xs = ar1(phi, n, 21);
+        let frac = reference::ess(&xs) / n as f64;
+        let theory = (1.0 - phi) / (1.0 + phi);
+        assert!(
+            frac > lo && frac < hi,
+            "phi={phi}: ESS fraction {frac:.4} outside [{lo}, {hi}] (theory {theory:.4})"
+        );
+    }
+}
+
+#[test]
+fn iid_chain_has_near_full_ess_and_unit_rhat() {
+    let xs = ar1(0.0, 3_000, 31); // pure noise
+    let n = xs.len() as f64;
+    let ess = reference::ess(&xs);
+    assert!(ess > 0.5 * n, "iid ESS {ess:.0} should be close to n={n}");
+    let rhat = reference::split_rhat(&xs);
+    assert!((rhat - 1.0).abs() < 0.05, "iid split-rhat {rhat:.4} should be ~1");
+    // MCSE is sd/sqrt(ESS) by definition
+    let want = reference::sd(&xs) / ess.sqrt();
+    assert!((reference::mcse(&xs) - want).abs() < 1e-12);
+}
+
+#[test]
+fn stuck_chain_is_one_effective_sample() {
+    let xs = vec![3.75f64; 500];
+    assert_eq!(reference::ess(&xs), 1.0);
+    assert_eq!(reference::tau(&xs), 500.0);
+    assert_eq!(reference::split_rhat(&xs), 1.0);
+    let c = chain_of(&xs);
+    assert_eq!(c.ess(), 1.0);
+}
+
+#[test]
+fn two_regime_chain_fails_split_rhat() {
+    // first half near 0, second half near 10: the halves disagree, so
+    // split-R-hat blows well past the 1.5 threshold
+    let mut g = Pcg64::new(41);
+    let xs: Vec<f64> = (0..400)
+        .map(|i| if i < 200 { 0.0 } else { 10.0 } + 0.1 * noise(&mut g))
+        .collect();
+    let rhat = reference::split_rhat(&xs);
+    assert!(rhat > 1.5, "two-regime split-rhat {rhat:.3} should exceed 1.5");
+    let c = chain_of(&xs);
+    assert!((c.split_rhat() - rhat).abs() < 1e-12);
+}
+
+/// Feed a [`ChainDiag`] `n` synthetic iterations through a closure
+/// producing `(objective, weights, weight_delta, step_max, step_mean)`.
+fn drive(
+    diag: &mut ChainDiag,
+    n: usize,
+    mut f: impl FnMut(usize) -> (f64, Vec<f32>, f64, f64, f64),
+) {
+    for i in 0..n {
+        let (objective, weights, weight_delta, step_max, step_mean) = f(i);
+        diag.observe(&IterObs {
+            iter: i,
+            objective,
+            weights: &weights,
+            weight_delta,
+            step_max,
+            step_mean,
+        });
+    }
+}
+
+#[test]
+fn well_mixed_mc_run_is_healthy() {
+    let mut g = Pcg64::new(51);
+    let mut diag = ChainDiag::new_detached(true, 4, 8, 7);
+    drive(&mut diag, 100, |_| {
+        let w: Vec<f32> = (0..8).map(|_| g.next_f32() - 0.5).collect();
+        (100.0 + noise(&mut g), w, 0.3, 1.1e-3, 1.0e-3)
+    });
+    let s = diag.snapshot();
+    assert_eq!(s.verdict, HealthVerdict::Healthy, "snapshot: {s:?}");
+    assert_eq!(s.iters, 100);
+    assert_eq!(s.samples, 96, "burn_in=4 observations drop out of the chains");
+    assert!(s.objective.ess > 16.0, "iid-ish objective should mix: {:?}", s.objective);
+    assert!(s.objective.rhat < 1.5);
+    assert!(diag.max_coord_variance() > 0.0, "the sampler is actually moving");
+}
+
+#[test]
+fn exploding_objective_is_diverged_and_sticky() {
+    let mut diag = ChainDiag::new_detached(true, 0, 4, 7);
+    // settle near 1.0, then explode past 10x the best smoothed J
+    drive(&mut diag, 40, |i| {
+        let j = if i < 20 { 1.0 + 0.01 * i as f64 } else { 1e6 };
+        (j, vec![0.1, 0.2, 0.3, 0.4], 0.1, 1e-3, 1e-3)
+    });
+    assert_eq!(diag.summary().verdict, HealthVerdict::Diverged);
+    // sticky: recovering afterwards does not clear the verdict
+    drive(&mut diag, 30, |_| (1.0, vec![0.1, 0.2, 0.3, 0.4], 0.1, 1e-3, 1e-3));
+    assert_eq!(diag.summary().verdict, HealthVerdict::Diverged);
+}
+
+#[test]
+fn non_finite_objective_is_diverged() {
+    let mut diag = ChainDiag::new_detached(true, 0, 2, 7);
+    drive(&mut diag, 3, |i| {
+        let j = if i == 2 { f64::NAN } else { 5.0 };
+        (j, vec![0.1, 0.2], 0.1, 1e-3, 1e-3)
+    });
+    assert_eq!(diag.summary().verdict, HealthVerdict::Diverged);
+}
+
+#[test]
+fn frozen_em_run_is_stalled() {
+    // EM battery (mc=false): identical objective and weights for many
+    // iterations with the stopping rule not firing => Stalled
+    let mut diag = ChainDiag::new_detached(false, 0, 4, 7);
+    drive(&mut diag, 12, |_| (42.0, vec![1.0, 2.0, 3.0, 4.0], 0.0, 1e-3, 1e-3));
+    assert_eq!(diag.summary().verdict, HealthVerdict::Stalled);
+}
+
+#[test]
+fn em_battery_skips_mixing_criteria() {
+    // a slowly-drifting EM objective has lag-1 autocorrelation ~1, but
+    // EM is a deterministic fixed point iteration, not a chain — the
+    // mixing thresholds must not apply
+    let mut diag = ChainDiag::new_detached(false, 0, 4, 7);
+    drive(&mut diag, 100, |i| {
+        (1000.0 - i as f64, vec![0.1 * i as f32, 1.0, 1.0, 1.0], 0.5, 1e-3, 1e-3)
+    });
+    assert_eq!(diag.summary().verdict, HealthVerdict::Healthy);
+}
+
+#[test]
+fn high_autocorrelation_mc_chain_is_mixing_slow() {
+    // the same drifting objective under the MC battery: lag-1 of a
+    // 200-long ramp is ~0.99 > 0.98, and ESS collapses
+    let mut diag = ChainDiag::new_detached(true, 0, 4, 7);
+    drive(&mut diag, 200, |i| {
+        (1000.0 - i as f64, vec![0.1 * i as f32, 1.0, 1.0, 1.0], 0.5, 1e-3, 1e-3)
+    });
+    assert_eq!(diag.summary().verdict, HealthVerdict::MixingSlow);
+}
+
+#[test]
+fn straggler_skew_flags_mixing_slow() {
+    let mut g = Pcg64::new(61);
+    let mut diag = ChainDiag::new_detached(false, 0, 4, 7);
+    // healthy objective, but one worker is 10x slower than the mean
+    drive(&mut diag, 20, |_| {
+        let w: Vec<f32> = (0..4).map(|_| g.next_f32()).collect();
+        (50.0 + noise(&mut g), w, 0.3, 10.0e-3, 1.0e-3)
+    });
+    assert_eq!(diag.summary().verdict, HealthVerdict::MixingSlow);
+}
+
+#[test]
+fn engine_session_produces_a_verdict_only_when_asked() {
+    use pemsvm::config::TrainConfig;
+    use pemsvm::data::synth;
+
+    let ds = synth::alpha_like(400, 16, 0);
+    let mut cfg = TrainConfig::default().with_options("LIN-MC-CLS").unwrap();
+    cfg.workers = 2;
+    cfg.max_iters = 40;
+    cfg.burn_in = 5;
+    cfg.seed = 3;
+
+    // default: diagnostics off, no verdict, output unchanged
+    let out = pemsvm::coordinator::train(&ds, &cfg).unwrap();
+    assert!(out.verdict.is_none());
+
+    // --diag-every 1: a session verdict appears, weights unchanged
+    let mut dcfg = cfg.clone();
+    dcfg.diag_every = 1;
+    let dout = pemsvm::coordinator::train(&ds, &dcfg).unwrap();
+    assert!(dout.verdict.is_some());
+    assert_eq!(
+        out.weights.single(),
+        dout.weights.single(),
+        "diagnostics are observer-only: the trained weights must be bit-identical"
+    );
+}

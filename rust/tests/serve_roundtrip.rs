@@ -23,7 +23,15 @@ fn tmp(name: &str) -> PathBuf {
 
 fn linear_model(task: TaskKind, body: Weights, k: usize, m: usize) -> SavedModel {
     SavedModel::new(
-        ModelMeta { task, k, m, lambda: 0.5, options: "LIN-EM-CLS".into(), legacy: false },
+        ModelMeta {
+            task,
+            k,
+            m,
+            lambda: 0.5,
+            options: "LIN-EM-CLS".into(),
+            verdict: None,
+            legacy: false,
+        },
         ModelBody::Linear(body),
     )
 }
