@@ -1,0 +1,129 @@
+//! Distributed communication overhead (DESIGN.md §15): the same
+//! 2-worker training loop through the in-process threaded pool vs over
+//! loopback TCP to `pemsvm worker` daemons, at K = 128 and K = 1024.
+//!
+//! Reported per iteration: total wall-clock, the broadcast + reduce
+//! phase times, and the wire bytes moved (from the
+//! `net_bytes_{tx,rx}_total` counters — both endpoints run in this
+//! process and share the telemetry registry, so the deltas cover both
+//! directions of the conversation). The one-time dataset ship is
+//! reported separately from the steady-state per-iteration traffic.
+//!
+//! `--quick` is the CI smoke preset; a `BENCH_net.json` snapshot lands
+//! at the repo root via [`benchutil::write_bench_json`].
+
+use std::net::TcpListener;
+
+use pemsvm::benchutil::{header, quick, scaled, time, write_bench_json};
+use pemsvm::config::{Topology, TrainConfig};
+use pemsvm::data::{synth, Dataset};
+use pemsvm::engine::{Cluster, WarmStart};
+use pemsvm::metrics::Phase;
+use pemsvm::net::net_metrics;
+
+fn spawn_workers(n: usize) -> Vec<String> {
+    let mut hosts = Vec::new();
+    for _ in 0..n {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        hosts.push(listener.local_addr().unwrap().to_string());
+        std::thread::spawn(move || {
+            let _ = pemsvm::net::worker::run(listener, false);
+        });
+    }
+    hosts
+}
+
+struct Point {
+    k: usize,
+    iters: usize,
+    /// (wall, broadcast, reduce) seconds per iteration
+    threads: (f64, f64, f64),
+    remote: (f64, f64, f64),
+    /// one-time dataset ship, wire bytes (both directions)
+    ship_bytes: u64,
+    /// steady-state wire bytes per iteration (both directions)
+    iter_bytes: f64,
+}
+
+fn session(ds: &Dataset, cfg: &TrainConfig) -> (f64, f64, f64) {
+    let mut cl = Cluster::new(ds, cfg).unwrap();
+    let (wall, out) = time(|| cl.run_session(cfg, None, WarmStart::Cold).unwrap());
+    let per = |p: Phase| out.metrics.total(p).as_secs_f64() / cfg.max_iters as f64;
+    (wall / cfg.max_iters as f64, per(Phase::Broadcast), per(Phase::Reduce))
+}
+
+fn bench_k(k: usize, iters: usize) -> Point {
+    // N is deliberately modest: the point is the communication term,
+    // which is O(K^2) per round and independent of N
+    let ds = synth::alpha_like(scaled(3000, 300), k, 0);
+    let mut cfg = TrainConfig::default().with_options("LIN-EM-CLS").unwrap();
+    cfg.workers = 2;
+    cfg.max_iters = iters;
+    cfg.tol = -1.0;
+
+    let threads = session(&ds, &cfg);
+
+    let m = net_metrics();
+    let wire = |b0: u64| (m.bytes_tx.get() + m.bytes_rx.get()) - b0;
+    let mut rcfg = cfg.clone();
+    rcfg.topology = Topology::Remote(spawn_workers(cfg.workers));
+    let b0 = m.bytes_tx.get() + m.bytes_rx.get();
+    // Cluster::new connects, configures, and ships the full dataset
+    let mut cl = Cluster::new(&ds, &rcfg).unwrap();
+    let ship_bytes = wire(b0);
+    let b1 = b0 + ship_bytes;
+    let (rwall, out) = time(|| cl.run_session(&rcfg, None, WarmStart::Cold).unwrap());
+    let iter_bytes = wire(b1) as f64 / iters as f64;
+    let per = |p: Phase| out.metrics.total(p).as_secs_f64() / iters as f64;
+    let remote = (rwall / iters as f64, per(Phase::Broadcast), per(Phase::Reduce));
+    drop(cl);
+
+    Point { k, iters, threads, remote, ship_bytes, iter_bytes }
+}
+
+fn main() {
+    header("net", "distributed comm overhead: loopback TCP daemons vs in-process threads (P=2)");
+    let iters = if quick() { 3 } else { 6 };
+    println!(
+        "   {:>6} {:>13} {:>13} {:>13} {:>13} {:>12} {:>12}",
+        "K", "thr wall/it", "net wall/it", "bcast/it", "reduce/it", "bytes/it", "ship bytes"
+    );
+    let mut points = Vec::new();
+    for &k in &[128usize, 1024] {
+        let p = bench_k(k, iters);
+        println!(
+            "   {:>6} {:>12.4}s {:>12.4}s {:>12.4}s {:>12.4}s {:>12.0} {:>12}",
+            p.k, p.threads.0, p.remote.0, p.remote.1, p.remote.2, p.iter_bytes, p.ship_bytes
+        );
+        println!(
+            "   {:>6} {:>12} overhead {:.2}x wall  (threads bcast/it {:.4}s reduce/it {:.4}s)",
+            "",
+            "",
+            p.remote.0 / p.threads.0.max(1e-12),
+            p.threads.1,
+            p.threads.2
+        );
+        points.push(p);
+    }
+
+    let rows: Vec<String> = points
+        .iter()
+        .map(|p| {
+            format!(
+                "{{\"k\": {}, \"iters\": {}, \"threads_wall_per_iter\": {:.6}, \
+                 \"remote_wall_per_iter\": {:.6}, \"remote_broadcast_per_iter\": {:.6}, \
+                 \"remote_reduce_per_iter\": {:.6}, \"wire_bytes_per_iter\": {:.0}, \
+                 \"ship_bytes\": {}}}",
+                p.k, p.iters, p.threads.0, p.remote.0, p.remote.1, p.remote.2, p.iter_bytes,
+                p.ship_bytes
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"net_overhead\",\n  \"scale\": {},\n  \"workers\": 2,\n  \
+         \"points\": [\n    {}\n  ]\n}}\n",
+        pemsvm::benchutil::scale(),
+        rows.join(",\n    ")
+    );
+    write_bench_json("net", &json);
+}

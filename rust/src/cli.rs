@@ -82,6 +82,161 @@ impl Args {
     }
 }
 
+/// Every dispatched subcommand, in `main.rs` dispatch order. The usage
+/// test below holds [`USAGE`] to this list, so adding a subcommand
+/// without documenting it fails `cargo test`.
+pub const SUBCOMMANDS: &[&str] = &[
+    "train", "sweep", "datagen", "predict", "serve", "worker", "eval", "diagnose", "info", "help",
+];
+
+/// Flags `build_config` forwards to
+/// [`TrainConfig::set`](crate::config::TrainConfig::set), underscored
+/// the way `set` expects its keys.
+pub const FORWARDED_FLAGS: &[&str] = &[
+    "algo",
+    "artifacts_dir",
+    "backend",
+    "burn_in",
+    "diag_every",
+    "eps_clamp",
+    "eps_insensitive",
+    "hosts",
+    "kernel",
+    "kernel_sigma",
+    "lambda",
+    "max_iters",
+    "model",
+    "num_classes",
+    "options",
+    "reduce",
+    "seed",
+    "step_retries",
+    "step_timeout_ms",
+    "task",
+    "tol",
+    "topology",
+    "verbose",
+    "warm_start",
+    "workers",
+];
+
+/// Flags the train/sweep front-end interprets itself rather than
+/// forwarding to `TrainConfig` (underscored like [`FORWARDED_FLAGS`],
+/// so `build_config` can use one membership test for both).
+pub const LOCAL_FLAGS: &[&str] = &[
+    "checkpoint",
+    "checkpoint_path",
+    "config",
+    "dims",
+    "lambdas",
+    "metrics_out",
+    "model_out",
+    "resume",
+    "stream_chunk_rows",
+    "test",
+    "trace",
+    "verbosity",
+];
+
+/// Subcommand-local flags that never reach `TrainConfig` (datagen,
+/// predict, serve, worker extras), kebab-case as typed.
+pub const EXTRA_FLAGS: &[&str] =
+    &["dataset", "k", "listen", "m", "max-batch", "max-wait-us", "n", "once", "out", "port"];
+
+/// The `pemsvm help` text. Kept here, next to the flag tables above,
+/// with a test asserting every registered subcommand and flag appears —
+/// usage text drifts otherwise (it did: `--kernel` advertised an `rbf`
+/// value the parser never accepted).
+pub const USAGE: &str = "\
+pemsvm — Fast Parallel SVM using Data Augmentation (Perkins et al. 2015)
+
+USAGE:
+  pemsvm train <data.svm> [--options LIN-EM-CLS] [--workers P] [--lambda L]
+               [--backend native|xla] [--reduce flat|tree] [--max-iters I]
+               [--tol T] [--seed S] [--num-classes M] [--model-out model.txt]
+               [--config file.toml] [--test test.svm] [--verbose]
+               [--topology threads|simulate] [--hosts h1:p,h2:p]
+               [--stream-chunk-rows R] [--dims N,K]
+               [--trace spans.jsonl] [--metrics-out metrics.prom]
+               [--verbosity 0|1|2] [--diag-every N]
+               [--checkpoint every-N] [--checkpoint-path run.ckpt] [--resume]
+               [--step-timeout-ms T] [--step-retries R]
+               [--algo em|mc] [--task cls|svr|mlt] [--model lin|krn]
+               [--burn-in B] [--kernel gaussian|linear] [--kernel-sigma S]
+               [--eps-clamp E] [--eps-insensitive E]
+               [--artifacts-dir artifacts]
+               --options bundles --model/--algo/--task (LIN-EM-CLS);
+               the split flags override individual parts. --burn-in
+               discards the first B MC iterations from the running
+               average (and from the diagnostics chains)
+               --hosts a:port,b:port trains over TCP against that many
+               `pemsvm worker` daemons (one host:port per worker,
+               DESIGN.md §15) — bit-identical to --topology threads;
+               --step-timeout-ms doubles as the socket read timeout, and
+               a dead connection follows the same retry→evict path as a
+               local straggler
+               --checkpoint every-N writes the full session state
+               (weights, sampler RNG streams, stopping rule) atomically
+               every N iterations to --checkpoint-path (default
+               <model-out>.ckpt); --resume continues a killed run from
+               it **bit-identically**. --step-timeout-ms/--step-retries
+               bound the per-round wait on a worker before it is retried
+               and then evicted (its rows re-shard onto survivors)
+               --trace writes one JSON line per training iteration
+               (phase timings, objective, weight-delta norm);
+               --metrics-out dumps the Prometheus exposition of the
+               process telemetry registry after training;
+               --verbosity gates diagnostic stderr (0 quiet, 1 default,
+               2 debug)
+               --diag-every N feeds the online convergence diagnostics
+               (ESS, split-Rhat, MCSE, health verdict — DESIGN.md §14)
+               every N iterations; with --trace, each observed record
+               carries a `diag` object, and the model header records
+               the final session verdict. 0 (default) disables
+               --stream-chunk-rows streams ingestion in R-row chunks:
+               no file-sized text buffer or duplicate dataset copy,
+               loader buffers bounded at 2R parsed rows, and trained
+               weights bit-identical to the eager path. --dims declares
+               rows,features up front, skipping the counting pass for
+               CLS/SVR (MLT still scans once to detect 0/1-based class
+               ids). LIN models, native backend
+               --artifacts-dir points the xla backend at its compiled
+               artifact directory (default `artifacts`)
+  pemsvm sweep <data.svm> [--lambdas 10,1,0.1,0.01] [--warm-start]
+               [--test test.svm] [--stream-chunk-rows R] [--dims N,K]
+               [--trace spans.jsonl] [--metrics-out metrics.prom]
+               [train flags...]
+               --trace tags each lambda's records with its session index
+  pemsvm datagen <out.svm> --dataset alpha|dna|year|mnist|news20
+               [--n N] [--k K] [--m M] [--seed S]
+  pemsvm predict <data.svm> <model> [--workers P] [--out preds.txt]
+               predictions one per line (stdout unless --out); `#` lines
+               carry the metric and throughput
+  pemsvm serve <model...> [--port N] [--workers P] [--max-batch B]
+               [--max-wait-us U]
+               newline-delimited libsvm rows over TCP; --port 0 picks an
+               ephemeral port (printed on stdout). `#model <name>`,
+               `#stats`, `#health` (training verdict + live latency
+               p50/p90/p99) and `#metrics` (Prometheus exposition, ends
+               at `# EOF`) are in-band control lines
+  pemsvm worker --listen host:port [--once]
+               host one training worker for a --hosts coordinator: the
+               daemon receives its shard and config over the wire
+               protocol, executes solver steps remotely, and serves one
+               coordinator session at a time. --listen host:0 picks an
+               ephemeral port (printed as `# worker listening on ...`);
+               --once exits after the first session ends (tests, CI)
+  pemsvm eval <data.svm> <model> [--task cls|svr|mlt] [--num-classes M]
+               [--workers P]
+  pemsvm diagnose <spans.jsonl> [--burn-in B]
+               convergence report from a --trace file: per-session ESS,
+               integrated autocorrelation time, split-Rhat, MCSE,
+               objective sparklines and a health verdict. --burn-in
+               drops the first B iterations of each session (traces do
+               not record the training burn-in)
+  pemsvm info [--artifacts-dir artifacts]
+  pemsvm help";
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -117,5 +272,31 @@ mod tests {
         let a = parse("train --lambda -0.5");
         // "-0.5" doesn't start with -- so it's consumed as the value
         assert_eq!(a.get("lambda"), Some("-0.5"));
+    }
+
+    /// The drift guard: every registered subcommand and every flag the
+    /// binary accepts must appear in the help text.
+    #[test]
+    fn usage_lists_every_subcommand_and_flag() {
+        for sub in SUBCOMMANDS {
+            assert!(
+                USAGE.contains(&format!("pemsvm {sub}")),
+                "usage drift: subcommand `{sub}` missing from USAGE"
+            );
+        }
+        for key in FORWARDED_FLAGS.iter().chain(LOCAL_FLAGS) {
+            let flag = format!("--{}", key.replace('_', "-"));
+            assert!(USAGE.contains(&flag), "usage drift: {flag} missing from USAGE");
+        }
+        for key in EXTRA_FLAGS {
+            assert!(USAGE.contains(&format!("--{key}")), "usage drift: --{key} missing");
+        }
+        // the lists themselves stay sorted so membership diffs are easy
+        // to read in review
+        for list in [FORWARDED_FLAGS, LOCAL_FLAGS, EXTRA_FLAGS] {
+            let mut sorted = list.to_vec();
+            sorted.sort_unstable();
+            assert_eq!(sorted, list, "flag table out of order");
+        }
     }
 }

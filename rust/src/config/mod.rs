@@ -55,7 +55,7 @@ pub enum ReduceKind {
 }
 
 /// How the worker "cluster" executes (see `engine::Cluster`).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub enum Topology {
     /// one persistent OS thread per worker — the MPI-rank analogue
     Threads,
@@ -63,6 +63,24 @@ pub enum Topology {
     /// max(worker durations) per iteration — the homogeneous-cluster
     /// cost model (§4.1), for sweeping P beyond this box's cores
     Simulate,
+    /// one `pemsvm worker` daemon per host:port — solver steps execute
+    /// in remote processes over the `net` wire protocol (DESIGN.md §15);
+    /// bit-identical to `Threads` for a fixed seed
+    Remote(Vec<String>),
+}
+
+impl Topology {
+    /// Host-independent topology tag, used as the checkpoint
+    /// fingerprint: a `Remote` checkpoint resumes onto a `Remote`
+    /// cluster with *any* host list (the workers are interchangeable —
+    /// shard assignment follows worker id, not address).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Topology::Threads => "Threads",
+            Topology::Simulate => "Simulate",
+            Topology::Remote(_) => "Remote",
+        }
+    }
 }
 
 /// Kernel function for KRN runs.
@@ -244,8 +262,31 @@ impl TrainConfig {
                 self.topology = match v.to_ascii_lowercase().as_str() {
                     "threads" | "threaded" => Topology::Threads,
                     "simulate" | "simulated" => Topology::Simulate,
+                    "remote" => bail!(
+                        "the remote topology is selected by its host list: pass \
+                         --hosts a:port,b:port instead of --topology remote"
+                    ),
                     _ => bail!("bad topology `{v}`"),
                 }
+            }
+            // `--hosts a:p,b:p` selects the remote topology and pins the
+            // worker count to the host count (one daemon per worker)
+            "hosts" => {
+                let hosts: Vec<String> = v
+                    .split(',')
+                    .map(|h| h.trim().to_string())
+                    .filter(|h| !h.is_empty())
+                    .collect();
+                if hosts.is_empty() {
+                    bail!("--hosts needs a comma-separated host:port list");
+                }
+                for h in &hosts {
+                    if !h.contains(':') {
+                        bail!("bad host `{h}` in --hosts (want host:port)");
+                    }
+                }
+                self.workers = hosts.len();
+                self.topology = Topology::Remote(hosts);
             }
             // back-compat alias for the pre-engine boolean flag
             "simulate_cluster" => {
@@ -325,6 +366,23 @@ mod tests {
         c.set("warm_start", "true").unwrap();
         assert!(c.warm_start);
         assert!(c.set("topology", "mesh").is_err());
+    }
+
+    #[test]
+    fn hosts_key_selects_remote_topology() {
+        let mut c = TrainConfig::default();
+        c.set("hosts", "127.0.0.1:7979, 127.0.0.1:7980").unwrap();
+        assert_eq!(
+            c.topology,
+            Topology::Remote(vec!["127.0.0.1:7979".into(), "127.0.0.1:7980".into()])
+        );
+        // worker count follows the host list (one daemon per worker)
+        assert_eq!(c.workers, 2);
+        assert_eq!(c.topology.name(), "Remote");
+        assert!(c.set("hosts", "").is_err());
+        assert!(c.set("hosts", "no-port").is_err());
+        // --topology remote directs users at --hosts
+        assert!(c.set("topology", "remote").is_err());
     }
 
     #[test]

@@ -164,6 +164,46 @@ impl ParsedChunk {
             }
         }
     }
+
+    /// Reassemble a chunk from its raw CSR parts — the receiving side of
+    /// the wire protocol (`net::wire`, DESIGN.md §15): a `pemsvm worker`
+    /// daemon decodes an `Ingest` frame back into the exact chunk the
+    /// coordinator's reader produced, so streamed-over-TCP shards hold
+    /// the same rows in the same order as in-process ones. The chunk
+    /// gets its own resident-rows gauge (the stream's gauge lives in the
+    /// sending process).
+    pub fn from_parts(
+        start: usize,
+        labels: Vec<f32>,
+        indptr: Vec<usize>,
+        indices: Vec<u32>,
+        values: Vec<f32>,
+    ) -> Result<ParsedChunk> {
+        if indptr.len() != labels.len() + 1 {
+            bail!("chunk indptr length {} != rows + 1 ({})", indptr.len(), labels.len() + 1);
+        }
+        if indptr.first() != Some(&0) || indptr.windows(2).any(|w| w[0] > w[1]) {
+            bail!("chunk indptr is not monotone from 0");
+        }
+        if *indptr.last().unwrap() != values.len() || indices.len() != values.len() {
+            bail!(
+                "chunk nnz mismatch: indptr ends at {}, {} indices, {} values",
+                indptr.last().unwrap(),
+                indices.len(),
+                values.len()
+            );
+        }
+        let gauge = Arc::new(Gauge::new());
+        gauge.add(labels.len());
+        Ok(ParsedChunk { start, labels, indptr, indices, values, gauge })
+    }
+
+    /// Raw CSR views for the wire encoder ([`from_parts`]'s inverse).
+    ///
+    /// [`from_parts`]: ParsedChunk::from_parts
+    pub fn raw_parts(&self) -> (&[f32], &[usize], &[u32], &[f32]) {
+        (&self.labels, &self.indptr, &self.indices, &self.values)
+    }
 }
 
 impl Drop for ParsedChunk {

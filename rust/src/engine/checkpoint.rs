@@ -77,7 +77,10 @@ impl Checkpoint {
         (
             format!("{:?}", cfg.task),
             format!("{:?}", cfg.algo),
-            format!("{:?}", cfg.topology),
+            // host-independent tag: a Remote checkpoint may resume onto
+            // a Remote cluster with a different (e.g. replacement) host
+            // list — worker identity is the id, not the address
+            cfg.topology.name().to_string(),
             format!("{:?}", cfg.reduce),
         )
     }

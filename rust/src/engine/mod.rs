@@ -42,10 +42,12 @@ pub use driver::{BinaryDriver, CsBlockDriver, IterDriver, IterStats, SvrDriver};
 pub use fault::{FaultKind, FaultPlan};
 pub use pool::{FaultStats, Pool, PoolOpts, StepTiming};
 
-use crate::backend::{self, MasterBackend, RngState, StepInput};
-use crate::config::{Algo, ModelKind, TaskKind, TrainConfig};
+use crate::backend::{self, MasterBackend, RngState, StepInput, WorkerBackend};
+use crate::config::{Algo, BackendKind, ModelKind, TaskKind, TrainConfig};
 use crate::data::stream::StreamReader;
 use crate::data::{shard_ranges, Dataset, Task};
+use crate::net::remote::RemoteWorker;
+use crate::net::wire::{remote_hosts, WorkerSpec};
 use crate::linalg::Mat;
 use crate::metrics::{Metrics, Phase, NPHASES, PHASES};
 use crate::model::Weights;
@@ -221,6 +223,56 @@ impl StopRule {
     }
 }
 
+/// Build one [`RemoteWorker`] proxy per host for a
+/// [`Topology::Remote`](crate::config::Topology::Remote) cluster
+/// (DESIGN.md §15): connect, configure with the *same* seed / worker id
+/// / shard range the in-process pool would use, and — in eager mode
+/// (`ds` given) — ship the full dataset so every daemon can adopt an
+/// evicted peer's global row ranges later. With `ds` absent the workers
+/// are streamed: chunks arrive over the wire through the pool's normal
+/// ingest broadcast.
+fn make_remote_workers(
+    cfg: &TrainConfig,
+    hosts: &[String],
+    shards: &[std::ops::Range<usize>],
+    k: usize,
+    n: usize,
+    task: Task,
+    ds: Option<&Dataset>,
+) -> Result<Vec<Box<dyn WorkerBackend>>> {
+    if cfg.backend != BackendKind::Native {
+        bail!("--hosts drives the native backend; the XLA backend is in-process only");
+    }
+    if hosts.len() != shards.len() {
+        bail!(
+            "{} worker hosts given for {} workers (pass one host:port per worker)",
+            hosts.len(),
+            shards.len()
+        );
+    }
+    let timeout = Duration::from_millis(cfg.step_timeout_ms);
+    let mut out: Vec<Box<dyn WorkerBackend>> = Vec::with_capacity(hosts.len());
+    for (wid, (host, r)) in hosts.iter().zip(shards).enumerate() {
+        let spec = WorkerSpec {
+            wid: wid as u64,
+            seed: cfg.seed,
+            algo: cfg.algo,
+            task,
+            eps_clamp: cfg.eps_clamp,
+            k,
+            n,
+            range: r.clone(),
+            streamed: ds.is_none(),
+        };
+        let rw = RemoteWorker::connect(host, spec, timeout)?;
+        if let Some(ds) = ds {
+            rw.ship_dataset(ds)?;
+        }
+        out.push(Box::new(rw));
+    }
+    Ok(out)
+}
+
 /// A persistent worker-pool cluster bound to one dataset.
 ///
 /// Construction pays the full setup cost (clone + shard the dataset,
@@ -281,13 +333,16 @@ impl Cluster {
         let p = cfg.workers.max(1);
         let ds_arc = Arc::new(ds.clone());
         let shards: Vec<_> = shard_ranges(ds.n, p).into_iter().map(|s| s.range).collect();
-        let workers = backend::make_workers(cfg, &ds_arc, &shards)?;
+        let workers = match remote_hosts(&cfg.topology) {
+            Some(hosts) => make_remote_workers(cfg, hosts, &shards, ds.k, ds.n, ds.task, Some(ds))?,
+            None => backend::make_workers(cfg, &ds_arc, &shards)?,
+        };
         let dim = workers.iter().map(|w| w.stat_dim()).max().unwrap_or(ds.k);
         // eager workers view the full dataset, so the pool can re-shard
         // an evicted worker's global row ranges onto survivors
         let pool = Pool::spawn_with(
             workers,
-            cfg.topology,
+            cfg.topology.clone(),
             PoolOpts {
                 shards: Some(shards.clone()),
                 plan,
@@ -340,14 +395,17 @@ impl Cluster {
         let p = cfg.workers.max(1);
         let (n, k) = (reader.n(), reader.k());
         let shards: Vec<_> = shard_ranges(n, p).into_iter().map(|s| s.range).collect();
-        let workers = backend::make_stream_workers(cfg, k, task, &shards)?;
+        let workers = match remote_hosts(&cfg.topology) {
+            Some(hosts) => make_remote_workers(cfg, hosts, &shards, k, n, task, None)?,
+            None => backend::make_stream_workers(cfg, k, task, &shards)?,
+        };
         let dim = workers.iter().map(|w| w.stat_dim()).max().unwrap_or(k);
         // streamed workers hold only their own shard, so the pool cannot
         // re-shard on eviction (`shards: None`); a worker death here is
         // fatal and the run must restart from ingestion
         let mut pool = Pool::spawn_with(
             workers,
-            cfg.topology,
+            cfg.topology.clone(),
             PoolOpts {
                 shards: None,
                 plan: FaultPlan::none(),

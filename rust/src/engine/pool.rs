@@ -241,7 +241,13 @@ impl Pool {
         let mut per_worker = opts.plan.split(p);
         let mode = match topology {
             Topology::Simulate => Mode::Simulate { workers, faults: per_worker },
-            Topology::Threads => {
+            // Remote: the backends are `net::remote::RemoteWorker`
+            // proxies, each driven by a leader-side forwarding thread —
+            // the threaded machinery (round tags, timeouts, retry,
+            // eviction, tree-merge dispatch) applies unchanged, and the
+            // Merge command never touches a backend, so the tree reduce
+            // still runs leader-side with the identical pairing order.
+            Topology::Threads | Topology::Remote(_) => {
                 let (res_tx, res_rx) = mpsc::channel::<Reply>();
                 let mut cmd_txs = Vec::with_capacity(p);
                 let mut handles = Vec::with_capacity(p);
@@ -725,6 +731,28 @@ fn step_all_threads(
                         }
                         Ok(_corrupt) => {
                             // NaN/inf partial: retry, then evict
+                            attempts[wid] += 1;
+                            if attempts[wid] > ctx.retries + 1 {
+                                ctx.evict(wid)?;
+                                continue 'round;
+                            }
+                            ctx.note_retry();
+                            let cmd = Cmd::Step {
+                                input: input.clone(),
+                                round,
+                                extra: ctx.adopted[wid].clone(),
+                            };
+                            if cmd_txs[wid].send(cmd).is_err() {
+                                ctx.evict(wid)?;
+                                continue 'round;
+                            }
+                        }
+                        Err(e) if e.downcast_ref::<crate::net::NetDown>().is_some() => {
+                            // the worker's *connection* failed, not its
+                            // math: same treatment as a missed deadline.
+                            // A dead connection fails fast on the
+                            // retries, so this converges to eviction
+                            // without ever re-stepping the daemon.
                             attempts[wid] += 1;
                             if attempts[wid] > ctx.retries + 1 {
                                 ctx.evict(wid)?;

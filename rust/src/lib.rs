@@ -69,6 +69,7 @@ pub mod engine;
 pub mod linalg;
 pub mod metrics;
 pub mod model;
+pub mod net;
 pub mod rng;
 #[cfg(feature = "xla")]
 pub mod runtime;

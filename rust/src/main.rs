@@ -61,6 +61,7 @@ fn run(argv: Vec<String>) -> Result<()> {
         "datagen" => cmd_datagen(&args),
         "predict" => cmd_predict(&args),
         "serve" => cmd_serve(&args),
+        "worker" => cmd_worker(&args),
         "eval" => cmd_eval(&args),
         "diagnose" => cmd_diagnose(&args),
         "info" => cmd_info(&args),
@@ -73,79 +74,8 @@ fn run(argv: Vec<String>) -> Result<()> {
 }
 
 fn print_usage() {
-    println!(
-        "pemsvm — Fast Parallel SVM using Data Augmentation (Perkins et al. 2015)
-
-USAGE:
-  pemsvm train <data.svm> [--options LIN-EM-CLS] [--workers P] [--lambda L]
-               [--backend native|xla] [--reduce flat|tree] [--max-iters I]
-               [--tol T] [--seed S] [--num-classes M] [--model-out model.txt]
-               [--config file.toml] [--test test.svm] [--verbose]
-               [--topology threads|simulate]
-               [--stream-chunk-rows R] [--dims N,K]
-               [--trace spans.jsonl] [--metrics-out metrics.prom]
-               [--verbosity 0|1|2] [--diag-every N]
-               [--checkpoint every-N] [--checkpoint-path run.ckpt] [--resume]
-               [--step-timeout-ms T] [--step-retries R]
-               [--algo em|mc] [--task cls|svr|mlt] [--model lin|krn]
-               [--burn-in B] [--kernel rbf] [--kernel-sigma S]
-               [--eps-clamp E] [--eps-insensitive E]
-               --options bundles --model/--algo/--task (LIN-EM-CLS);
-               the split flags override individual parts. --burn-in
-               discards the first B MC iterations from the running
-               average (and from the diagnostics chains)
-               --checkpoint every-N writes the full session state
-               (weights, sampler RNG streams, stopping rule) atomically
-               every N iterations to --checkpoint-path (default
-               <model-out>.ckpt); --resume continues a killed run from
-               it **bit-identically**. --step-timeout-ms/--step-retries
-               bound the per-round wait on a worker before it is retried
-               and then evicted (its rows re-shard onto survivors)
-               --trace writes one JSON line per training iteration
-               (phase timings, objective, weight-delta norm);
-               --metrics-out dumps the Prometheus exposition of the
-               process telemetry registry after training;
-               --verbosity gates diagnostic stderr (0 quiet, 1 default,
-               2 debug)
-               --diag-every N feeds the online convergence diagnostics
-               (ESS, split-Rhat, MCSE, health verdict — DESIGN.md §14)
-               every N iterations; with --trace, each observed record
-               carries a `diag` object, and the model header records
-               the final session verdict. 0 (default) disables
-               --stream-chunk-rows streams ingestion in R-row chunks:
-               no file-sized text buffer or duplicate dataset copy,
-               loader buffers bounded at 2R parsed rows, and trained
-               weights bit-identical to the eager path. --dims declares
-               rows,features up front, skipping the counting pass for
-               CLS/SVR (MLT still scans once to detect 0/1-based class
-               ids). LIN models, native backend
-  pemsvm sweep <data.svm> [--lambdas 10,1,0.1,0.01] [--warm-start]
-               [--test test.svm] [--stream-chunk-rows R] [--dims N,K]
-               [--trace spans.jsonl] [--metrics-out metrics.prom]
-               [train flags...]
-               --trace tags each lambda's records with its session index
-  pemsvm datagen <out.svm> --dataset alpha|dna|year|mnist|news20
-               [--n N] [--k K] [--m M] [--seed S]
-  pemsvm predict <data.svm> <model> [--workers P] [--out preds.txt]
-               predictions one per line (stdout unless --out); `#` lines
-               carry the metric and throughput
-  pemsvm serve <model...> [--port N] [--workers P] [--max-batch B]
-               [--max-wait-us U]
-               newline-delimited libsvm rows over TCP; --port 0 picks an
-               ephemeral port (printed on stdout). `#model <name>`,
-               `#stats`, `#health` (training verdict + live latency
-               p50/p90/p99) and `#metrics` (Prometheus exposition, ends
-               at `# EOF`) are in-band control lines
-  pemsvm eval <data.svm> <model> [--task cls|svr|mlt] [--num-classes M]
-               [--workers P]
-  pemsvm diagnose <spans.jsonl> [--burn-in B]
-               convergence report from a --trace file: per-session ESS,
-               integrated autocorrelation time, split-Rhat, MCSE,
-               objective sparklines and a health verdict. --burn-in
-               drops the first B iterations of each session (traces do
-               not record the training burn-in)
-  pemsvm info [--artifacts-dir artifacts]"
-    );
+    // lives in cli.rs next to the flag tables, with a drift test
+    println!("{}", pemsvm::cli::USAGE);
 }
 
 fn build_config(args: &Args) -> Result<TrainConfig> {
@@ -157,17 +87,11 @@ fn build_config(args: &Args) -> Result<TrainConfig> {
     for (key, val) in &args.flags {
         let k = key.replace('-', "_");
         match k.as_str() {
-            "config" | "model_out" | "test" | "lambdas" | "stream_chunk_rows" | "dims"
-            | "trace" | "metrics_out" | "verbosity" | "checkpoint" | "checkpoint_path"
-            | "resume" => continue,
             "simulate_cluster" => {
                 bail!("--simulate-cluster was removed; use --topology threads|simulate")
             }
-            "max_iters" | "options" | "lambda" | "workers" | "seed" | "tol" | "backend"
-            | "reduce" | "burn_in" | "num_classes" | "eps_clamp" | "eps_insensitive"
-            | "artifacts_dir" | "verbose" | "kernel" | "kernel_sigma" | "algo" | "task"
-            | "model" | "topology" | "warm_start" | "step_timeout_ms" | "step_retries"
-            | "diag_every" => cfg.set(&k, val)?,
+            k if pemsvm::cli::LOCAL_FLAGS.contains(&k) => continue,
+            k if pemsvm::cli::FORWARDED_FLAGS.contains(&k) => cfg.set(k, val)?,
             other => bail!("unknown flag --{other}"),
         }
     }
@@ -702,6 +626,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // scripts parse this line for the ephemeral port (--port 0)
     println!("# listening on {addr}");
     pemsvm::serve::serve(listener, registry, default_model, opts)
+}
+
+/// `pemsvm worker --listen host:port`: one training-worker daemon for a
+/// `--hosts` coordinator (DESIGN.md §15). Serves one coordinator
+/// session at a time; all shard data and config arrive over the wire.
+fn cmd_worker(args: &Args) -> Result<()> {
+    let Some(listen) = args.get("listen") else {
+        bail!("worker: missing --listen host:port (e.g. --listen 127.0.0.1:7001)");
+    };
+    let once = args.get("once").map(|v| v != "false").unwrap_or(false);
+    let listener = std::net::TcpListener::bind(listen)
+        .with_context(|| format!("binding {listen}"))?;
+    // scripts parse this line for the ephemeral port (--listen host:0),
+    // mirroring serve's `# listening on ...`
+    println!("# worker listening on {}", listener.local_addr()?);
+    pemsvm::net::worker::run(listener, once)
 }
 
 fn cmd_eval(args: &Args) -> Result<()> {

@@ -1,0 +1,238 @@
+//! The transport unit of the cluster wire protocol (DESIGN.md §15).
+//!
+//! Every message travels as one frame:
+//!
+//! ```text
+//! offset  size  field
+//!      0     4  magic      "PSVM" (little-endian u32 0x4d565350)
+//!      4     1  version    protocol version (currently 1)
+//!      5     1  msg type   wire::Request / wire::Reply tag
+//!      6     2  reserved   must be zero
+//!      8     4  len        payload length in bytes (LE u32)
+//!     12     4  crc32      CRC-32/IEEE of the payload (LE u32)
+//!     16   len  payload    message body (wire.rs encoding)
+//! ```
+//!
+//! Decoding is **total**: a truncated stream, wrong magic, version
+//! skew, an oversized length prefix or a checksum mismatch all return a
+//! structured [`WireError`] — no panics, and no allocation before the
+//! length has been validated against [`MAX_PAYLOAD`], so a hostile
+//! 4 GiB length prefix cannot balloon the receiver.
+
+use std::io::{Read, Write};
+use std::sync::OnceLock;
+
+/// `"PSVM"` little-endian.
+pub const MAGIC: u32 = u32::from_le_bytes(*b"PSVM");
+/// Protocol version this build speaks.
+pub const VERSION: u8 = 1;
+/// Header bytes before the payload.
+pub const HEADER_LEN: usize = 16;
+/// Upper bound on one payload. Generous — a shipped dataset is chunked
+/// into many frames well below this — but small enough that a corrupt
+/// or hostile length prefix cannot drive an allocation anywhere near
+/// address-space scale.
+pub const MAX_PAYLOAD: usize = 256 << 20;
+
+/// Structured decode failure. Every variant is a protocol-level fact
+/// about the bytes, not an I/O condition (those stay `std::io::Error`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WireError {
+    /// first four bytes were not `"PSVM"`
+    BadMagic(u32),
+    /// peer speaks a different protocol version
+    VersionSkew { got: u8, want: u8 },
+    /// length prefix exceeds [`MAX_PAYLOAD`]
+    Oversized { len: u64, max: u64 },
+    /// payload checksum mismatch
+    CrcMismatch { got: u32, want: u32 },
+    /// payload ended before a field finished decoding
+    Truncated { need: usize, have: usize },
+    /// reserved header bytes were non-zero
+    BadReserved(u16),
+    /// unknown message-type byte
+    UnknownMsg(u8),
+    /// a decoded field had an impossible value (bad tag, count
+    /// mismatch, non-UTF-8 string)
+    BadValue(String),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::BadMagic(m) => write!(f, "bad frame magic {m:#010x}"),
+            WireError::VersionSkew { got, want } => {
+                write!(f, "protocol version skew: peer speaks v{got}, this build v{want}")
+            }
+            WireError::Oversized { len, max } => {
+                write!(f, "frame payload length {len} exceeds the {max}-byte cap")
+            }
+            WireError::CrcMismatch { got, want } => {
+                write!(f, "payload CRC mismatch: computed {got:#010x}, header says {want:#010x}")
+            }
+            WireError::Truncated { need, have } => {
+                write!(f, "payload truncated: field needs {need} bytes, {have} remain")
+            }
+            WireError::BadReserved(r) => write!(f, "reserved header bytes non-zero ({r:#06x})"),
+            WireError::UnknownMsg(t) => write!(f, "unknown message type {t:#04x}"),
+            WireError::BadValue(why) => write!(f, "bad field value: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// Why a frame read ended: cleanly closed peer, transport error, or a
+/// protocol violation in the bytes themselves.
+#[derive(Debug)]
+pub enum RecvError {
+    /// EOF on the frame boundary — the peer closed the conversation
+    Closed,
+    /// transport failure (includes read timeouts)
+    Io(std::io::Error),
+    /// the bytes violate the protocol
+    Protocol(WireError),
+}
+
+impl std::fmt::Display for RecvError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RecvError::Closed => write!(f, "peer closed the connection"),
+            RecvError::Io(e) => write!(f, "transport error: {e}"),
+            RecvError::Protocol(e) => write!(f, "protocol error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for RecvError {}
+
+/// CRC-32/IEEE (the zlib polynomial), table-driven, dependency-free.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    static TABLE: OnceLock<[u32; 256]> = OnceLock::new();
+    let table = TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, e) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *e = c;
+        }
+        t
+    });
+    let mut c = !0u32;
+    for &b in bytes {
+        c = table[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+/// Encode one frame (header + payload) into a fresh buffer.
+pub fn encode_frame(msg_type: u8, payload: &[u8]) -> Vec<u8> {
+    assert!(payload.len() <= MAX_PAYLOAD, "frame payload exceeds MAX_PAYLOAD");
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    out.extend_from_slice(&MAGIC.to_le_bytes());
+    out.push(VERSION);
+    out.push(msg_type);
+    out.extend_from_slice(&0u16.to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&crc32(payload).to_le_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Write one frame; returns the bytes put on the wire (for the
+/// `net_bytes_tx_total` counter).
+pub fn write_frame<W: Write>(w: &mut W, msg_type: u8, payload: &[u8]) -> std::io::Result<usize> {
+    let buf = encode_frame(msg_type, payload);
+    w.write_all(&buf)?;
+    w.flush()?;
+    Ok(buf.len())
+}
+
+/// Parse and validate a 16-byte header. Returns `(msg_type, payload_len)`.
+pub fn decode_header(h: &[u8; HEADER_LEN]) -> Result<(u8, usize), WireError> {
+    let magic = u32::from_le_bytes([h[0], h[1], h[2], h[3]]);
+    if magic != MAGIC {
+        return Err(WireError::BadMagic(magic));
+    }
+    if h[4] != VERSION {
+        return Err(WireError::VersionSkew { got: h[4], want: VERSION });
+    }
+    let reserved = u16::from_le_bytes([h[6], h[7]]);
+    if reserved != 0 {
+        return Err(WireError::BadReserved(reserved));
+    }
+    let len = u32::from_le_bytes([h[8], h[9], h[10], h[11]]) as usize;
+    if len > MAX_PAYLOAD {
+        return Err(WireError::Oversized { len: len as u64, max: MAX_PAYLOAD as u64 });
+    }
+    Ok((h[5], len))
+}
+
+/// Read one frame off `r`. Returns `(msg_type, payload, wire_bytes)`
+/// with the payload CRC already verified; `wire_bytes` feeds the
+/// `net_bytes_rx_total` counter. An EOF *on the frame boundary* is the
+/// peer's clean close ([`RecvError::Closed`]); anywhere else it is a
+/// truncated frame.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<(u8, Vec<u8>, usize), RecvError> {
+    let mut header = [0u8; HEADER_LEN];
+    let mut filled = 0usize;
+    while filled < HEADER_LEN {
+        match r.read(&mut header[filled..]) {
+            Ok(0) if filled == 0 => return Err(RecvError::Closed),
+            Ok(0) => {
+                return Err(RecvError::Protocol(WireError::Truncated {
+                    need: HEADER_LEN,
+                    have: filled,
+                }))
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(RecvError::Io(e)),
+        }
+    }
+    let (msg_type, len) = decode_header(&header).map_err(RecvError::Protocol)?;
+    let want_crc = u32::from_le_bytes([header[12], header[13], header[14], header[15]]);
+    // len is validated against MAX_PAYLOAD above, so this allocation is
+    // bounded no matter what the peer claims
+    let mut payload = vec![0u8; len];
+    if let Err(e) = r.read_exact(&mut payload) {
+        return Err(match e.kind() {
+            std::io::ErrorKind::UnexpectedEof => {
+                RecvError::Protocol(WireError::Truncated { need: len, have: 0 })
+            }
+            _ => RecvError::Io(e),
+        });
+    }
+    let got_crc = crc32(&payload);
+    if got_crc != want_crc {
+        return Err(RecvError::Protocol(WireError::CrcMismatch {
+            got: got_crc,
+            want: want_crc,
+        }));
+    }
+    Ok((msg_type, payload, HEADER_LEN + len))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_known_vectors() {
+        // the classic check value for CRC-32/IEEE
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn frame_roundtrip() {
+        let buf = encode_frame(0x42, b"hello");
+        let mut cur = &buf[..];
+        let (t, p, n) = read_frame(&mut cur).unwrap();
+        assert_eq!((t, p.as_slice(), n), (0x42, &b"hello"[..], buf.len()));
+        // and a clean EOF right after
+        assert!(matches!(read_frame(&mut cur), Err(RecvError::Closed)));
+    }
+}

@@ -1,0 +1,94 @@
+//! The distributed cluster backend (DESIGN.md §15): a length-prefixed,
+//! CRC-checked binary wire protocol plus the two endpoints that speak
+//! it — the [`worker`] daemon (`pemsvm worker --listen ADDR`) hosting
+//! shard state in its own process, and the [`remote::RemoteWorker`]
+//! proxy the engine drives through the ordinary
+//! [`WorkerBackend`](crate::backend::WorkerBackend) trait.
+//!
+//! Layering, bottom up:
+//!
+//! * [`frame`] — the transport unit: a 16-byte header (magic, version,
+//!   message type, payload length, CRC-32) followed by the payload.
+//!   Decoding is total: truncation, bad magic, version skew, oversized
+//!   lengths and checksum mismatches all come back as structured
+//!   [`frame::WireError`]s, never panics or unbounded allocations.
+//! * [`wire`] — the messages: `Request` (configure / ship chunks /
+//!   step / RNG capture+restore / shutdown) and `Reply` (stats, RNG,
+//!   errors), encoded field by field with every float as its IEEE bit
+//!   pattern, so a statistic crosses the wire bit-exactly.
+//! * [`tcp`] — the small bind/accept plumbing shared with
+//!   `serve::server` (satellite of the same PR).
+//! * [`worker`] / [`remote`] — daemon and proxy. The proxy maps socket
+//!   failures to [`NetDown`], which the pool treats like a timeout:
+//!   retry, then evict and re-shard (DESIGN.md §13).
+//!
+//! Determinism: a remote daemon runs the *same* `NativeWorker` with the
+//! same seed, worker id and shard rows as the in-process pool would,
+//! the encoder preserves Dense/Sparse feature layout (the two compute
+//! paths associate differently), and the tree reduce still merges
+//! leader-side in the identical pairing order — so a `Remote` run is
+//! bit-identical to `Threads` for a fixed seed (`tests/distributed.rs`).
+
+pub mod frame;
+pub mod remote;
+pub mod tcp;
+pub mod wire;
+pub mod worker;
+
+use std::sync::{Arc, OnceLock};
+
+use crate::telemetry::{self, Counter, Histogram};
+
+/// A connection-level failure: the remote worker timed out, hung up or
+/// desynchronized. The pool downcasts to this to route the failure into
+/// the retry→evict path instead of treating it as a deterministic
+/// backend error (which would abort the session).
+#[derive(Debug, Clone)]
+pub struct NetDown {
+    pub peer: String,
+    pub what: String,
+}
+
+impl std::fmt::Display for NetDown {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "connection to worker {} is down: {}", self.peer, self.what)
+    }
+}
+
+impl std::error::Error for NetDown {}
+
+/// Wire-traffic series in the global telemetry registry. Both endpoints
+/// count through the same cells, so an in-process loopback test sees
+/// tx + rx covering both directions of the conversation.
+pub struct NetMetrics {
+    /// payload + header bytes written to sockets
+    pub bytes_tx: Arc<Counter>,
+    /// payload + header bytes read off sockets
+    pub bytes_rx: Arc<Counter>,
+    /// full request→reply round-trip as seen by the coordinator
+    pub rtt_nanos: Arc<Histogram>,
+}
+
+pub fn net_metrics() -> &'static NetMetrics {
+    static M: OnceLock<NetMetrics> = OnceLock::new();
+    M.get_or_init(|| NetMetrics {
+        bytes_tx: telemetry::global()
+            .counter("net_bytes_tx_total", "Bytes written to cluster wire-protocol sockets."),
+        bytes_rx: telemetry::global()
+            .counter("net_bytes_rx_total", "Bytes read from cluster wire-protocol sockets."),
+        rtt_nanos: telemetry::global().histogram(
+            "net_rtt_nanos",
+            "Coordinator-side request/reply round-trip in nanoseconds.",
+        ),
+    })
+}
+
+/// Per-worker connection gauge: 1 while the coordinator holds a live
+/// connection to worker `wid`, 0 once it is closed or declared dead.
+pub fn conn_gauge(wid: usize) -> Arc<telemetry::Gauge> {
+    telemetry::global().gauge_labeled(
+        "net_worker_connected",
+        &telemetry::label("worker", &wid.to_string()),
+        "Live coordinator connections per remote worker id.",
+    )
+}

@@ -1,0 +1,233 @@
+//! The coordinator-side proxy: a [`RemoteWorker`] implements
+//! [`WorkerBackend`] over one TCP connection to a `pemsvm worker`
+//! daemon, so the threaded pool drives a remote process exactly as it
+//! drives an in-process `NativeWorker` (DESIGN.md §15).
+//!
+//! Failure mapping: any transport failure — connect refused mid-run,
+//! read timeout (the socket read timeout *is* `--step-timeout-ms`),
+//! hangup, CRC mismatch, desynchronized reply — marks the connection
+//! dead and surfaces as [`NetDown`], which the pool routes into its
+//! retry→evict path. A dead connection then fails fast on every later
+//! call: the daemon is never re-stepped, so an evicted worker's RNG
+//! cannot silently double-advance and survivors stay bit-identical. A
+//! daemon-side [`Reply::Error`] is the opposite case — a deterministic
+//! worker failure — and propagates as a plain error, aborting the
+//! session just as a local backend error would.
+
+use std::net::{TcpStream, ToSocketAddrs};
+use std::ops::Range;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::backend::{RngState, StepInput, WorkerBackend};
+use crate::data::stream::ParsedChunk;
+use crate::data::Dataset;
+use crate::solver::PartialStats;
+use crate::telemetry::Gauge;
+
+use super::frame::{read_frame, write_frame};
+use super::wire::{chunk_from_parsed, dataset_chunks, Reply, Request, WorkerSpec};
+use super::{conn_gauge, net_metrics, tcp, NetDown};
+
+struct Conn {
+    stream: TcpStream,
+    /// once set, every call fails fast with [`NetDown`] (why it died)
+    dead: Option<String>,
+}
+
+/// One remote worker as seen by the pool.
+pub struct RemoteWorker {
+    conn: Mutex<Conn>,
+    /// the configured `host:port`, used in errors and logs
+    peer: String,
+    stat_dim: usize,
+    /// request/reply pairing tag for step calls (desync detection)
+    round: AtomicU64,
+    gauge: Arc<Gauge>,
+}
+
+impl RemoteWorker {
+    /// Connect to `host` (a `host:port`), configure the session, and
+    /// return the proxy. `step_timeout` becomes the socket read
+    /// timeout, so a remote step that outlives `--step-timeout-ms`
+    /// surfaces exactly like a local straggler's missed deadline.
+    pub fn connect(host: &str, spec: WorkerSpec, step_timeout: Duration) -> Result<RemoteWorker> {
+        let timeout = step_timeout.max(Duration::from_millis(1));
+        let addrs: Vec<_> = host
+            .to_socket_addrs()
+            .with_context(|| format!("resolving worker host `{host}`"))?
+            .collect();
+        let mut stream = None;
+        let mut last_err = None;
+        for a in &addrs {
+            // connects get a floor: a tight step timeout is about slow
+            // *steps*, not the TCP handshake
+            match TcpStream::connect_timeout(a, timeout.max(Duration::from_secs(2))) {
+                Ok(s) => {
+                    stream = Some(s);
+                    break;
+                }
+                Err(e) => last_err = Some(e),
+            }
+        }
+        let stream = stream.ok_or_else(|| match last_err {
+            Some(e) => anyhow!("connecting to worker `{host}`: {e}"),
+            None => anyhow!("worker host `{host}` resolves to no addresses"),
+        })?;
+        tcp::configure(&stream, Some(timeout))
+            .with_context(|| format!("configuring socket to worker `{host}`"))?;
+        let gauge = conn_gauge(spec.wid as usize);
+        gauge.set(1);
+        let rw = RemoteWorker {
+            conn: Mutex::new(Conn { stream, dead: None }),
+            peer: host.to_string(),
+            stat_dim: spec.k,
+            round: AtomicU64::new(0),
+            gauge,
+        };
+        match rw.rpc(Request::Configure(spec))? {
+            Reply::Configured { stat_dim } if stat_dim == rw.stat_dim => Ok(rw),
+            Reply::Configured { stat_dim } => {
+                bail!("worker `{host}` reports stat_dim {stat_dim}, expected {}", rw.stat_dim)
+            }
+            _ => Err(rw.desync("unexpected reply to configure")),
+        }
+    }
+
+    /// Eager mode: ship the **full** dataset, layout-preserving, chunk
+    /// by chunk, then seal. Every remote worker holds all rows so it
+    /// can adopt an evicted peer's global ranges later (the same
+    /// reason the threaded pool's workers share one `Arc<Dataset>`).
+    pub fn ship_dataset(&self, ds: &Dataset) -> Result<()> {
+        for chunk in dataset_chunks(ds) {
+            match self.rpc(Request::Chunk(chunk))? {
+                Reply::Ok => {}
+                _ => return Err(self.desync("unexpected reply to dataset chunk")),
+            }
+        }
+        match self.rpc(Request::Seal)? {
+            Reply::Ok => Ok(()),
+            _ => Err(self.desync("unexpected reply to seal")),
+        }
+    }
+
+    /// One request/reply exchange. Transport and protocol failures mark
+    /// the connection dead and come back as [`NetDown`]; a daemon-side
+    /// [`Reply::Error`] becomes a plain (deterministic) error.
+    fn rpc(&self, req: Request) -> Result<Reply> {
+        let mut c = self.conn.lock().expect("remote conn lock");
+        if let Some(why) = &c.dead {
+            let what = why.clone();
+            return Err(anyhow::Error::new(NetDown { peer: self.peer.clone(), what }));
+        }
+        let m = net_metrics();
+        let (t, body) = req.encode();
+        let t0 = Instant::now();
+        let sent = match write_frame(&mut c.stream, t, &body) {
+            Ok(n) => n,
+            Err(e) => return Err(self.die(&mut c, format!("send failed: {e}"))),
+        };
+        m.bytes_tx.add(sent as u64);
+        let (mt, payload, recvd) = match read_frame(&mut c.stream) {
+            Ok(f) => f,
+            Err(e) => return Err(self.die(&mut c, format!("receive failed: {e}"))),
+        };
+        m.bytes_rx.add(recvd as u64);
+        m.rtt_nanos.observe_duration(t0.elapsed());
+        match Reply::decode(mt, &payload) {
+            Ok(Reply::Error { msg }) => bail!("remote worker `{}`: {msg}", self.peer),
+            Ok(reply) => Ok(reply),
+            Err(e) => Err(self.die(&mut c, format!("bad reply: {e}"))),
+        }
+    }
+
+    fn die(&self, c: &mut Conn, what: String) -> anyhow::Error {
+        crate::log_warn!("net: connection to worker `{}` is down: {what}", self.peer);
+        self.gauge.set(0);
+        c.dead = Some(what.clone());
+        anyhow::Error::new(NetDown { peer: self.peer.clone(), what })
+    }
+
+    /// A well-formed frame of the wrong kind: the two sides no longer
+    /// agree where they are in the conversation, so the connection
+    /// cannot be trusted either.
+    fn desync(&self, what: &str) -> anyhow::Error {
+        let mut c = self.conn.lock().expect("remote conn lock");
+        self.die(&mut c, what.to_string())
+    }
+}
+
+impl WorkerBackend for RemoteWorker {
+    fn step(&mut self, input: &StepInput) -> Result<PartialStats> {
+        self.step_ranges(input, &[])
+    }
+
+    fn step_ranges(&mut self, input: &StepInput, extra: &[Range<usize>]) -> Result<PartialStats> {
+        let round = self.round.fetch_add(1, Ordering::Relaxed) + 1;
+        let req = Request::Step { round, input: input.clone(), extra: extra.to_vec() };
+        match self.rpc(req)? {
+            Reply::Stepped { round: r, stats } if r == round => Ok(stats),
+            Reply::Stepped { round: r, .. } => {
+                Err(self.desync(&format!("step reply for round {r}, expected {round}")))
+            }
+            _ => Err(self.desync("unexpected reply to step")),
+        }
+    }
+
+    fn stat_dim(&self) -> usize {
+        self.stat_dim
+    }
+
+    fn rng_state(&self) -> Option<RngState> {
+        match self.rpc(Request::GetRng) {
+            Ok(Reply::Rng { state }) => state,
+            // the checkpoint layer treats an unanswerable worker like a
+            // backend without a restorable RNG: the gap is recorded and
+            // `--resume` rejects the file
+            Ok(_) => {
+                let _ = self.desync("unexpected reply to rng capture");
+                None
+            }
+            Err(_) => None,
+        }
+    }
+
+    fn set_rng_state(&mut self, state: RngState) -> Result<()> {
+        match self.rpc(Request::SetRng(state))? {
+            Reply::Ok => Ok(()),
+            _ => Err(self.desync("unexpected reply to rng restore")),
+        }
+    }
+
+    fn ingest(&mut self, chunk: &ParsedChunk) -> Result<()> {
+        match self.rpc(Request::Chunk(chunk_from_parsed(chunk)))? {
+            Reply::Ok => Ok(()),
+            _ => Err(self.desync("unexpected reply to streamed chunk")),
+        }
+    }
+
+    fn seal(&mut self) -> Result<()> {
+        match self.rpc(Request::Seal)? {
+            Reply::Ok => Ok(()),
+            _ => Err(self.desync("unexpected reply to seal")),
+        }
+    }
+}
+
+impl Drop for RemoteWorker {
+    fn drop(&mut self) {
+        if let Ok(c) = self.conn.get_mut() {
+            if c.dead.is_none() {
+                // best effort: let the daemon end its session cleanly
+                let (t, body) = Request::Shutdown.encode();
+                if write_frame(&mut c.stream, t, &body).is_ok() {
+                    let _ = read_frame(&mut c.stream);
+                }
+            }
+        }
+        self.gauge.set(0);
+    }
+}

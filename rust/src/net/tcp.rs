@@ -1,0 +1,79 @@
+//! Small TCP plumbing shared by the two listeners in this crate — the
+//! `pemsvm serve` prediction front-end (`serve::server`) and the
+//! `pemsvm worker` cluster daemon ([`super::worker`]): the accept loop
+//! with peer-address tagging, and per-stream socket configuration.
+
+use std::net::{TcpListener, TcpStream};
+use std::time::Duration;
+
+/// What the connection handler wants the accept loop to do next.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum After {
+    /// keep accepting
+    Continue,
+    /// leave the loop (e.g. a `--once` daemon after its session ends)
+    Stop,
+}
+
+/// The peer address as a log/metric tag; `"unknown"` if the socket
+/// cannot say (already reset, etc.).
+pub fn peer_tag(stream: &TcpStream) -> String {
+    stream.peer_addr().map(|a| a.to_string()).unwrap_or_else(|_| "unknown".into())
+}
+
+/// Configure one protocol stream: Nagle off (the wire protocol is
+/// request/reply, latency-bound) and an optional read timeout.
+pub fn configure(stream: &TcpStream, read_timeout: Option<Duration>) -> std::io::Result<()> {
+    stream.set_nodelay(true)?;
+    stream.set_read_timeout(read_timeout)
+}
+
+/// Run the accept loop: hand each connection (plus its peer tag) to
+/// `handle`, skip failed accepts, stop when the handler says
+/// [`After::Stop`]. The handler decides its own concurrency — `serve`
+/// spawns a thread per connection and returns [`After::Continue`]
+/// immediately, the worker daemon runs its single session inline.
+pub fn accept_loop<F>(listener: &TcpListener, mut handle: F)
+where
+    F: FnMut(TcpStream, String) -> After,
+{
+    for stream in listener.incoming() {
+        let Ok(stream) = stream else { continue };
+        let peer = peer_tag(&stream);
+        if handle(stream, peer) == After::Stop {
+            break;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+
+    #[test]
+    fn accept_loop_stops_on_request() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let mut seen = Vec::new();
+            accept_loop(&listener, |mut stream, peer| {
+                assert!(peer.starts_with("127.0.0.1:"), "peer tag: {peer}");
+                let mut byte = [0u8; 1];
+                stream.read_exact(&mut byte).unwrap();
+                seen.push(byte[0]);
+                if byte[0] == b'q' {
+                    After::Stop
+                } else {
+                    After::Continue
+                }
+            });
+            seen
+        });
+        for b in [b'a', b'q'] {
+            let mut c = TcpStream::connect(addr).unwrap();
+            c.write_all(&[b]).unwrap();
+        }
+        assert_eq!(server.join().unwrap(), vec![b'a', b'q']);
+    }
+}

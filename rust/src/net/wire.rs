@@ -1,0 +1,814 @@
+//! Message bodies of the cluster wire protocol (DESIGN.md §15).
+//!
+//! A [`Request`] flows coordinator → daemon, a [`Reply`] flows back;
+//! each variant owns a frame message-type byte (requests `0x01..`,
+//! replies `0x81..`). Encoding is explicit, field by field, little-
+//! endian, with **every float written as its IEEE bit pattern**
+//! (`f32::to_bits` / `f64::to_bits`) — a statistic or weight crosses
+//! the wire bit-exactly, which is what lets a `Remote` run reproduce a
+//! `Threads` run to the last bit.
+//!
+//! Decoding mirrors [`frame`](super::frame)'s discipline: every vector
+//! read validates its length prefix against the bytes actually
+//! remaining *before* allocating, so a corrupt count cannot
+//! over-allocate; all failures are structured
+//! [`WireError`](super::frame::WireError)s.
+
+use std::ops::Range;
+use std::sync::Arc;
+
+use crate::backend::{RngState, StepInput};
+use crate::config::{Algo, Topology};
+use crate::data::stream::ParsedChunk;
+use crate::data::{Dataset, Features, Task};
+use crate::linalg::packed::SymPacked;
+use crate::linalg::Mat;
+use crate::solver::PartialStats;
+
+use super::frame::WireError;
+
+// ---------------------------------------------------------------- codec
+
+/// Append-only encoder over a byte buffer.
+pub struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    pub fn new() -> Enc {
+        Enc { buf: Vec::new() }
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f32_bits(&mut self, v: f32) {
+        self.u32(v.to_bits());
+    }
+
+    pub fn f64_bits(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    pub fn bool(&mut self, v: bool) {
+        self.u8(v as u8);
+    }
+
+    pub fn range(&mut self, r: &Range<usize>) {
+        self.u64(r.start as u64);
+        self.u64(r.end as u64);
+    }
+
+    pub fn vec_f32(&mut self, v: &[f32]) {
+        self.u64(v.len() as u64);
+        for &x in v {
+            self.f32_bits(x);
+        }
+    }
+
+    pub fn vec_u32(&mut self, v: &[u32]) {
+        self.u64(v.len() as u64);
+        for &x in v {
+            self.u32(x);
+        }
+    }
+
+    pub fn vec_usize(&mut self, v: &[usize]) {
+        self.u64(v.len() as u64);
+        for &x in v {
+            self.u64(x as u64);
+        }
+    }
+
+    pub fn str(&mut self, s: &str) {
+        self.u64(s.len() as u64);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+}
+
+impl Default for Enc {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Cursor decoder over a received payload. Every read checks the bytes
+/// remaining first; length-prefixed reads validate the prefix against
+/// the remainder **before** allocating.
+pub struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    pub fn new(buf: &'a [u8]) -> Dec<'a> {
+        Dec { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.remaining() < n {
+            return Err(WireError::Truncated { need: n, have: self.remaining() });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32, WireError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, WireError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    pub fn f32_bits(&mut self) -> Result<f32, WireError> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    pub fn f64_bits(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    pub fn bool(&mut self) -> Result<bool, WireError> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            b => Err(WireError::BadValue(format!("bool byte {b}"))),
+        }
+    }
+
+    pub fn usize(&mut self) -> Result<usize, WireError> {
+        let v = self.u64()?;
+        usize::try_from(v).map_err(|_| WireError::BadValue(format!("{v} exceeds usize")))
+    }
+
+    pub fn range(&mut self) -> Result<Range<usize>, WireError> {
+        let (start, end) = (self.usize()?, self.usize()?);
+        if start > end {
+            return Err(WireError::BadValue(format!("range {start}..{end} is inverted")));
+        }
+        Ok(start..end)
+    }
+
+    /// Validated length prefix for elements of `elem_size` bytes.
+    fn len_prefix(&mut self, elem_size: usize) -> Result<usize, WireError> {
+        let len = self.usize()?;
+        let need = len.checked_mul(elem_size).ok_or_else(|| {
+            WireError::BadValue(format!("vector length {len} overflows the payload"))
+        })?;
+        if need > self.remaining() {
+            return Err(WireError::Truncated { need, have: self.remaining() });
+        }
+        Ok(len)
+    }
+
+    pub fn vec_f32(&mut self) -> Result<Vec<f32>, WireError> {
+        let len = self.len_prefix(4)?;
+        let mut v = Vec::with_capacity(len);
+        for _ in 0..len {
+            v.push(self.f32_bits()?);
+        }
+        Ok(v)
+    }
+
+    pub fn vec_u32(&mut self) -> Result<Vec<u32>, WireError> {
+        let len = self.len_prefix(4)?;
+        let mut v = Vec::with_capacity(len);
+        for _ in 0..len {
+            v.push(self.u32()?);
+        }
+        Ok(v)
+    }
+
+    pub fn vec_usize(&mut self) -> Result<Vec<usize>, WireError> {
+        let len = self.len_prefix(8)?;
+        let mut v = Vec::with_capacity(len);
+        for _ in 0..len {
+            v.push(self.usize()?);
+        }
+        Ok(v)
+    }
+
+    pub fn str(&mut self) -> Result<String, WireError> {
+        let len = self.len_prefix(1)?;
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| WireError::BadValue("non-UTF-8 string".into()))
+    }
+
+    /// The payload must be fully consumed — trailing garbage means the
+    /// two sides disagree about the message layout.
+    pub fn finish(self) -> Result<(), WireError> {
+        if self.remaining() != 0 {
+            return Err(WireError::BadValue(format!(
+                "{} trailing bytes after the message",
+                self.remaining()
+            )));
+        }
+        Ok(())
+    }
+}
+
+// ------------------------------------------------------------- messages
+
+/// Frame message-type bytes, requests.
+pub mod msg {
+    pub const CONFIGURE: u8 = 0x01;
+    pub const CHUNK: u8 = 0x02;
+    pub const SEAL: u8 = 0x03;
+    pub const STEP: u8 = 0x04;
+    pub const GET_RNG: u8 = 0x05;
+    pub const SET_RNG: u8 = 0x06;
+    pub const SHUTDOWN: u8 = 0x07;
+    pub const R_CONFIGURED: u8 = 0x81;
+    pub const R_OK: u8 = 0x82;
+    pub const R_STEPPED: u8 = 0x83;
+    pub const R_RNG: u8 = 0x84;
+    pub const R_ERROR: u8 = 0x85;
+}
+
+/// Everything a daemon needs to build its `NativeWorker` — the same
+/// arguments `backend::make_workers` / `make_stream_workers` pass
+/// in-process, so the remote worker's RNG stream and shard rows are
+/// identical to the threaded pool's.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkerSpec {
+    pub wid: u64,
+    pub seed: u64,
+    pub algo: Algo,
+    pub task: Task,
+    pub eps_clamp: f32,
+    /// feature dimensionality
+    pub k: usize,
+    /// total corpus rows (eager mode: the daemon receives all of them)
+    pub n: usize,
+    /// this worker's own global row range (eager) or shard window
+    /// (streamed)
+    pub range: Range<usize>,
+    /// streamed mode: only the window's rows arrive, and the worker
+    /// cannot adopt ranges after an eviction
+    pub streamed: bool,
+}
+
+/// One shipped block of rows, **layout-preserving**: a Dense dataset
+/// ships dense and a Sparse one ships CSR, because the two compute
+/// paths accumulate in different orders and only the original layout
+/// reproduces the in-process bits.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ChunkData {
+    Sparse {
+        start: usize,
+        labels: Vec<f32>,
+        indptr: Vec<usize>,
+        indices: Vec<u32>,
+        values: Vec<f32>,
+    },
+    Dense {
+        start: usize,
+        k: usize,
+        labels: Vec<f32>,
+        /// row-major `[labels.len(), k]`
+        data: Vec<f32>,
+    },
+}
+
+impl ChunkData {
+    pub fn rows(&self) -> usize {
+        match self {
+            ChunkData::Sparse { labels, .. } | ChunkData::Dense { labels, .. } => labels.len(),
+        }
+    }
+
+    pub fn start(&self) -> usize {
+        match self {
+            ChunkData::Sparse { start, .. } | ChunkData::Dense { start, .. } => *start,
+        }
+    }
+}
+
+/// Coordinator → daemon.
+#[derive(Debug)]
+pub enum Request {
+    Configure(WorkerSpec),
+    Chunk(ChunkData),
+    Seal,
+    Step { round: u64, input: StepInput, extra: Vec<Range<usize>> },
+    GetRng,
+    SetRng(RngState),
+    Shutdown,
+}
+
+/// Daemon → coordinator.
+#[derive(Debug)]
+pub enum Reply {
+    /// Configure accepted; echoes the statistics width for validation.
+    Configured { stat_dim: usize },
+    /// Chunk / Seal / SetRng / Shutdown accepted.
+    Ok,
+    /// A step's partial statistics, tagged with the request's round id.
+    Stepped { round: u64, stats: PartialStats },
+    /// The worker's sampler-RNG state (`None`: not restorable).
+    Rng { state: Option<RngState> },
+    /// A deterministic worker-side failure, surfaced as a normal error
+    /// (distinct from the connection dying, which is an eviction).
+    Error { msg: String },
+}
+
+fn enc_algo(e: &mut Enc, a: Algo) {
+    e.u8(match a {
+        Algo::Em => 0,
+        Algo::Mc => 1,
+    });
+}
+
+fn dec_algo(d: &mut Dec) -> Result<Algo, WireError> {
+    match d.u8()? {
+        0 => Ok(Algo::Em),
+        1 => Ok(Algo::Mc),
+        t => Err(WireError::BadValue(format!("algo tag {t}"))),
+    }
+}
+
+fn enc_task(e: &mut Enc, t: Task) {
+    match t {
+        Task::Binary => e.u8(0),
+        Task::Regression => e.u8(1),
+        Task::Multiclass(m) => {
+            e.u8(2);
+            e.u64(m as u64);
+        }
+    }
+}
+
+fn dec_task(d: &mut Dec) -> Result<Task, WireError> {
+    match d.u8()? {
+        0 => Ok(Task::Binary),
+        1 => Ok(Task::Regression),
+        2 => Ok(Task::Multiclass(d.usize()?)),
+        t => Err(WireError::BadValue(format!("task tag {t}"))),
+    }
+}
+
+fn enc_rng(e: &mut Enc, s: &RngState) {
+    e.u64(s.state as u64);
+    e.u64((s.state >> 64) as u64);
+    e.u64(s.inc as u64);
+    e.u64((s.inc >> 64) as u64);
+    match s.spare {
+        None => e.u8(0),
+        Some(v) => {
+            e.u8(1);
+            e.f64_bits(v);
+        }
+    }
+}
+
+fn dec_rng(d: &mut Dec) -> Result<RngState, WireError> {
+    let state = (d.u64()? as u128) | ((d.u64()? as u128) << 64);
+    let inc = (d.u64()? as u128) | ((d.u64()? as u128) << 64);
+    let spare = match d.u8()? {
+        0 => None,
+        1 => Some(d.f64_bits()?),
+        t => Err(WireError::BadValue(format!("rng spare tag {t}")))?,
+    };
+    Ok(RngState { state, inc, spare })
+}
+
+fn enc_input(e: &mut Enc, input: &StepInput) {
+    match input {
+        StepInput::Binary { w } => {
+            e.u8(0);
+            e.vec_f32(w);
+        }
+        StepInput::Svr { w, eps_ins } => {
+            e.u8(1);
+            e.f32_bits(*eps_ins);
+            e.vec_f32(w);
+        }
+        StepInput::Mlt { w_all, yidx } => {
+            e.u8(2);
+            e.u64(*yidx as u64);
+            e.u64(w_all.rows as u64);
+            e.u64(w_all.cols as u64);
+            e.vec_f32(&w_all.data);
+        }
+    }
+}
+
+fn dec_input(d: &mut Dec) -> Result<StepInput, WireError> {
+    match d.u8()? {
+        0 => Ok(StepInput::Binary { w: Arc::new(d.vec_f32()?) }),
+        1 => {
+            let eps_ins = d.f32_bits()?;
+            Ok(StepInput::Svr { w: Arc::new(d.vec_f32()?), eps_ins })
+        }
+        2 => {
+            let yidx = d.usize()?;
+            let (rows, cols) = (d.usize()?, d.usize()?);
+            let data = d.vec_f32()?;
+            if data.len() != rows.checked_mul(cols).unwrap_or(usize::MAX) {
+                return Err(WireError::BadValue(format!(
+                    "MLT weight block {}x{} carries {} floats",
+                    rows,
+                    cols,
+                    data.len()
+                )));
+            }
+            if yidx >= rows {
+                return Err(WireError::BadValue(format!("class index {yidx} >= {rows}")));
+            }
+            Ok(StepInput::Mlt { w_all: Arc::new(Mat { rows, cols, data }), yidx })
+        }
+        t => Err(WireError::BadValue(format!("step input tag {t}"))),
+    }
+}
+
+fn enc_stats(e: &mut Enc, s: &PartialStats) {
+    e.u64(s.sigma.dim() as u64);
+    e.vec_f32(&s.sigma.data);
+    e.vec_f32(&s.mu);
+    e.f64_bits(s.obj);
+    e.f64_bits(s.aux);
+}
+
+fn dec_stats(d: &mut Dec) -> Result<PartialStats, WireError> {
+    let k = d.usize()?;
+    let data = d.vec_f32()?;
+    if data.len() != SymPacked::packed_len(k) {
+        return Err(WireError::BadValue(format!(
+            "packed sigma for k={k} needs {} floats, got {}",
+            SymPacked::packed_len(k),
+            data.len()
+        )));
+    }
+    let mu = d.vec_f32()?;
+    if mu.len() != k {
+        return Err(WireError::BadValue(format!("mu length {} != k {k}", mu.len())));
+    }
+    let mut sigma = SymPacked::zeros(k);
+    sigma.data = data;
+    Ok(PartialStats { sigma, mu, obj: d.f64_bits()?, aux: d.f64_bits()? })
+}
+
+fn enc_chunk(e: &mut Enc, c: &ChunkData) {
+    match c {
+        ChunkData::Sparse { start, labels, indptr, indices, values } => {
+            e.u8(0);
+            e.u64(*start as u64);
+            e.vec_f32(labels);
+            e.vec_usize(indptr);
+            e.vec_u32(indices);
+            e.vec_f32(values);
+        }
+        ChunkData::Dense { start, k, labels, data } => {
+            e.u8(1);
+            e.u64(*start as u64);
+            e.u64(*k as u64);
+            e.vec_f32(labels);
+            e.vec_f32(data);
+        }
+    }
+}
+
+fn dec_chunk(d: &mut Dec) -> Result<ChunkData, WireError> {
+    match d.u8()? {
+        0 => {
+            let start = d.usize()?;
+            let labels = d.vec_f32()?;
+            let indptr = d.vec_usize()?;
+            let indices = d.vec_u32()?;
+            let values = d.vec_f32()?;
+            if indptr.len() != labels.len() + 1 {
+                return Err(WireError::BadValue(format!(
+                    "chunk indptr length {} != rows + 1 ({})",
+                    indptr.len(),
+                    labels.len() + 1
+                )));
+            }
+            if indices.len() != values.len() {
+                return Err(WireError::BadValue("chunk indices/values length skew".into()));
+            }
+            Ok(ChunkData::Sparse { start, labels, indptr, indices, values })
+        }
+        1 => {
+            let start = d.usize()?;
+            let k = d.usize()?;
+            let labels = d.vec_f32()?;
+            let data = d.vec_f32()?;
+            if data.len() != labels.len().checked_mul(k).unwrap_or(usize::MAX) {
+                return Err(WireError::BadValue(format!(
+                    "dense chunk of {} rows x {k} carries {} floats",
+                    labels.len(),
+                    data.len()
+                )));
+            }
+            Ok(ChunkData::Dense { start, k, labels, data })
+        }
+        t => Err(WireError::BadValue(format!("chunk layout tag {t}"))),
+    }
+}
+
+impl Request {
+    /// `(frame msg type, payload bytes)`.
+    pub fn encode(&self) -> (u8, Vec<u8>) {
+        let mut e = Enc::new();
+        let t = match self {
+            Request::Configure(spec) => {
+                e.u64(spec.wid);
+                e.u64(spec.seed);
+                enc_algo(&mut e, spec.algo);
+                enc_task(&mut e, spec.task);
+                e.f32_bits(spec.eps_clamp);
+                e.u64(spec.k as u64);
+                e.u64(spec.n as u64);
+                e.range(&spec.range);
+                e.bool(spec.streamed);
+                msg::CONFIGURE
+            }
+            Request::Chunk(c) => {
+                enc_chunk(&mut e, c);
+                msg::CHUNK
+            }
+            Request::Seal => msg::SEAL,
+            Request::Step { round, input, extra } => {
+                e.u64(*round);
+                e.u64(extra.len() as u64);
+                for r in extra {
+                    e.range(r);
+                }
+                enc_input(&mut e, input);
+                msg::STEP
+            }
+            Request::GetRng => msg::GET_RNG,
+            Request::SetRng(s) => {
+                enc_rng(&mut e, s);
+                msg::SET_RNG
+            }
+            Request::Shutdown => msg::SHUTDOWN,
+        };
+        (t, e.into_bytes())
+    }
+
+    pub fn decode(msg_type: u8, payload: &[u8]) -> Result<Request, WireError> {
+        let mut d = Dec::new(payload);
+        let req = match msg_type {
+            msg::CONFIGURE => {
+                let wid = d.u64()?;
+                let seed = d.u64()?;
+                let algo = dec_algo(&mut d)?;
+                let task = dec_task(&mut d)?;
+                let eps_clamp = d.f32_bits()?;
+                let k = d.usize()?;
+                let n = d.usize()?;
+                let range = d.range()?;
+                let streamed = d.bool()?;
+                Request::Configure(WorkerSpec {
+                    wid,
+                    seed,
+                    algo,
+                    task,
+                    eps_clamp,
+                    k,
+                    n,
+                    range,
+                    streamed,
+                })
+            }
+            msg::CHUNK => Request::Chunk(dec_chunk(&mut d)?),
+            msg::SEAL => Request::Seal,
+            msg::STEP => {
+                let round = d.u64()?;
+                let n_extra = d.len_prefix(16)?;
+                let mut extra = Vec::with_capacity(n_extra);
+                for _ in 0..n_extra {
+                    extra.push(d.range()?);
+                }
+                let input = dec_input(&mut d)?;
+                Request::Step { round, input, extra }
+            }
+            msg::GET_RNG => Request::GetRng,
+            msg::SET_RNG => Request::SetRng(dec_rng(&mut d)?),
+            msg::SHUTDOWN => Request::Shutdown,
+            t => return Err(WireError::UnknownMsg(t)),
+        };
+        d.finish()?;
+        Ok(req)
+    }
+}
+
+impl Reply {
+    /// `(frame msg type, payload bytes)`.
+    pub fn encode(&self) -> (u8, Vec<u8>) {
+        let mut e = Enc::new();
+        let t = match self {
+            Reply::Configured { stat_dim } => {
+                e.u64(*stat_dim as u64);
+                msg::R_CONFIGURED
+            }
+            Reply::Ok => msg::R_OK,
+            Reply::Stepped { round, stats } => {
+                e.u64(*round);
+                enc_stats(&mut e, stats);
+                msg::R_STEPPED
+            }
+            Reply::Rng { state } => {
+                match state {
+                    None => e.u8(0),
+                    Some(s) => {
+                        e.u8(1);
+                        enc_rng(&mut e, s);
+                    }
+                }
+                msg::R_RNG
+            }
+            Reply::Error { msg: m } => {
+                e.str(m);
+                msg::R_ERROR
+            }
+        };
+        (t, e.into_bytes())
+    }
+
+    pub fn decode(msg_type: u8, payload: &[u8]) -> Result<Reply, WireError> {
+        let mut d = Dec::new(payload);
+        let reply = match msg_type {
+            msg::R_CONFIGURED => Reply::Configured { stat_dim: d.usize()? },
+            msg::R_OK => Reply::Ok,
+            msg::R_STEPPED => {
+                let round = d.u64()?;
+                Reply::Stepped { round, stats: dec_stats(&mut d)? }
+            }
+            msg::R_RNG => match d.u8()? {
+                0 => Reply::Rng { state: None },
+                1 => Reply::Rng { state: Some(dec_rng(&mut d)?) },
+                t => return Err(WireError::BadValue(format!("rng presence tag {t}"))),
+            },
+            msg::R_ERROR => Reply::Error { msg: d.str()? },
+            t => return Err(WireError::UnknownMsg(t)),
+        };
+        d.finish()?;
+        Ok(reply)
+    }
+}
+
+// --------------------------------------------------- dataset chunking
+
+/// Rows per shipped chunk when a full eager dataset crosses the wire.
+/// Small enough to keep frames a few MB at bench-scale k, large enough
+/// that per-frame overhead is noise.
+pub const SHIP_ROWS: usize = 8192;
+
+/// Slice `ds` into layout-preserving [`ChunkData`] blocks of at most
+/// [`SHIP_ROWS`] rows.
+pub fn dataset_chunks(ds: &Dataset) -> Vec<ChunkData> {
+    let mut out = Vec::new();
+    let mut start = 0usize;
+    while start < ds.n {
+        let end = (start + SHIP_ROWS).min(ds.n);
+        let labels = ds.labels[start..end].to_vec();
+        out.push(match &ds.features {
+            Features::Dense { data } => ChunkData::Dense {
+                start,
+                k: ds.k,
+                labels,
+                data: data[start * ds.k..end * ds.k].to_vec(),
+            },
+            Features::Sparse { indptr, indices, values } => {
+                let (a, b) = (indptr[start], indptr[end]);
+                ChunkData::Sparse {
+                    start,
+                    labels,
+                    indptr: indptr[start..=end].iter().map(|&p| p - a).collect(),
+                    indices: indices[a..b].to_vec(),
+                    values: values[a..b].to_vec(),
+                }
+            }
+        });
+        start = end;
+    }
+    out
+}
+
+/// The streamed path's bridge: a [`ParsedChunk`] (always CSR) as wire
+/// data.
+pub fn chunk_from_parsed(chunk: &ParsedChunk) -> ChunkData {
+    let (labels, indptr, indices, values) = chunk.raw_parts();
+    ChunkData::Sparse {
+        start: chunk.start(),
+        labels: labels.to_vec(),
+        indptr: indptr.to_vec(),
+        indices: indices.to_vec(),
+        values: values.to_vec(),
+    }
+}
+
+/// Host list of a [`Topology::Remote`] config, or `None`.
+pub fn remote_hosts(t: &Topology) -> Option<&[String]> {
+    match t {
+        Topology::Remote(hosts) => Some(hosts),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_req(req: &Request) -> Request {
+        let (t, p) = req.encode();
+        Request::decode(t, &p).unwrap()
+    }
+
+    #[test]
+    fn request_roundtrips() {
+        let spec = WorkerSpec {
+            wid: 3,
+            seed: 42,
+            algo: Algo::Mc,
+            task: Task::Multiclass(7),
+            eps_clamp: 1e-5,
+            k: 64,
+            n: 1000,
+            range: 250..500,
+            streamed: false,
+        };
+        match roundtrip_req(&Request::Configure(spec.clone())) {
+            Request::Configure(s) => assert_eq!(s, spec),
+            other => panic!("bad decode: {other:?}"),
+        }
+        let input = StepInput::Svr { w: Arc::new(vec![1.5, -2.25, f32::MIN_POSITIVE]), eps_ins: 0.1 };
+        match roundtrip_req(&Request::Step { round: 9, input, extra: vec![10..20, 30..40] }) {
+            Request::Step { round, input: StepInput::Svr { w, eps_ins }, extra } => {
+                assert_eq!(round, 9);
+                assert_eq!(*w, vec![1.5, -2.25, f32::MIN_POSITIVE]);
+                assert_eq!(eps_ins, 0.1);
+                assert_eq!(extra, vec![10..20, 30..40]);
+            }
+            other => panic!("bad decode: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn stats_bits_survive() {
+        let mut s = PartialStats::zeros(3);
+        s.sigma.data.copy_from_slice(&[1.0, -0.5, 2.5, 1e-30, f32::MAX, -0.0]);
+        s.mu = vec![0.1, 0.2, 0.3];
+        s.obj = std::f64::consts::PI;
+        s.aux = -7.25;
+        let (t, p) = Reply::Stepped { round: 4, stats: s.clone() }.encode();
+        match Reply::decode(t, &p).unwrap() {
+            Reply::Stepped { round, stats } => {
+                assert_eq!(round, 4);
+                let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                assert_eq!(bits(&stats.sigma.data), bits(&s.sigma.data));
+                assert_eq!(bits(&stats.mu), bits(&s.mu));
+                assert_eq!(stats.obj.to_bits(), s.obj.to_bits());
+                assert_eq!(stats.aux.to_bits(), s.aux.to_bits());
+            }
+            other => panic!("bad decode: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rng_state_roundtrips() {
+        let s = RngState { state: u128::MAX - 7, inc: 12345, spare: Some(-0.75) };
+        let (t, p) = Request::SetRng(s).encode();
+        match Request::decode(t, &p).unwrap() {
+            Request::SetRng(got) => assert_eq!(got, s),
+            other => panic!("bad decode: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn dataset_chunks_preserve_layout_and_rows() {
+        let ds = crate::data::synth::alpha_like(100, 8, 1);
+        let chunks = dataset_chunks(&ds);
+        assert_eq!(chunks.iter().map(ChunkData::rows).sum::<usize>(), ds.n);
+        // alpha_like is dense: the layout must survive the wire
+        assert!(chunks.iter().all(|c| matches!(c, ChunkData::Dense { .. })));
+    }
+}

@@ -1,0 +1,259 @@
+//! The `pemsvm worker --listen ADDR` daemon: hosts one shard's state in
+//! its own process and executes solver steps on behalf of a remote
+//! coordinator (DESIGN.md §15).
+//!
+//! One connection = one session. The coordinator drives the state
+//! machine Configure → \[Chunk…\] → Seal → {Step | GetRng | SetRng}* →
+//! Shutdown; the daemon replies to every request in order. Inside the
+//! session the daemon runs the *same* [`NativeWorker`] the threaded
+//! pool would build — same seed, worker id and shard rows — which is
+//! what makes a distributed run bit-identical to a local one.
+//!
+//! Failure semantics: a handler error (bad step, out-of-order chunk) is
+//! a *deterministic* fault and travels back as [`Reply::Error`] with the
+//! connection intact; a protocol violation (bad magic, CRC mismatch,
+//! truncation) means the stream can no longer be trusted, so the
+//! connection drops and all session state is discarded. The coordinator
+//! sees the drop as [`NetDown`](super::NetDown) and evicts the worker.
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::backend::native::NativeWorker;
+use crate::backend::WorkerBackend;
+use crate::data::stream::ParsedChunk;
+use crate::data::Dataset;
+
+use super::frame::{read_frame, write_frame, RecvError};
+use super::net_metrics;
+use super::tcp::{self, After};
+use super::wire::{ChunkData, Reply, Request, WorkerSpec};
+
+/// Serve worker sessions on `listener`. Serial: one session at a time —
+/// a daemon embodies one worker, and the coordinator holds one
+/// connection to it for the whole run. With `once` the daemon exits
+/// after its first session ends (tests and one-shot benches).
+pub fn run(listener: TcpListener, once: bool) -> Result<()> {
+    tcp::accept_loop(&listener, |stream, peer| {
+        crate::log_debug!("worker: session opened by {peer}");
+        match session(stream) {
+            Ok(()) => crate::log_debug!("worker: session with {peer} closed"),
+            Err(e) => crate::log_debug!("worker: session with {peer} aborted: {e:#}"),
+        }
+        if once {
+            After::Stop
+        } else {
+            After::Continue
+        }
+    });
+    Ok(())
+}
+
+/// Rebuilds an eagerly shipped dataset from its layout-preserving
+/// chunks, validating contiguity as they arrive.
+struct DatasetAssembler {
+    spec: WorkerSpec,
+    labels: Vec<f32>,
+    feats: Option<AsmFeatures>,
+}
+
+enum AsmFeatures {
+    Dense(Vec<f32>),
+    Sparse { indptr: Vec<usize>, indices: Vec<u32>, values: Vec<f32> },
+}
+
+impl DatasetAssembler {
+    fn new(spec: WorkerSpec) -> DatasetAssembler {
+        DatasetAssembler { spec, labels: Vec::new(), feats: None }
+    }
+
+    fn push(&mut self, chunk: ChunkData) -> Result<()> {
+        if chunk.start() != self.labels.len() {
+            bail!(
+                "dataset chunk out of order: starts at row {}, expected {}",
+                chunk.start(),
+                self.labels.len()
+            );
+        }
+        if self.labels.len() + chunk.rows() > self.spec.n {
+            bail!("dataset chunks overflow the configured {} rows", self.spec.n);
+        }
+        match chunk {
+            ChunkData::Dense { k, labels, data, .. } => {
+                if k != self.spec.k {
+                    bail!("dense chunk width {k} != configured k {}", self.spec.k);
+                }
+                let dst = match self.feats.get_or_insert_with(|| AsmFeatures::Dense(Vec::new())) {
+                    AsmFeatures::Dense(d) => d,
+                    AsmFeatures::Sparse { .. } => bail!("dense chunk after sparse chunks"),
+                };
+                dst.extend_from_slice(&data);
+                self.labels.extend_from_slice(&labels);
+            }
+            ChunkData::Sparse { labels, indptr, indices, values, .. } => {
+                let dst = self.feats.get_or_insert_with(|| AsmFeatures::Sparse {
+                    indptr: vec![0],
+                    indices: Vec::new(),
+                    values: Vec::new(),
+                });
+                let (dst_indptr, dst_indices, dst_values) = match dst {
+                    AsmFeatures::Sparse { indptr, indices, values } => (indptr, indices, values),
+                    AsmFeatures::Dense(_) => bail!("sparse chunk after dense chunks"),
+                };
+                // the chunk's indptr is chunk-local (starts at 0);
+                // rebase onto the rows already assembled
+                let base = dst_values.len();
+                if indptr.first() != Some(&0) || indptr.len() != labels.len() + 1 {
+                    bail!("sparse chunk indptr is malformed");
+                }
+                if indptr.last() != Some(&values.len()) {
+                    bail!("sparse chunk indptr does not cover its values");
+                }
+                dst_indptr.extend(indptr[1..].iter().map(|&p| p + base));
+                dst_indices.extend_from_slice(&indices);
+                dst_values.extend_from_slice(&values);
+                self.labels.extend_from_slice(&labels);
+            }
+        }
+        Ok(())
+    }
+
+    fn finish(self) -> Result<Dataset> {
+        if self.labels.len() != self.spec.n {
+            bail!("dataset sealed at {} rows, configured {}", self.labels.len(), self.spec.n);
+        }
+        let task = self.spec.task;
+        let k = self.spec.k;
+        Ok(match self.feats {
+            None | Some(AsmFeatures::Dense(_)) if self.spec.n == 0 => {
+                Dataset::dense(Vec::new(), Vec::new(), k, task)
+            }
+            Some(AsmFeatures::Dense(data)) => Dataset::dense(data, self.labels, k, task),
+            Some(AsmFeatures::Sparse { indptr, indices, values }) => {
+                Dataset::sparse(indptr, indices, values, self.labels, k, task)
+            }
+            None => bail!("dataset sealed without any chunks"),
+        })
+    }
+}
+
+/// Per-connection session state.
+struct Session {
+    spec: Option<WorkerSpec>,
+    /// eager mode: accumulates shipped chunks until Seal
+    asm: Option<DatasetAssembler>,
+    /// streamed mode: live from Configure; eager mode: live after Seal
+    worker: Option<NativeWorker>,
+}
+
+impl Session {
+    fn worker(&mut self) -> Result<&mut NativeWorker> {
+        self.worker.as_mut().context("worker not sealed yet")
+    }
+
+    fn handle(&mut self, req: Request) -> Result<Reply> {
+        match req {
+            Request::Configure(spec) => {
+                if self.spec.is_some() {
+                    bail!("session already configured");
+                }
+                let stat_dim = spec.k;
+                if spec.streamed {
+                    self.worker = Some(NativeWorker::new_streaming(
+                        spec.range.clone(),
+                        spec.k,
+                        spec.task,
+                        spec.algo,
+                        spec.eps_clamp,
+                        spec.seed,
+                        spec.wid,
+                    ));
+                } else {
+                    if spec.range.end > spec.n {
+                        bail!("shard range {:?} exceeds corpus rows {}", spec.range, spec.n);
+                    }
+                    self.asm = Some(DatasetAssembler::new(spec.clone()));
+                }
+                self.spec = Some(spec);
+                Ok(Reply::Configured { stat_dim })
+            }
+            Request::Chunk(chunk) => {
+                match (&mut self.asm, &mut self.worker) {
+                    (Some(asm), _) => asm.push(chunk)?,
+                    (None, Some(worker)) => {
+                        let ChunkData::Sparse { start, labels, indptr, indices, values } = chunk
+                        else {
+                            bail!("streamed chunks are CSR; got a dense chunk");
+                        };
+                        let parsed = ParsedChunk::from_parts(start, labels, indptr, indices, values)?;
+                        worker.ingest(&parsed)?;
+                    }
+                    (None, None) => bail!("chunk before configure"),
+                }
+                Ok(Reply::Ok)
+            }
+            Request::Seal => {
+                match (self.asm.take(), &mut self.worker) {
+                    (Some(asm), _) => {
+                        let spec = self.spec.as_ref().expect("asm implies spec");
+                        let ds = Arc::new(asm.finish()?);
+                        self.worker = Some(NativeWorker::new(
+                            ds,
+                            spec.range.clone(),
+                            spec.algo,
+                            spec.eps_clamp,
+                            spec.seed,
+                            spec.wid,
+                        ));
+                    }
+                    (None, Some(worker)) => worker.seal()?,
+                    (None, None) => bail!("seal before configure"),
+                }
+                Ok(Reply::Ok)
+            }
+            Request::Step { round, input, extra } => {
+                let stats = self.worker()?.step_ranges(&input, &extra)?;
+                Ok(Reply::Stepped { round, stats })
+            }
+            Request::GetRng => Ok(Reply::Rng { state: self.worker()?.rng_state() }),
+            Request::SetRng(state) => {
+                self.worker()?.set_rng_state(state)?;
+                Ok(Reply::Ok)
+            }
+            Request::Shutdown => Ok(Reply::Ok),
+        }
+    }
+}
+
+/// Run one coordinator session to completion. `Ok(())` covers both the
+/// explicit Shutdown and the peer simply closing; `Err` is a transport
+/// or protocol failure (the coordinator-side eviction path).
+fn session(mut stream: TcpStream) -> Result<()> {
+    tcp::configure(&stream, None)?;
+    let m = net_metrics();
+    let mut sess = Session { spec: None, asm: None, worker: None };
+    loop {
+        let (msg_type, payload, rx_bytes) = match read_frame(&mut stream) {
+            Ok(f) => f,
+            Err(RecvError::Closed) => return Ok(()),
+            Err(e) => return Err(e.into()),
+        };
+        m.bytes_rx.add(rx_bytes as u64);
+        // a decode failure is a protocol violation: the stream cannot be
+        // trusted past it, so the session drops rather than replying
+        let req = Request::decode(msg_type, &payload)?;
+        let shutdown = matches!(req, Request::Shutdown);
+        let reply = match sess.handle(req) {
+            Ok(r) => r,
+            Err(e) => Reply::Error { msg: format!("{e:#}") },
+        };
+        let (t, body) = reply.encode();
+        let tx = write_frame(&mut stream, t, &body)?;
+        m.bytes_tx.add(tx as u64);
+        if shutdown {
+            return Ok(());
+        }
+    }
+}

@@ -123,15 +123,18 @@ pub fn serve(
     let dispatcher_opts = opts.clone();
     let dispatcher = std::thread::spawn(move || dispatch_loop(row_rx, dispatcher_opts));
 
-    for stream in listener.incoming() {
-        let Ok(stream) = stream else { continue };
+    // the accept loop is shared with the `pemsvm worker` daemon
+    // (net::tcp); serving handles connections concurrently, so each one
+    // moves to its own thread and the loop continues immediately
+    crate::net::tcp::accept_loop(&listener, |stream, peer| {
         let registry = registry.clone();
         let default_model = default_model.clone();
         let row_tx = row_tx.clone();
         std::thread::spawn(move || {
-            let _ = handle_conn(stream, &registry, &default_model, &row_tx);
+            let _ = handle_conn(stream, &peer, &registry, &default_model, &row_tx);
         });
-    }
+        crate::net::tcp::After::Continue
+    });
     drop(row_tx);
     let _ = dispatcher.join();
     Ok(())
@@ -142,6 +145,7 @@ pub fn serve(
 /// clients don't stall scoring).
 fn handle_conn(
     stream: TcpStream,
+    peer: &str,
     registry: &Registry,
     default_model: &str,
     row_tx: &Sender<RowMsg>,
@@ -159,7 +163,7 @@ fn handle_conn(
     });
 
     server_metrics().connections.inc();
-    crate::log_debug!("serve: connection accepted (default model `{default_model}`)");
+    crate::log_debug!("serve: connection from {peer} (default model `{default_model}`)");
     let mut entry = registry.get(default_model);
     for (lineno, line) in reader.lines().enumerate() {
         let Ok(line) = line else { break };

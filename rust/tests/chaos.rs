@@ -95,7 +95,7 @@ fn recoverable_faults_leave_em_trajectories_bit_identical() {
         for topology in [Topology::Threads, Topology::Simulate] {
             let mut cfg = chaos_cfg("LIN-EM-CLS");
             cfg.task = task;
-            cfg.topology = topology;
+            cfg.topology = topology.clone();
             let (clean, cstats) = run_with_plan(&ds, &cfg, FaultPlan::none());
             assert_eq!(cstats.retries, 0);
             assert_eq!(cstats.evictions, 0);
@@ -132,7 +132,7 @@ fn worker_death_evicts_and_run_completes() {
     for topology in [Topology::Threads, Topology::Simulate] {
         let ds = dataset_for(TaskKind::Cls);
         let mut cfg = chaos_cfg("LIN-EM-CLS");
-        cfg.topology = topology;
+        cfg.topology = topology.clone();
         let (clean, _) = run_with_plan(&ds, &cfg, FaultPlan::none());
         let plan = FaultPlan::none().with(2, 2, FaultKind::PanicAt);
         let (out, stats) = run_with_plan(&ds, &cfg, plan);

@@ -1,0 +1,269 @@
+//! The distributed backend end to end (DESIGN.md §15): coordinator and
+//! `pemsvm worker` daemons in one process over loopback TCP, asserting
+//! the tentpole guarantees —
+//!
+//! 1. **Bit-identity.** A `--hosts` run over real sockets produces
+//!    bit-for-bit the weights and per-iteration history of the threaded
+//!    pool, for every task and both algorithms, dense and sparse, eager
+//!    and streamed: floats cross the wire as IEEE bit patterns, daemons
+//!    run the same `NativeWorker` seeds, and the tree reduce still
+//!    merges leader-side in the identical order.
+//! 2. **A dead connection is an eviction, not a crash.** A worker that
+//!    hangs up mid-step follows the retry→evict path; survivors adopt
+//!    its rows and the run finishes finite.
+//! 3. **Checkpoints cross process boundaries.** RNG streams captured
+//!    from remote daemons resume bit-identically on a *fresh* set of
+//!    daemons, and a `Remote` checkpoint refuses a `Threads` session.
+
+use std::net::TcpListener;
+use std::path::PathBuf;
+
+use pemsvm::config::{Algo, TaskKind, Topology, TrainConfig};
+use pemsvm::data::{libsvm, stream::StreamOpts, stream::StreamReader, synth, Dataset, Task};
+use pemsvm::engine::{CheckpointCfg, Cluster, TrainOutput, WarmStart};
+use pemsvm::model::Weights;
+use pemsvm::net::frame::{read_frame, write_frame};
+use pemsvm::net::wire::{Reply, Request};
+
+/// Bind loopback listeners and serve each on its own daemon thread,
+/// exactly what `pemsvm worker --listen 127.0.0.1:0` does. Binding
+/// happens here, before the spawn, so a coordinator may connect before
+/// the daemon thread reaches `accept`.
+fn spawn_workers(n: usize) -> Vec<String> {
+    let mut hosts = Vec::new();
+    for _ in 0..n {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        hosts.push(listener.local_addr().unwrap().to_string());
+        std::thread::spawn(move || {
+            let _ = pemsvm::net::worker::run(listener, false);
+        });
+    }
+    hosts
+}
+
+/// A daemon that answers the setup phase correctly and then hangs up on
+/// the first step request — a deterministic stand-in for `kill -9` at
+/// the worst moment (after it holds rows, before it contributed any
+/// statistics).
+fn spawn_saboteur() -> String {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let host = listener.local_addr().unwrap().to_string();
+    std::thread::spawn(move || {
+        let (mut s, _) = match listener.accept() {
+            Ok(c) => c,
+            Err(_) => return,
+        };
+        loop {
+            let Ok((t, payload, _)) = read_frame(&mut s) else { return };
+            let Ok(req) = Request::decode(t, &payload) else { return };
+            let reply = match req {
+                Request::Configure(spec) => Reply::Configured { stat_dim: spec.k },
+                Request::Chunk(_) | Request::Seal | Request::SetRng(_) => Reply::Ok,
+                Request::GetRng => Reply::Rng { state: None },
+                Request::Step { .. } => return, // the "crash"
+                Request::Shutdown => {
+                    let (t, b) = Reply::Ok.encode();
+                    let _ = write_frame(&mut s, t, &b);
+                    return;
+                }
+            };
+            let (t, b) = reply.encode();
+            if write_frame(&mut s, t, &b).is_err() {
+                return;
+            }
+        }
+    });
+    host
+}
+
+/// Fixed-round config so both topologies execute the same schedule.
+fn base_cfg() -> TrainConfig {
+    let mut cfg = TrainConfig::default().with_options("LIN-EM-CLS").unwrap();
+    cfg.workers = 2;
+    cfg.max_iters = 5;
+    cfg.tol = -1.0;
+    cfg.num_classes = 3;
+    cfg.burn_in = 1;
+    cfg
+}
+
+fn dataset_for(task: TaskKind) -> Dataset {
+    match task {
+        TaskKind::Cls => synth::alpha_like(300, 8, 5),
+        TaskKind::Svr => synth::year_like(300, 8, 5),
+        TaskKind::Mlt => synth::mnist_like(300, 8, 3, 5),
+    }
+}
+
+fn flat(w: &Weights) -> &[f32] {
+    match w {
+        Weights::Single(v) => v,
+        Weights::PerClass(m) => &m.data,
+    }
+}
+
+fn bits(w: &Weights) -> Vec<u32> {
+    flat(w).iter().map(|x| x.to_bits()).collect()
+}
+
+fn history_bits(out: &TrainOutput) -> Vec<(usize, u64, u64)> {
+    out.history
+        .iter()
+        .map(|h| (h.iter, h.objective.to_bits(), h.train_loss.to_bits()))
+        .collect()
+}
+
+fn run(ds: &Dataset, cfg: &TrainConfig) -> TrainOutput {
+    let mut cl = Cluster::new(ds, cfg).unwrap();
+    cl.run_session(cfg, None, WarmStart::Cold).unwrap()
+}
+
+fn ckpt_path(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("pemsvm_distributed_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(format!("{}_{}.ckpt", tag, std::process::id()))
+}
+
+/// Guarantee 1, the full matrix: every task × both algorithms, a
+/// 2-daemon `Remote` run against the `Threads` reference.
+#[test]
+fn remote_run_is_bit_identical_to_threads() {
+    for task in [TaskKind::Cls, TaskKind::Svr, TaskKind::Mlt] {
+        let ds = dataset_for(task);
+        for algo in [Algo::Em, Algo::Mc] {
+            let mut cfg = base_cfg();
+            cfg.task = task;
+            cfg.algo = algo;
+            let want = run(&ds, &cfg);
+
+            let mut rcfg = cfg.clone();
+            rcfg.topology = Topology::Remote(spawn_workers(cfg.workers));
+            let got = run(&ds, &rcfg);
+
+            let tag = format!("{task:?}/{algo:?}");
+            assert_eq!(bits(&got.weights), bits(&want.weights), "{tag}: weights drifted");
+            assert_eq!(history_bits(&got), history_bits(&want), "{tag}: history drifted");
+        }
+    }
+    // the run above moved real bytes through real sockets
+    let m = pemsvm::net::net_metrics();
+    assert!(m.bytes_tx.get() > 0, "no bytes counted as sent");
+    assert!(m.bytes_rx.get() > 0, "no bytes counted as received");
+}
+
+/// Sparse features ship as CSR windows (never densified), so the sparse
+/// compute path — whose f32 association order differs from the dense
+/// one — still matches bit-for-bit.
+#[test]
+fn remote_sparse_dataset_is_bit_identical() {
+    let ds = synth::dna_like(400, 40, 9);
+    let cfg = base_cfg();
+    let want = run(&ds, &cfg);
+
+    let mut rcfg = cfg.clone();
+    rcfg.topology = Topology::Remote(spawn_workers(cfg.workers));
+    let got = run(&ds, &rcfg);
+    assert_eq!(bits(&got.weights), bits(&want.weights));
+    assert_eq!(history_bits(&got), history_bits(&want));
+}
+
+/// Streamed ingestion over the wire: chunks forward to the daemons as
+/// they are parsed, no full dataset is ever shipped, and the result
+/// still matches the threaded streamed run bit-for-bit.
+#[test]
+fn streamed_ingestion_over_the_wire_is_bit_identical() {
+    let dir = std::env::temp_dir().join("pemsvm_distributed_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(format!("stream_{}.svm", std::process::id()));
+    libsvm::save(&synth::alpha_like(250, 6, 3), &path).unwrap();
+    let opts = StreamOpts { chunk_rows: 32, dims: None, class_off: None };
+
+    let cfg = base_cfg();
+    let reader = StreamReader::open(&path, Task::Binary, &opts).unwrap();
+    let mut cl = Cluster::from_stream(reader, &cfg).unwrap();
+    let want = cl.run_session(&cfg, None, WarmStart::Cold).unwrap();
+
+    let mut rcfg = cfg.clone();
+    rcfg.topology = Topology::Remote(spawn_workers(cfg.workers));
+    let reader = StreamReader::open(&path, Task::Binary, &opts).unwrap();
+    let mut rcl = Cluster::from_stream(reader, &rcfg).unwrap();
+    let got = rcl.run_session(&rcfg, None, WarmStart::Cold).unwrap();
+
+    assert_eq!(bits(&got.weights), bits(&want.weights));
+    assert_eq!(history_bits(&got), history_bits(&want));
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Guarantee 2: a connection that dies mid-step is retried (fail-fast on
+/// the dead socket), evicted, and its rows adopted — the session
+/// finishes every scheduled iteration with finite numbers, like the
+/// in-process chaos tests' `PanicAt`.
+#[test]
+fn dead_connection_evicts_and_run_completes() {
+    let ds = dataset_for(TaskKind::Cls);
+    let mut cfg = base_cfg();
+    cfg.workers = 3;
+    cfg.step_timeout_ms = 2000;
+    let mut hosts = spawn_workers(2);
+    hosts.push(spawn_saboteur());
+    cfg.topology = Topology::Remote(hosts);
+
+    let mut cl = Cluster::new(&ds, &cfg).unwrap();
+    let out = cl.run_session(&cfg, None, WarmStart::Cold).unwrap();
+    assert_eq!(cl.fault_counters().evictions, 1);
+    assert_eq!(cl.alive_workers(), 2);
+    assert_eq!(out.iterations, cfg.max_iters, "run cut short");
+    assert!(out.objective.is_finite());
+    assert!(out.history.iter().all(|h| h.objective.is_finite()));
+    assert!(flat(&out.weights).iter().all(|x| x.is_finite()));
+}
+
+/// Guarantee 3: the MC sampler's worker RNG streams round-trip through
+/// `GetRng`/`SetRng` frames, so a run interrupted after a checkpoint
+/// resumes on a *fresh* set of daemons bit-identically to the
+/// uninterrupted remote run.
+#[test]
+fn checkpoint_resumes_on_fresh_daemons_bit_identically() {
+    let ds = dataset_for(TaskKind::Cls);
+    let mut cfg = base_cfg();
+    cfg.algo = Algo::Mc;
+    cfg.max_iters = 8;
+    cfg.burn_in = 2;
+    cfg.topology = Topology::Remote(spawn_workers(cfg.workers));
+
+    let mut full = Cluster::new(&ds, &cfg).unwrap();
+    let want = full.run_session(&cfg, None, WarmStart::Cold).unwrap();
+    drop(full);
+
+    let path = ckpt_path("remote_mc_cls");
+    let mut half = cfg.clone();
+    half.max_iters = 4;
+    half.topology = Topology::Remote(spawn_workers(cfg.workers));
+    let ck = CheckpointCfg { every: 4, path: path.clone(), resume: false };
+    let mut interrupted = Cluster::new(&ds, &half).unwrap();
+    interrupted.run_session_checkpointed(&half, None, WarmStart::Cold, None, Some(&ck)).unwrap();
+    drop(interrupted);
+
+    // fresh daemons, fresh coordinator: only the checkpoint file crosses
+    let mut rcfg = cfg.clone();
+    rcfg.topology = Topology::Remote(spawn_workers(cfg.workers));
+    let ck = CheckpointCfg { every: 4, path: path.clone(), resume: true };
+    let mut fresh = Cluster::new(&ds, &rcfg).unwrap();
+    let got = fresh.run_session_checkpointed(&rcfg, None, WarmStart::Cold, None, Some(&ck)).unwrap();
+
+    assert_eq!(got.history.first().map(|h| h.iter), Some(4), "resume did not start at iter 4");
+    assert_eq!(history_bits(&got), history_bits(&want)[4..].to_vec(), "resumed tail diverged");
+    assert_eq!(bits(&got.weights), bits(&want.weights), "final weights not bit-identical");
+
+    // and the fingerprint pins the topology *kind*: a Remote checkpoint
+    // refuses to continue on a Threads cluster
+    let mut tcfg = cfg.clone();
+    tcfg.topology = Topology::Threads;
+    let ck = CheckpointCfg { every: 0, path: path.clone(), resume: true };
+    let mut wrong = Cluster::new(&ds, &tcfg).unwrap();
+    let err = wrong
+        .run_session_checkpointed(&tcfg, None, WarmStart::Cold, None, Some(&ck))
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("topology"), "{err:#}");
+    let _ = std::fs::remove_file(&path);
+}

@@ -1,0 +1,292 @@
+//! Wire-protocol robustness (DESIGN.md §15): hostile or corrupt bytes
+//! must come back as structured [`WireError`]s — never a panic, and
+//! never an allocation driven by an unvalidated length prefix. The
+//! fuzz loops are seeded xorshift, so a failure reproduces with
+//! `cargo test --test net_wire` alone.
+
+use std::sync::Arc;
+
+use pemsvm::backend::{RngState, StepInput};
+use pemsvm::net::frame::{
+    crc32, encode_frame, read_frame, RecvError, WireError, HEADER_LEN, MAX_PAYLOAD, VERSION,
+};
+use pemsvm::net::wire::{msg, Enc, Reply, Request};
+use pemsvm::solver::PartialStats;
+
+/// All message-type bytes both decoders accept.
+const REQUEST_TAGS: [u8; 7] = [
+    msg::CONFIGURE,
+    msg::CHUNK,
+    msg::SEAL,
+    msg::STEP,
+    msg::GET_RNG,
+    msg::SET_RNG,
+    msg::SHUTDOWN,
+];
+const REPLY_TAGS: [u8; 5] = [msg::R_CONFIGURED, msg::R_OK, msg::R_STEPPED, msg::R_RNG, msg::R_ERROR];
+
+/// A representative non-trivial request: a step frame exercises ranges,
+/// length-prefixed float vectors, and the tagged input union.
+fn sample_step() -> Request {
+    Request::Step {
+        round: 3,
+        input: StepInput::Svr { w: Arc::new(vec![0.5, -1.25, 3.0]), eps_ins: 0.1 },
+        extra: vec![10..20, 20..20],
+    }
+}
+
+fn sample_frame() -> Vec<u8> {
+    let (t, body) = sample_step().encode();
+    encode_frame(t, &body)
+}
+
+struct XorShift(u64);
+
+impl XorShift {
+    fn next(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.0 = x;
+        x
+    }
+}
+
+#[test]
+fn bad_magic_rejected() {
+    let mut frame = sample_frame();
+    frame[0] ^= 0xFF;
+    match read_frame(&mut &frame[..]) {
+        Err(RecvError::Protocol(WireError::BadMagic(_))) => {}
+        other => panic!("expected BadMagic, got {other:?}"),
+    }
+}
+
+#[test]
+fn version_skew_rejected() {
+    let mut frame = sample_frame();
+    frame[4] = VERSION + 1;
+    match read_frame(&mut &frame[..]) {
+        Err(RecvError::Protocol(WireError::VersionSkew { got, want })) => {
+            assert_eq!((got, want), (VERSION + 1, VERSION));
+        }
+        other => panic!("expected VersionSkew, got {other:?}"),
+    }
+}
+
+#[test]
+fn nonzero_reserved_rejected() {
+    let mut frame = sample_frame();
+    frame[6] = 0x01;
+    assert!(matches!(
+        read_frame(&mut &frame[..]),
+        Err(RecvError::Protocol(WireError::BadReserved(1)))
+    ));
+}
+
+/// A length prefix past `MAX_PAYLOAD` must fail at header validation —
+/// *before* any payload read or allocation. The reader here holds only
+/// the 16 header bytes, so an implementation that tried to allocate or
+/// read the claimed 4 GiB would surface `Truncated`/`Io`, not
+/// `Oversized`.
+#[test]
+fn oversized_length_prefix_fails_before_allocation() {
+    let mut frame = sample_frame();
+    frame[8..12].copy_from_slice(&u32::MAX.to_le_bytes());
+    frame.truncate(HEADER_LEN);
+    match read_frame(&mut &frame[..]) {
+        Err(RecvError::Protocol(WireError::Oversized { len, max })) => {
+            assert_eq!(len, u32::MAX as u64);
+            assert_eq!(max, MAX_PAYLOAD as u64);
+        }
+        other => panic!("expected Oversized, got {other:?}"),
+    }
+}
+
+#[test]
+fn crc_mismatch_detected_for_any_payload_corruption() {
+    let clean = sample_frame();
+    for i in HEADER_LEN..clean.len() {
+        let mut frame = clean.clone();
+        frame[i] ^= 0x10;
+        match read_frame(&mut &frame[..]) {
+            Err(RecvError::Protocol(WireError::CrcMismatch { .. })) => {}
+            other => panic!("flipping payload byte {i}: expected CrcMismatch, got {other:?}"),
+        }
+    }
+}
+
+/// EOF on the frame boundary is a clean close; EOF anywhere inside a
+/// frame is a structured truncation error. Every cut point is checked.
+#[test]
+fn truncation_at_every_byte_is_structured() {
+    let frame = sample_frame();
+    assert!(matches!(read_frame(&mut &frame[..0]), Err(RecvError::Closed)));
+    for cut in 1..frame.len() {
+        match read_frame(&mut &frame[..cut]) {
+            Err(RecvError::Protocol(WireError::Truncated { .. })) => {}
+            other => panic!("cut at {cut}: expected Truncated, got {other:?}"),
+        }
+    }
+    assert!(read_frame(&mut &frame[..]).is_ok());
+}
+
+#[test]
+fn unknown_message_types_rejected_by_both_decoders() {
+    for t in [0x00, 0x08, 0x42, 0x80, 0x86, 0xFF] {
+        assert!(
+            matches!(Request::decode(t, &[]), Err(WireError::UnknownMsg(got)) if got == t),
+            "request tag {t:#04x}"
+        );
+    }
+    // a request tag handed to the reply decoder is just as unknown
+    for t in REQUEST_TAGS {
+        assert!(matches!(Reply::decode(t, &[]), Err(WireError::UnknownMsg(_))));
+    }
+    for t in REPLY_TAGS {
+        assert!(matches!(Request::decode(t, &[]), Err(WireError::UnknownMsg(_))));
+    }
+}
+
+#[test]
+fn trailing_bytes_rejected() {
+    for req in [sample_step(), Request::Seal, Request::GetRng] {
+        let (t, mut body) = req.encode();
+        body.push(0x00);
+        assert!(
+            matches!(Request::decode(t, &body), Err(WireError::BadValue(_))),
+            "{req:?}: trailing byte accepted"
+        );
+    }
+    let (t, mut body) = Reply::Stepped { round: 1, stats: PartialStats::zeros(4) }.encode();
+    body.extend_from_slice(&[1, 2, 3]);
+    assert!(matches!(Reply::decode(t, &body), Err(WireError::BadValue(_))));
+}
+
+/// Every strict prefix of every valid message body decodes to an error,
+/// not a panic — the cursor checks remaining bytes before every read.
+#[test]
+fn truncated_message_bodies_never_panic() {
+    let messages = [
+        sample_step(),
+        Request::SetRng(RngState { state: 7, inc: 11, spare: Some(0.25) }),
+        Request::Step {
+            round: 9,
+            input: StepInput::Binary { w: Arc::new(vec![1.0; 8]) },
+            extra: vec![],
+        },
+    ];
+    for req in messages {
+        let (t, body) = req.encode();
+        for cut in 0..body.len() {
+            let r = Request::decode(t, &body[..cut]);
+            assert!(r.is_err(), "{req:?} cut at {cut}: decoded {r:?} from a prefix");
+        }
+        assert!(Request::decode(t, &body).is_ok());
+    }
+}
+
+/// A hostile vector-length claim (here: 2^60 floats in a step input)
+/// must be rejected against the bytes actually present, before any
+/// `Vec` reservation.
+#[test]
+fn hostile_vector_length_rejected_without_allocation() {
+    // Step body layout: round u64, extra count u64, input tag u8, then
+    // Binary's weight vector length prefix
+    let mut e = Enc::new();
+    e.u64(1); // round
+    e.u64(0); // no adoption ranges
+    e.u8(0); // input tag: Binary
+    e.u64(1 << 60); // claimed f32 count (would be 2^62 bytes)
+    let body = e.into_bytes();
+    match Request::decode(msg::STEP, &body) {
+        Err(WireError::Truncated { need, have }) => {
+            assert_eq!(need, (1usize << 60) * 4);
+            assert_eq!(have, 0);
+        }
+        other => panic!("expected Truncated, got {other:?}"),
+    }
+    // and a count whose byte size overflows usize entirely
+    let mut e = Enc::new();
+    e.u64(1);
+    e.u64(0);
+    e.u8(0);
+    e.u64(u64::MAX);
+    assert!(matches!(Request::decode(msg::STEP, &e.into_bytes()), Err(WireError::BadValue(_))));
+}
+
+#[test]
+fn inverted_adoption_range_rejected() {
+    let mut e = Enc::new();
+    e.u64(1); // round
+    e.u64(1); // one adoption range
+    e.u64(20); // start
+    e.u64(10); // end < start
+    assert!(matches!(Request::decode(msg::STEP, &e.into_bytes()), Err(WireError::BadValue(_))));
+}
+
+/// Seeded fuzz: random buffers and random mutations of valid bodies,
+/// through both decoders under every known tag. The only contract is
+/// totality — `Ok` or a structured `Err`, never a panic or abort.
+#[test]
+fn fuzz_decoders_are_total() {
+    let mut rng = XorShift(0x9E37_79B9_7F4A_7C15);
+    let mut buf = Vec::new();
+    for round in 0..2000usize {
+        let len = (rng.next() % 200) as usize;
+        buf.clear();
+        for _ in 0..len {
+            buf.push(rng.next() as u8);
+        }
+        let tag_pool = [REQUEST_TAGS[round % 7], REPLY_TAGS[round % 5], rng.next() as u8];
+        for t in tag_pool {
+            let _ = Request::decode(t, &buf);
+            let _ = Reply::decode(t, &buf);
+        }
+    }
+    // mutate valid bodies: single byte flips at random offsets
+    let valid: Vec<(u8, Vec<u8>)> = vec![
+        sample_step().encode(),
+        Request::SetRng(RngState { state: u128::MAX - 1, inc: 3, spare: None }).encode(),
+        Reply::Stepped { round: 2, stats: PartialStats::zeros(6) }.encode(),
+        Reply::Error { msg: "boom".into() }.encode(),
+    ];
+    for _ in 0..2000 {
+        let (t, body) = &valid[(rng.next() % valid.len() as u64) as usize];
+        let mut mutated = body.clone();
+        if !mutated.is_empty() {
+            let at = (rng.next() % mutated.len() as u64) as usize;
+            mutated[at] ^= (rng.next() % 255 + 1) as u8;
+        }
+        let _ = Request::decode(*t, &mutated);
+        let _ = Reply::decode(*t, &mutated);
+    }
+}
+
+/// Same totality contract one layer down: random bytes through the
+/// frame reader.
+#[test]
+fn fuzz_frame_reader_is_total() {
+    let mut rng = XorShift(0xDEAD_BEEF_CAFE_F00D);
+    let clean = sample_frame();
+    for _ in 0..2000 {
+        let len = (rng.next() % 64) as usize;
+        let mut buf: Vec<u8> = (0..len).map(|_| rng.next() as u8).collect();
+        let _ = read_frame(&mut &buf[..]);
+        // and corrupted real frames
+        buf = clean.clone();
+        let at = (rng.next() % buf.len() as u64) as usize;
+        buf[at] ^= (rng.next() % 255 + 1) as u8;
+        let _ = read_frame(&mut &buf[..]);
+    }
+}
+
+/// The CRC actually covers the payload bytes the header claims.
+#[test]
+fn crc_binds_header_to_payload() {
+    let (t, body) = sample_step().encode();
+    let frame = encode_frame(t, &body);
+    let stored = u32::from_le_bytes([frame[12], frame[13], frame[14], frame[15]]);
+    assert_eq!(stored, crc32(&body));
+}

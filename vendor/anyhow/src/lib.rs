@@ -1,26 +1,52 @@
 //! Offline stand-in for the `anyhow` crate, implementing exactly the
 //! subset this workspace uses: [`Error`], [`Result`], the [`anyhow!`] /
-//! [`bail!`] / [`ensure!`] macros, and the [`Context`] extension trait
-//! for `Result` and `Option`.
+//! [`bail!`] / [`ensure!`] macros, the [`Context`] extension trait for
+//! `Result` and `Option`, and typed recovery via [`Error::new`] +
+//! [`Error::downcast_ref`].
 //!
 //! The offline registry cannot be assumed to carry the real `anyhow`,
 //! and the crate's API surface used here is small, so a path dependency
 //! keeps the default build hermetic. Semantics match the real crate for
 //! this subset: `{e}` prints the outermost message, `{e:#}` prints the
-//! whole context chain joined by `": "`, and any
-//! `std::error::Error + Send + Sync + 'static` converts via `?`.
+//! whole context chain joined by `": "`, any
+//! `std::error::Error + Send + Sync + 'static` converts via `?` keeping
+//! its concrete type recoverable through `downcast_ref`, and context
+//! wrapping preserves that payload.
 
+use std::any::Any;
 use std::fmt::{self, Debug, Display};
 
-/// A string-backed error with a context chain (outermost first).
+/// An error with a context chain (outermost first) and, when built from
+/// a concrete `std::error::Error` value, that value as a recoverable
+/// payload.
 pub struct Error {
     chain: Vec<String>,
+    payload: Option<Box<dyn Any + Send + Sync>>,
 }
 
 impl Error {
     /// Create an error from a printable message.
     pub fn msg<M: Display>(message: M) -> Error {
-        Error { chain: vec![message.to_string()] }
+        Error { chain: vec![message.to_string()], payload: None }
+    }
+
+    /// Create an error from a concrete error value, keeping the value
+    /// itself recoverable via [`downcast_ref`](Error::downcast_ref).
+    pub fn new<E: std::error::Error + Send + Sync + 'static>(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain, payload: Some(Box::new(e)) }
+    }
+
+    /// The underlying concrete error, if this `Error` was built from a
+    /// value of type `E` (via [`Error::new`] or the `?` conversion).
+    /// Context wrapping does not erase it.
+    pub fn downcast_ref<E: 'static>(&self) -> Option<&E> {
+        self.payload.as_ref()?.downcast_ref::<E>()
     }
 
     /// Wrap with an outer context message.
@@ -54,13 +80,7 @@ impl Debug for Error {
 // what keeps this blanket conversion coherent with `From<T> for T`.
 impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
     fn from(e: E) -> Error {
-        let mut chain = vec![e.to_string()];
-        let mut src = e.source();
-        while let Some(s) = src {
-            chain.push(s.to_string());
-            src = s.source();
-        }
-        Error { chain }
+        Error::new(e)
     }
 }
 
@@ -171,5 +191,22 @@ mod tests {
     fn with_context_lazy() {
         let r: Result<(), Error> = Err(io_err()).with_context(|| format!("attempt {}", 2));
         assert_eq!(format!("{:#}", r.unwrap_err()), "attempt 2: gone");
+    }
+
+    #[test]
+    fn downcast_ref_recovers_concrete_type() {
+        let e = Error::new(io_err());
+        assert_eq!(e.downcast_ref::<std::io::Error>().unwrap().kind(), std::io::ErrorKind::NotFound);
+        assert!(e.downcast_ref::<std::fmt::Error>().is_none());
+        // context wrapping keeps the payload; plain messages have none
+        let wrapped = Error::new(io_err()).context("outer");
+        assert!(wrapped.downcast_ref::<std::io::Error>().is_some());
+        assert!(Error::msg("plain").downcast_ref::<std::io::Error>().is_none());
+        // the ? conversion goes through Error::new, so it downcasts too
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(f().unwrap_err().downcast_ref::<std::io::Error>().is_some());
     }
 }
